@@ -1,0 +1,97 @@
+"""Scalar-vs-vectorized ablation (paper Tables 10/13) and the host-vs-jit
+comparison (the paper's Java-vs-C Appendix C analogue, Table 14).
+
+The numpy path plays the paper's SIMD role; repro.core.scalar is the
+deactivated-optimizations build.  Ratios, not absolute cycles, are the
+reproduction target.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import RoaringBitmap
+from repro.core import containers as C
+from repro.core import scalar as S
+
+
+def _pair_containers(rng, kind: str, n1: int, n2: int):
+    a = np.sort(rng.choice(65536, n1, replace=False)).astype(np.uint16)
+    b = np.sort(rng.choice(65536, n2, replace=False)).astype(np.uint16)
+    if kind == "bitset":
+        return (C.positions_to_bitset(a), C.positions_to_bitset(b))
+    return a, b
+
+
+def table10_simd_ablation(rows, reps=20):
+    rng = np.random.default_rng(5)
+    wa, wb = _pair_containers(rng, "bitset", 20000, 24000)
+    aa, ab = _pair_containers(rng, "array", 3000, 3500)
+
+    cases = {
+        "bitset_and_card": (
+            lambda: C.popcount_words(wa & wb),
+            lambda: S.bitset_op(wa, wb, "and")[1]),
+        "bitset_popcount": (
+            lambda: C.popcount_words(wa),
+            lambda: S.bitset_popcount(wa)),
+        "array_intersect": (
+            lambda: C.array_intersect(aa, ab),
+            lambda: S.intersect(aa, ab)),
+        "array_union": (
+            lambda: C.array_union(aa, ab),
+            lambda: S.union(aa, ab)),
+        "array_difference": (
+            lambda: C.array_difference(aa, ab),
+            lambda: S.difference(aa, ab)),
+        "array_symmetric_difference": (
+            lambda: C.array_symmetric_difference(aa, ab),
+            lambda: S.symmetric_difference(aa, ab)),
+        "bitset_to_array": (
+            lambda: C.bitset_to_positions(wa),
+            lambda: S.bitset_to_positions(wa)),
+        "bitset_set_many": (
+            lambda: C.bitset_set_many(wa.copy(), ab),
+            lambda: S.bitset_set_many(wa.copy(), ab)),
+    }
+    for name, (vec, scalar) in cases.items():
+        tv = common.best_of(lambda: [vec() for _ in range(reps)])
+        ts = common.best_of(lambda: [scalar() for _ in range(2)]) * reps / 2
+        ratio = ts / tv if tv > 0 else float("inf")
+        common.emit(rows, "table10", "simd_ablation", name, "synthetic",
+                    tv * 1e6 / reps, f"scalar_over_vectorized={ratio:.1f}")
+
+
+def table14_host_vs_device(rows, reps=5):
+    """Host-numpy roaring vs jit'd RoaringTensor device path (the paper's
+    'two implementations of the same structure' comparison)."""
+    import jax
+    from repro.core.tensor import RoaringTensor
+    rng = np.random.default_rng(6)
+    n_bm = 16
+    host_a = [RoaringBitmap.from_values(
+        rng.integers(0, 1 << 19, 40_000).astype(np.uint32))
+        for _ in range(n_bm)]
+    host_b = [RoaringBitmap.from_values(
+        rng.integers(0, 1 << 19, 40_000).astype(np.uint32))
+        for _ in range(n_bm)]
+    ta = RoaringTensor.from_bitmaps(host_a, capacity=10)
+    tb = RoaringTensor.from_bitmaps(host_b, capacity=10)
+    f = jax.jit(lambda x, y: x.and_card(y))
+    f(ta, tb).block_until_ready()          # compile outside timing
+
+    def host():
+        for x, y in zip(host_a, host_b):
+            x.and_card(y)
+
+    def device():
+        f(ta, tb).block_until_ready()
+
+    th = common.best_of(lambda: [host() for _ in range(reps)])
+    td = common.best_of(lambda: [device() for _ in range(reps)])
+    common.emit(rows, "table14", "intersection_count", "host_numpy",
+                "synthetic", th * 1e6 / (reps * n_bm), "impl=host")
+    common.emit(rows, "table14", "intersection_count", "device_jit",
+                "synthetic", td * 1e6 / (reps * n_bm),
+                f"impl=jit;host_over_device={th / td:.2f}")

@@ -1,0 +1,325 @@
+"""Competitor set representations (paper section 5.1).
+
+  * BitsetSet     -- uncompressed bitset (the paper's cbitset)
+  * SortedArraySet -- std::vector analogue (sorted uint32 + binary search)
+  * HashSet       -- std::unordered_set analogue (python set; memory uses
+                     the paper's 195-bit/value node model, sec 5.4)
+  * EWAH32 / WAH31 -- word-aligned RLE formats.  Ops and membership are
+                     implemented *vectorized but linear-pass*, matching the
+                     formats' algorithmic profile (no random access, no
+                     skipping); Concise is WAH-compatible here (the paper
+                     treats them as one code template within ~20 %).
+
+BitMagic is a closed-source C++ competitor and is discussed, not
+implemented (DESIGN.md sec 7).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+# ---------------------------------------------------------------- bitset
+class BitsetSet:
+    name = "bitset"
+
+    def __init__(self, values: np.ndarray, universe: int):
+        self.universe = universe
+        self.words = np.zeros((universe + 63) // 64, np.uint64)
+        np.bitwise_or.at(self.words, values >> 6,
+                         np.uint64(1) << (values.astype(np.uint64)
+                                          & np.uint64(63)))
+
+    @classmethod
+    def _wrap(cls, words, universe):
+        out = cls.__new__(cls)
+        out.words = words
+        out.universe = universe
+        return out
+
+    def __and__(self, o):
+        return self._wrap(self.words & o.words, self.universe)
+
+    def __or__(self, o):
+        return self._wrap(self.words | o.words, self.universe)
+
+    def __xor__(self, o):
+        return self._wrap(self.words ^ o.words, self.universe)
+
+    def andnot(self, o):
+        return self._wrap(self.words & ~o.words, self.universe)
+
+    def and_card(self, o):
+        return int(np.bitwise_count(self.words & o.words).sum())
+
+    def cardinality(self):
+        return int(np.bitwise_count(self.words).sum())
+
+    def contains_many(self, q):
+        return ((self.words[q >> 6] >> (q.astype(np.uint64) & np.uint64(63)))
+                & np.uint64(1)).astype(bool)
+
+    def to_array(self):
+        return np.flatnonzero(
+            np.unpackbits(self.words.view(np.uint8), bitorder="little"))
+
+    def memory_bytes(self):
+        return self.words.nbytes
+
+
+# ----------------------------------------------------------- sorted array
+class SortedArraySet:
+    name = "vector"
+
+    def __init__(self, values: np.ndarray, universe: int = 0):
+        self.values = np.unique(values).astype(np.uint32)
+
+    @classmethod
+    def _wrap(cls, v):
+        out = cls.__new__(cls)
+        out.values = v
+        return out
+
+    def __and__(self, o):
+        return self._wrap(np.intersect1d(self.values, o.values,
+                                         assume_unique=True))
+
+    def __or__(self, o):
+        return self._wrap(np.union1d(self.values, o.values))
+
+    def __xor__(self, o):
+        return self._wrap(np.setxor1d(self.values, o.values,
+                                      assume_unique=True))
+
+    def andnot(self, o):
+        return self._wrap(np.setdiff1d(self.values, o.values,
+                                       assume_unique=True))
+
+    def and_card(self, o):
+        return int(np.intersect1d(self.values, o.values,
+                                  assume_unique=True).size)
+
+    def cardinality(self):
+        return int(self.values.size)
+
+    def contains_many(self, q):
+        idx = np.searchsorted(self.values, q)
+        idx[idx == self.values.size] = max(self.values.size - 1, 0)
+        return self.values[idx] == q if self.values.size else \
+            np.zeros(q.size, bool)
+
+    def to_array(self):
+        return self.values
+
+    def memory_bytes(self):
+        return self.values.nbytes
+
+
+# ---------------------------------------------------------------- hashset
+class HashSet:
+    name = "hashset"
+
+    def __init__(self, values: np.ndarray, universe: int = 0):
+        self.s = set(values.tolist())
+
+    @classmethod
+    def _wrap(cls, s):
+        out = cls.__new__(cls)
+        out.s = s
+        return out
+
+    def __and__(self, o):
+        return self._wrap(self.s & o.s)
+
+    def __or__(self, o):
+        return self._wrap(self.s | o.s)
+
+    def __xor__(self, o):
+        return self._wrap(self.s ^ o.s)
+
+    def andnot(self, o):
+        return self._wrap(self.s - o.s)
+
+    def and_card(self, o):
+        small, big = (self.s, o.s) if len(self.s) < len(o.s) else (o.s, self.s)
+        return sum(1 for v in small if v in big)
+
+    def cardinality(self):
+        return len(self.s)
+
+    def contains_many(self, q):
+        return np.fromiter((int(v) in self.s for v in q), bool, q.size)
+
+    def to_array(self):
+        return np.fromiter(self.s, np.uint32, len(self.s))
+
+    def memory_bytes(self):
+        # paper sec 5.4: 195 bits/value measured for std::unordered_set
+        return int(len(self.s) * 195 / 8)
+
+
+# --------------------------------------------------- word-aligned RLE base
+class _RLEBase:
+    """Run-length encoded bitmap over W-bit words.  Storage: two arrays,
+    `kinds` (0 = fill-zero run, 1 = fill-one run, 2 = literal) and `payload`
+    (run length in words, or the literal word).  Linear-pass semantics."""
+    W = 32
+
+    def __init__(self, values: np.ndarray, universe: int):
+        self.universe = universe
+        w = self.W
+        n_words = (universe + w - 1) // w
+        bits = np.zeros(n_words * w, np.uint8)
+        bits[values] = 1
+        words = (bits.reshape(n_words, w)
+                 << np.arange(w, dtype=np.uint64)).sum(axis=1,
+                                                       dtype=np.uint64)
+        full = np.uint64((1 << w) - 1)
+        is_fill0 = words == 0
+        is_fill1 = words == full
+        kind = np.where(is_fill0, 0, np.where(is_fill1, 1, 2)).astype(np.int8)
+        # group consecutive identical fills
+        change = np.flatnonzero(np.concatenate((
+            [True], (kind[1:] != kind[:-1]) | (kind[1:] == 2))))
+        counts = np.diff(np.concatenate((change, [n_words])))
+        self.kinds = kind[change]
+        self.payload = np.where(self.kinds == 2, words[change],
+                                counts.astype(np.uint64))
+        self.n_words = n_words
+
+    @classmethod
+    def _from_words(cls, words, universe):
+        out = cls.__new__(cls)
+        out.universe = universe
+        w = cls.W
+        full = np.uint64((1 << w) - 1)
+        n_words = words.size
+        kind = np.where(words == 0, 0,
+                        np.where(words == full, 1, 2)).astype(np.int8)
+        change = np.flatnonzero(np.concatenate((
+            [True], (kind[1:] != kind[:-1]) | (kind[1:] == 2))))
+        counts = np.diff(np.concatenate((change, [n_words])))
+        out.kinds = kind[change]
+        out.payload = np.where(out.kinds == 2, words[change],
+                               counts.astype(np.uint64))
+        out.n_words = n_words
+        return out
+
+    # linear decompression -- the fundamental cost of RLE formats
+    def _words(self):
+        reps = np.where(self.kinds == 2, 1, self.payload).astype(np.int64)
+        vals = np.where(self.kinds == 1,
+                        np.uint64((1 << self.W) - 1),
+                        np.where(self.kinds == 0, np.uint64(0),
+                                 self.payload))
+        return np.repeat(vals, reps)
+
+    def _binop(self, o, f):
+        return type(self)._from_words(f(self._words(), o._words()),
+                                      self.universe)
+
+    def __and__(self, o):
+        return self._binop(o, np.bitwise_and)
+
+    def __or__(self, o):
+        return self._binop(o, np.bitwise_or)
+
+    def __xor__(self, o):
+        return self._binop(o, np.bitwise_xor)
+
+    def andnot(self, o):
+        return self._binop(o, lambda a, b: a & ~b)
+
+    def and_card(self, o):
+        return int(np.bitwise_count(self._words() & o._words()).sum())
+
+    def cardinality(self):
+        lit = np.bitwise_count(self.payload[self.kinds == 2]).sum()
+        fill = (self.payload[self.kinds == 1]).sum() * self.W
+        return int(lit + fill)
+
+    def contains_many(self, q):
+        # linear pass: rebuild word extents each query batch (no index!)
+        reps = np.where(self.kinds == 2, 1, self.payload).astype(np.int64)
+        starts = np.concatenate(([0], np.cumsum(reps)))[:-1]
+        word_idx = (q // self.W).astype(np.int64)
+        seg = np.searchsorted(starts, word_idx, side="right") - 1
+        k = self.kinds[seg]
+        out = k == 1
+        lit = k == 2
+        if lit.any():
+            w = self.payload[seg[lit]]
+            out = out.copy()
+            out[lit] = ((w >> (q[lit].astype(np.uint64)
+                               % np.uint64(self.W)))
+                        & np.uint64(1)).astype(bool)
+        return out
+
+    def to_array(self):
+        words = self._words()
+        bits = (words[:, None] >> np.arange(self.W, dtype=np.uint64)) \
+            & np.uint64(1)
+        return np.flatnonzero(bits.reshape(-1))
+
+    def memory_bytes(self):
+        # marker word + payload per segment, W-bit words
+        return int(self.kinds.size * (self.W // 8)
+                   + np.count_nonzero(self.kinds == 2) * 0)
+
+
+class EWAH32(_RLEBase):
+    name = "ewah32"
+    W = 32
+
+
+class WAH31(_RLEBase):
+    name = "wah31(concise-compat)"
+    W = 31
+
+    def memory_bytes(self):
+        return int(self.kinds.size * 4)
+
+
+# ------------------------------------------------------------- roaring
+class RoaringSet:
+    name = "roaring"
+
+    def __init__(self, values: np.ndarray, universe: int = 0):
+        from repro.core import RoaringBitmap
+        self.bm = RoaringBitmap.from_values(values).run_optimize()
+
+    @classmethod
+    def _wrap(cls, bm):
+        out = cls.__new__(cls)
+        out.bm = bm
+        return out
+
+    def __and__(self, o):
+        return self._wrap(self.bm & o.bm)
+
+    def __or__(self, o):
+        return self._wrap(self.bm | o.bm)
+
+    def __xor__(self, o):
+        return self._wrap(self.bm ^ o.bm)
+
+    def andnot(self, o):
+        return self._wrap(self.bm - o.bm)
+
+    def and_card(self, o):
+        return self.bm.and_card(o.bm)
+
+    def cardinality(self):
+        return self.bm.cardinality
+
+    def contains_many(self, q):
+        return self.bm.contains_many(q)
+
+    def to_array(self):
+        return self.bm.to_array()
+
+    def memory_bytes(self):
+        return self.bm.memory_bytes()
+
+
+STRUCTURES = [BitsetSet, SortedArraySet, HashSet, RoaringSet, EWAH32, WAH31]

@@ -1,0 +1,61 @@
+"""Benchmark harness helpers: datasets, timing, CSV output."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.baselines import STRUCTURES
+from repro.data.synth import TABLE3, generate_dataset
+
+CPU_GHZ = 3.4   # the paper's Skylake i7-6700; ns -> "cycles" conversion
+
+_CACHE: dict = {}
+
+
+def datasets(n_sets: int = 50, seed: int = 0):
+    """Table 3 twin datasets: {name: (list of value arrays, universe)}."""
+    key = (n_sets, seed)
+    if key not in _CACHE:
+        out = {}
+        for spec in TABLE3:
+            import dataclasses
+            s = dataclasses.replace(spec, n_sets=n_sets)
+            out[spec.name] = (generate_dataset(s, seed), spec.universe)
+        _CACHE[key] = out
+    return _CACHE[key]
+
+
+def build_all(values_list, universe):
+    """Build every structure over the dataset; returns {name: [sets]}."""
+    out = {}
+    for cls in STRUCTURES:
+        out[cls.name] = [cls(v, universe) for v in values_list]
+    return out
+
+
+def best_of(fn, repeats: int = 3) -> float:
+    """Best wall-clock seconds of `repeats` runs."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def emit(rows: list, table: str, bench: str, structure: str, dataset: str,
+         us_per_call: float, derived: str):
+    """One CSV row: name,us_per_call,derived."""
+    name = f"{table}/{bench}/{structure}/{dataset}"
+    rows.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def ns_per_value(seconds: float, n_values: int) -> float:
+    return seconds * 1e9 / max(n_values, 1)
+
+
+def cycles_per_value(seconds: float, n_values: int) -> float:
+    return ns_per_value(seconds, n_values) * CPU_GHZ

@@ -1,0 +1,49 @@
+"""Per-kernel benchmark: interpret-mode correctness sweep + roofline-model
+numbers for the TPU target (wall-clock in interpret mode is meaningless for
+TPU perf, so `derived` reports the analytic VMEM/VPU utilization instead --
+per the dry-run methodology)."""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.kernels import ref
+from repro.kernels.bitset_ops import bitset_op
+from repro.kernels.harley_seal import popcount
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+
+def kernel_sweeps(rows):
+    rng = np.random.default_rng(9)
+    # harley-seal popcount: logical ops per container = 75 CSA-tree ops on
+    # 128-lane groups + 5 SWAR popcounts; HBM traffic = 8 kB read + 4 B out
+    for n in (64, 512):
+        w = rng.integers(0, 1 << 32, (n, 2048), dtype=np.uint32)
+        want = np.bitwise_count(w).sum(axis=1)
+        got = np.asarray(popcount(jnp.asarray(w), interpret=True))
+        ok = bool(np.array_equal(got, want))
+        bytes_moved = n * 8192
+        t_mem = bytes_moved / HBM_BW
+        # ~75 logical + 5*15 popcount ops per 16-word group, 128 groups
+        vpu_ops = n * (2048 // 16) * (75 + 75)
+        common.emit(rows, "kernels", "harley_seal", f"n={n}", "sweep",
+                    t_mem * 1e6,
+                    f"correct={ok};hbm_bytes={bytes_moved};"
+                    f"vpu_ops={vpu_ops};memory_bound=True")
+    # fused op+popcount
+    a = rng.integers(0, 1 << 32, (256, 2048), dtype=np.uint32)
+    b = rng.integers(0, 1 << 32, (256, 2048), dtype=np.uint32)
+    for op in ("and", "or", "xor", "andnot"):
+        rw, rc = bitset_op(jnp.asarray(a), jnp.asarray(b), op,
+                           interpret=True)
+        ow, oc = ref.bitset_op(jnp.asarray(a), jnp.asarray(b), op)
+        ok = bool(np.array_equal(np.asarray(rw), np.asarray(ow)) and
+                  np.array_equal(np.asarray(rc), np.asarray(oc)))
+        bytes_moved = 256 * 8192 * 3
+        common.emit(rows, "kernels", f"bitset_{op}_card", "n=256", "sweep",
+                    bytes_moved / HBM_BW * 1e6,
+                    f"correct={ok};hbm_bytes={bytes_moved}")

@@ -1,0 +1,53 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark driver: reproduces every paper table (sections 5.4-5.10 +
+Appendices B/C) on the synthetic Table-3 twin datasets.
+
+    PYTHONPATH=src python -m benchmarks.run            # CI-sized
+    PYTHONPATH=src python -m benchmarks.run --full     # paper-sized (200 sets)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-sized: 200 sets/dataset, ClusterData x50")
+    ap.add_argument("--only", default="",
+                    help="comma list: table3,table4,...,table14,kernels")
+    args = ap.parse_args()
+
+    from benchmarks import ablation, kernels_bench, tables
+    n_sets = 200 if args.full else 40
+    n_time = 200 if args.full else 24
+    cluster_scale = 0.1 if args.full else 0.002
+
+    rows: list = []
+    print("name,us_per_call,derived")
+    want = set(args.only.split(",")) if args.only else None
+
+    def go(name, fn):
+        if want is None or name in want:
+            fn()
+
+    go("table3", lambda: tables.table3_datasets(rows, n_sets))
+    go("table4", lambda: tables.table4_memory(rows, n_sets))
+    go("table5", lambda: tables.table5_sequential(rows, n_time))
+    go("table6", lambda: tables.table6_membership(rows, n_time))
+    go("table7", lambda: tables.table7_pairwise_ops(rows, n_time))
+    go("table8", lambda: tables.table8_wide_union(rows, n_time))
+    go("table9", lambda: tables.table9_fast_counts(rows, n_time))
+    go("table10", lambda: ablation.table10_simd_ablation(rows))
+    go("table12", lambda: tables.table12_clusterdata(
+        rows, scale=cluster_scale))
+    go("table14", lambda: ablation.table14_host_vs_device(rows))
+    go("kernels", lambda: kernels_bench.kernel_sweeps(rows))
+
+    print(f"# {len(rows)} rows", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

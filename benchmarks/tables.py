@@ -1,0 +1,148 @@
+"""One benchmark function per paper table (sections 5.4-5.10, App. B).
+
+All report `name,us_per_call,derived` rows via common.emit; `derived` holds
+the paper's own metric (bits/value, cycles/value at 3.4 GHz) so results are
+directly comparable to the published tables.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.baselines import STRUCTURES, RoaringSet
+
+
+def table3_datasets(rows, n_sets=50):
+    """Dataset characteristics (paper Table 3)."""
+    for name, (sets, universe) in common.datasets(n_sets).items():
+        card = float(np.mean([len(s) for s in sets]))
+        common.emit(rows, "table3", "stats", "-", name, 0.0,
+                    f"universe={universe};avg_card={card:.1f};"
+                    f"density={card / universe:.5f}")
+
+
+def table4_memory(rows, n_sets=50):
+    """Memory usage in bits per value (paper Table 4)."""
+    for name, (sets, universe) in common.datasets(n_sets).items():
+        total_vals = sum(len(s) for s in sets)
+        for cls in STRUCTURES:
+            built = [cls(v, universe) for v in sets]
+            bits = 8.0 * sum(b.memory_bytes() for b in built) / total_vals
+            common.emit(rows, "table4", "memory", cls.name, name, 0.0,
+                        f"bits_per_value={bits:.2f}")
+
+
+def table5_sequential(rows, n_sets=30):
+    """Iterate all values, checking total cardinality (paper Table 5)."""
+    for name, (sets, universe) in common.datasets(n_sets).items():
+        total_vals = sum(len(s) for s in sets)
+        for cls in STRUCTURES:
+            built = [cls(v, universe) for v in sets]
+
+            def run():
+                n = 0
+                for b in built:
+                    n += int(b.to_array().size)
+                assert n == total_vals
+            sec = common.best_of(run)
+            common.emit(rows, "table5", "sequential", cls.name, name,
+                        sec * 1e6 / n_sets,
+                        f"cycles_per_value={common.cycles_per_value(sec, total_vals):.2f}")
+
+
+def table6_membership(rows, n_sets=30, n_probe_batches=16):
+    """Random-access membership (paper Table 6: n/4, n/2, 3n/4 probes)."""
+    for name, (sets, universe) in common.datasets(n_sets).items():
+        probes = np.asarray([universe // 4, universe // 2,
+                             3 * universe // 4], np.uint32)
+        for cls in STRUCTURES:
+            built = [cls(v, universe) for v in sets]
+
+            def run():
+                for b in built:
+                    b.contains_many(probes)
+            sec = common.best_of(run)
+            n_queries = 3 * n_sets
+            common.emit(rows, "table6", "membership", cls.name, name,
+                        sec * 1e6 / n_queries,
+                        f"cycles_per_query={common.cycles_per_value(sec, n_queries):.1f}")
+
+
+def _pairwise(rows, table, opname, opfn, n_sets=30):
+    for name, (sets, universe) in common.datasets(n_sets).items():
+        for cls in STRUCTURES:
+            built = [cls(v, universe) for v in sets]
+            input_vals = sum(len(sets[i]) + len(sets[i + 1])
+                             for i in range(n_sets - 1))
+            cards = []
+
+            def run():
+                cards.clear()
+                for i in range(n_sets - 1):
+                    cards.append(opfn(built[i], built[i + 1]))
+            sec = common.best_of(run)
+            common.emit(rows, table, opname, cls.name, name,
+                        sec * 1e6 / (n_sets - 1),
+                        f"cycles_per_value={common.cycles_per_value(sec, input_vals):.3f}")
+
+
+def table7_pairwise_ops(rows, n_sets=30):
+    """Two-by-two AND/OR/XOR/ANDNOT with materialization + cardinality
+    check (paper Table 7a-d)."""
+    _pairwise(rows, "table7a", "intersection",
+              lambda a, b: (a & b).cardinality(), n_sets)
+    _pairwise(rows, "table7b", "union",
+              lambda a, b: (a | b).cardinality(), n_sets)
+    _pairwise(rows, "table7c", "difference",
+              lambda a, b: a.andnot(b).cardinality(), n_sets)
+    _pairwise(rows, "table7d", "symmetric_difference",
+              lambda a, b: (a ^ b).cardinality(), n_sets)
+
+
+def table8_wide_union(rows, n_sets=30):
+    """Union of all sets in the dataset (paper Table 8)."""
+    from repro.core import RoaringBitmap
+    for name, (sets, universe) in common.datasets(n_sets).items():
+        input_vals = sum(len(s) for s in sets)
+        for cls in STRUCTURES:
+            built = [cls(v, universe) for v in sets]
+            if cls is RoaringSet:
+                def run():
+                    RoaringBitmap.or_many([b.bm for b in built])
+            else:
+                def run():
+                    acc = built[0]
+                    for b in built[1:]:
+                        acc = acc | b
+            sec = common.best_of(run)
+            common.emit(rows, "table8", "wide_union", cls.name, name,
+                        sec * 1e6,
+                        f"cycles_per_value={common.cycles_per_value(sec, input_vals):.3f}")
+
+
+def table9_fast_counts(rows, n_sets=30):
+    """Count-only intersections (paper Table 9a; 9b-d derive from 9a by
+    inclusion-exclusion, which is how Roaring computes them)."""
+    _pairwise(rows, "table9a", "intersection_count",
+              lambda a, b: a.and_card(b), n_sets)
+
+
+def table12_clusterdata(rows, scale=0.002, n_sets=20):
+    """Appendix B: ClusterData 10^9-universe workload (scaled for CI;
+    --full uses scale=1)."""
+    from repro.data.synth import clusterdata_sets
+    sets = clusterdata_sets(n_sets=n_sets, seed=3, scale=scale)
+    universe = int(1_000_000_000 * scale)
+    total = sum(len(s) for s in sets)
+    for cls in STRUCTURES:
+        built = [cls(v, universe) for v in sets]
+        bits = 8.0 * sum(b.memory_bytes() for b in built) / total
+        def inter():
+            for i in range(n_sets - 1):
+                built[i].and_card(built[i + 1])
+        sec = common.best_of(inter)
+        common.emit(rows, "table12", "clusterdata", cls.name,
+                    f"scale={scale}", sec * 1e6 / (n_sets - 1),
+                    f"bits_per_value={bits:.2f};"
+                    f"cycles_per_value={common.cycles_per_value(sec, total):.3f}")

@@ -1,0 +1,52 @@
+"""Analytics scenario: an inverted index over synthetic postings lists --
+the paper's home application (Druid/Lucene-style predicate algebra).
+
+    PYTHONPATH=src python examples/analytics_index.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.core import RoaringBitmap
+from repro.data.index import InvertedIndex
+from repro.data.synth import TABLE3, generate_dataset
+
+
+def main():
+    rng = np.random.default_rng(1)
+    n_docs, n_terms = 20_000, 120
+    zipf = (1.0 / np.arange(1, n_terms + 1)) ** 0.8
+    zipf /= zipf.sum()
+    docs = [[f"t{t}" for t in rng.choice(n_terms, size=rng.integers(5, 30),
+                                         p=zipf, replace=False)]
+            for _ in range(n_docs)]
+    t0 = time.perf_counter()
+    idx = InvertedIndex().build(docs).optimize()
+    print(f"indexed {n_docs} docs / {len(idx.postings)} terms "
+          f"in {time.perf_counter() - t0:.2f}s, "
+          f"{idx.memory_bytes() / 1024:.0f} kB of postings")
+
+    q = ("t0", "t1", "t2")
+    t0 = time.perf_counter()
+    hits_and = idx.query_and(*q)
+    hits_or = idx.query_or(*q)
+    dt = (time.perf_counter() - t0) * 1e3
+    print(f"AND({q}) = {hits_and.cardinality} docs; "
+          f"OR = {hits_or.cardinality} docs  [{dt:.2f} ms]")
+    print(f"jaccard(t0, t1) = {idx.jaccard('t0', 't1'):.4f} "
+          "(count-only, never materialized)")
+    excl = idx.query_andnot("t0", "t1")
+    print(f"t0 AND NOT t1 = {excl.cardinality} docs")
+
+    # run the same predicates over a Table-3 twin dataset
+    sets, universe = generate_dataset(TABLE3[0], seed=0)[:50], \
+        TABLE3[0].universe
+    bms = [RoaringBitmap.from_values(s).run_optimize() for s in sets]
+    wide = RoaringBitmap.or_many(bms)
+    print(f"census twin: union of 50 postings lists -> "
+          f"{wide.cardinality} ids at {wide.bits_per_value():.2f} bits/value")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""Assigned architectures x input shapes (see the assignment block).
+
+Each ``repro.configs.<arch_id>`` module exposes ``config()`` (the exact
+published configuration) and ``reduced()`` (a small same-family config for
+CPU smoke tests).  This package adds the shape grid, applicability rules
+(DESIGN.md section 8) and ShapeDtypeStruct input specs for the dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS = (
+    "qwen2_vl_72b",
+    "gemma2_27b",
+    "stablelm_3b",
+    "qwen2_5_3b",
+    "qwen3_14b",
+    "deepseek_v2_236b",
+    "mixtral_8x7b",
+    "xlstm_350m",
+    "jamba_v01_52b",
+    "hubert_xlarge",
+)
+
+# CLI-friendly aliases (--arch qwen2-vl-72b etc.)
+ALIASES = {a.replace("_", "-"): a for a in ARCH_IDS}
+ALIASES.update({"qwen2.5-3b": "qwen2_5_3b", "jamba-v0.1-52b": "jamba_v01_52b"})
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    step: str        # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def get_config(arch: str, reduced: bool = False) -> ModelConfig:
+    arch = ALIASES.get(arch, arch)
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.reduced() if reduced else mod.config()
+
+
+def all_configs(reduced: bool = False) -> dict[str, ModelConfig]:
+    return {a: get_config(a, reduced) for a in ARCH_IDS}
+
+
+# ---------------------------------------------------------------------------
+# applicability (DESIGN.md section 8 / assignment skip rules)
+# ---------------------------------------------------------------------------
+
+def applicable(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    spec = SHAPES[shape]
+    if cfg.is_encoder and spec.step == "decode":
+        return False, "encoder-only architecture has no decode step"
+    if shape == "long_500k" and cfg.full_attention_only:
+        return False, ("pure full-attention architecture: long_500k needs "
+                       "sub-quadratic attention (skip per assignment)")
+    return True, ""
+
+
+def grid(reduced: bool = False):
+    """All 40 (arch, shape) cells with applicability annotations."""
+    cells = []
+    for a in ARCH_IDS:
+        cfg = get_config(a, reduced)
+        for s in SHAPES:
+            ok, why = applicable(cfg, s)
+            cells.append((a, s, ok, why))
+    return cells
+
+
+# ---------------------------------------------------------------------------
+# dry-run input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: str) -> dict:
+    """Model *data* inputs for the given shape's step function."""
+    spec = SHAPES[shape]
+    b, s = spec.global_batch, spec.seq_len
+    i32 = jnp.int32
+    if spec.step == "train":
+        batch = {}
+        s_text = s - cfg.n_frontend_tokens
+        if cfg.frontend == "none":
+            batch["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+            batch["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        elif cfg.frontend == "vision_stub":
+            fd = cfg.frontend_dim or cfg.d_model
+            batch["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_frontend_tokens, fd), jnp.bfloat16)
+            batch["tokens"] = jax.ShapeDtypeStruct((b, s_text), i32)
+            batch["labels"] = jax.ShapeDtypeStruct((b, s_text), i32)
+        else:  # audio_stub: pure embedding input
+            fd = cfg.frontend_dim or cfg.d_model
+            batch["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (b, s, fd), jnp.bfloat16)
+            batch["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        return batch
+    if spec.step == "prefill":
+        batch = {}
+        if cfg.frontend == "audio_stub":
+            fd = cfg.frontend_dim or cfg.d_model
+            batch["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (b, s, fd), jnp.bfloat16)
+        elif cfg.frontend == "vision_stub":
+            fd = cfg.frontend_dim or cfg.d_model
+            batch["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_frontend_tokens, fd), jnp.bfloat16)
+            batch["tokens"] = jax.ShapeDtypeStruct(
+                (b, s - cfg.n_frontend_tokens), i32)
+        else:
+            batch["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        return batch
+    # decode: one new token over a seq_len-deep KV/state cache
+    out = {"tokens": jax.ShapeDtypeStruct((b,), i32)}
+    if cfg.roaring_sparse_global and cfg.has_attention:
+        n_blocks = s // cfg.attn_block_size
+        out["block_mask_words"] = jax.ShapeDtypeStruct(
+            (b, max(1, (n_blocks + 31) // 32)), jnp.uint32)
+    return out
+
+
+def decode_state_specs(cfg: ModelConfig, shape: str):
+    from repro.models import transformer as T
+    spec = SHAPES[shape]
+    return jax.eval_shape(
+        lambda: T.init_decode_state(cfg, spec.global_batch, spec.seq_len))

@@ -1,0 +1,22 @@
+"""repro.core -- Roaring bitmaps: host (numpy) and device (JAX) paths.
+
+Host path:   RoaringBitmap (dynamic containers, paper-faithful semantics)
+Device path: RoaringTensor (fixed-capacity slab layout for jit/pjit)
+"""
+
+from repro.core.bitmap import RoaringBitmap
+from repro.core.builder import (
+    complement, flip_range, from_dense, from_indices, to_dense,
+)
+from repro.core.containers import (
+    ARRAY_MAX, BITSET_WORDS, CHUNK, MAX_RUNS,
+    ArrayContainer, BitsetContainer, RunContainer,
+)
+from repro.core.serde import deserialize, serialize, serialized_size_bytes
+
+__all__ = [
+    "RoaringBitmap", "ArrayContainer", "BitsetContainer", "RunContainer",
+    "ARRAY_MAX", "BITSET_WORDS", "CHUNK", "MAX_RUNS",
+    "from_indices", "from_dense", "to_dense", "complement", "flip_range",
+    "serialize", "deserialize", "serialized_size_bytes",
+]

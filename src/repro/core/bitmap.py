@@ -1,0 +1,416 @@
+"""RoaringBitmap: the paper's two-level data structure (host path).
+
+A Roaring bitmap is a sorted list of 16-bit keys (the high half of each
+present 32-bit value) paired with containers holding the low halves
+(paper section 1, Fig. 1).  This class reproduces CRoaring's public surface:
+construction, membership, set algebra (two-by-two and wide), count-only
+("fast count") variants, run optimization, memory accounting, and a compact
+serialization format.
+
+The top level is scalar python (as in CRoaring the top level is scalar C);
+all heavy lifting happens inside the vectorized container layer.
+"""
+
+from __future__ import annotations
+
+import bisect
+
+import numpy as np
+
+from repro.core import containers as C
+from repro.core.containers import (
+    ArrayContainer, BitsetContainer, RunContainer, Container,
+    container_from_values, optimize,
+)
+
+__all__ = ["RoaringBitmap"]
+
+
+class RoaringBitmap:
+    """Compressed set of uint32 values."""
+
+    __slots__ = ("keys", "containers")
+
+    def __init__(self, keys: list[int] | None = None,
+                 conts: list[Container] | None = None):
+        self.keys: list[int] = keys if keys is not None else []
+        self.containers: list[Container] = conts if conts is not None else []
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def from_values(cls, values) -> "RoaringBitmap":
+        """Build from any iterable / array of uint32 values (deduplicated)."""
+        arr = np.asarray(values, dtype=np.uint32)
+        if arr.size == 0:
+            return cls()
+        arr = np.unique(arr)                     # sorted + distinct
+        his = (arr >> np.uint32(16)).astype(np.int64)
+        los = arr.astype(np.uint16)              # low 16 bits
+        keys_u, starts = np.unique(his, return_index=True)
+        bounds = np.concatenate((starts, [arr.size]))
+        keys, conts = [], []
+        for i, k in enumerate(keys_u.tolist()):
+            chunk = los[bounds[i]:bounds[i + 1]]
+            keys.append(int(k))
+            conts.append(container_from_values(chunk))
+        return cls(keys, conts)
+
+    @classmethod
+    def from_range(cls, start: int, stop: int) -> "RoaringBitmap":
+        """Dense range [start, stop) -- built directly as run containers."""
+        if stop <= start:
+            return cls()
+        keys, conts = [], []
+        k0, k1 = start >> 16, (stop - 1) >> 16
+        for k in range(k0, k1 + 1):
+            lo = start - (k << 16) if k == k0 else 0
+            hi = (stop - 1) - (k << 16) if k == k1 else 0xFFFF
+            keys.append(k)
+            conts.append(RunContainer(np.array([[lo, hi - lo]],
+                                               dtype=np.int32)))
+        return cls(keys, conts)
+
+    def copy(self) -> "RoaringBitmap":
+        return RoaringBitmap(list(self.keys), list(self.containers))
+
+    # ------------------------------------------------------------------
+    # basic queries
+    # ------------------------------------------------------------------
+
+    @property
+    def cardinality(self) -> int:
+        return sum(c.card for c in self.containers)
+
+    def __len__(self) -> int:
+        return self.cardinality
+
+    def __bool__(self) -> bool:
+        return bool(self.containers)
+
+    def __contains__(self, v: int) -> bool:
+        """Logarithmic random access (paper section 1): binary search the key,
+        then probe the container."""
+        i = bisect.bisect_left(self.keys, int(v) >> 16)
+        if i == len(self.keys) or self.keys[i] != int(v) >> 16:
+            return False
+        return self.containers[i].contains(int(v) & 0xFFFF)
+
+    def contains_many(self, values) -> np.ndarray:
+        """Vectorized membership for an array of uint32 values."""
+        arr = np.asarray(values, dtype=np.uint32)
+        out = np.zeros(arr.size, dtype=bool)
+        if not self.keys:
+            return out
+        his = (arr >> np.uint32(16)).astype(np.int64)
+        keys_np = np.asarray(self.keys, dtype=np.int64)
+        idx = np.searchsorted(keys_np, his)
+        idx_c = np.minimum(idx, keys_np.size - 1)
+        hit = keys_np[idx_c] == his
+        for ci in np.unique(idx_c[hit]).tolist():
+            sel = hit & (idx_c == ci)
+            lo = arr[sel].astype(np.uint16)
+            cont = self.containers[ci]
+            if isinstance(cont, BitsetContainer):
+                out[sel] = C.bitset_test_many(cont.words, lo)
+            elif isinstance(cont, ArrayContainer):
+                pos = np.searchsorted(cont.values, lo)
+                pos[pos == cont.values.size] = max(cont.values.size - 1, 0)
+                out[sel] = (cont.values[pos] == lo) if cont.values.size else False
+            else:
+                out[sel] = np.fromiter(
+                    (cont.contains(int(x)) for x in lo), bool, lo.size)
+        return out
+
+    def to_array(self) -> np.ndarray:
+        """All values, sorted, as uint32 (sequential access, paper sec 5.5)."""
+        parts = []
+        for k, c in zip(self.keys, self.containers):
+            parts.append((np.uint32(k) << np.uint32(16)) |
+                         c.to_array_values().astype(np.uint32))
+        if not parts:
+            return np.zeros(0, dtype=np.uint32)
+        return np.concatenate(parts)
+
+    def __iter__(self):
+        return iter(self.to_array().tolist())
+
+    def __eq__(self, other) -> bool:
+        if not isinstance(other, RoaringBitmap):
+            return NotImplemented
+        return np.array_equal(self.to_array(), other.to_array())
+
+    def __hash__(self):  # content hash for caching in the data pipeline
+        return hash(self.to_array().tobytes())
+
+    # ------------------------------------------------------------------
+    # point updates
+    # ------------------------------------------------------------------
+
+    def add(self, v: int) -> None:
+        hi, lo = int(v) >> 16, int(v) & 0xFFFF
+        i = bisect.bisect_left(self.keys, hi)
+        if i < len(self.keys) and self.keys[i] == hi:
+            cont = self.containers[i]
+            if isinstance(cont, BitsetContainer):
+                delta = C.bitset_set_many(
+                    cont.words, np.array([lo], dtype=np.uint16))
+                cont.card += delta
+            else:
+                vals = cont.to_array_values()
+                j = int(np.searchsorted(vals, np.uint16(lo)))
+                if j < vals.size and int(vals[j]) == lo:
+                    return
+                vals = np.insert(vals, j, np.uint16(lo))
+                self.containers[i] = container_from_values(vals)
+        else:
+            self.keys.insert(i, hi)
+            self.containers.insert(
+                i, ArrayContainer(np.array([lo], dtype=np.uint16)))
+
+    def remove(self, v: int) -> None:
+        hi, lo = int(v) >> 16, int(v) & 0xFFFF
+        i = bisect.bisect_left(self.keys, hi)
+        if i == len(self.keys) or self.keys[i] != hi:
+            return
+        cont = self.containers[i]
+        if isinstance(cont, BitsetContainer):
+            delta = C.bitset_clear_many(
+                cont.words, np.array([lo], dtype=np.uint16))
+            cont.card -= delta
+            # paper: deleting from a bitset container may force an array
+            # conversion (Roaring tracks cardinality; BitMagic cannot)
+            if cont.card <= C.ARRAY_MAX:
+                self.containers[i] = ArrayContainer(cont.to_array_values())
+        else:
+            vals = cont.to_array_values()
+            j = int(np.searchsorted(vals, np.uint16(lo)))
+            if j >= vals.size or int(vals[j]) != lo:
+                return
+            vals = np.delete(vals, j)
+            self.containers[i] = container_from_values(vals)
+        if self.containers[i].card == 0:
+            del self.keys[i]
+            del self.containers[i]
+
+    # ------------------------------------------------------------------
+    # two-by-two set algebra (key-merge at the top, paper layout)
+    # ------------------------------------------------------------------
+
+    def _merge(self, other: "RoaringBitmap", op: str) -> "RoaringBitmap":
+        fn = C.OPS[op][0]
+        keys, conts = [], []
+        i = j = 0
+        a_keys, b_keys = self.keys, other.keys
+        na, nb = len(a_keys), len(b_keys)
+        while i < na and j < nb:
+            ka, kb = a_keys[i], b_keys[j]
+            if ka == kb:
+                c = fn(self.containers[i], other.containers[j])
+                if c.card:
+                    keys.append(ka)
+                    conts.append(c)
+                i += 1
+                j += 1
+            elif ka < kb:
+                if op in ("or", "xor", "andnot"):
+                    keys.append(ka)
+                    conts.append(self.containers[i])
+                i += 1
+            else:
+                if op in ("or", "xor"):
+                    keys.append(kb)
+                    conts.append(other.containers[j])
+                j += 1
+        if op in ("or", "xor", "andnot"):
+            while i < na:
+                keys.append(a_keys[i])
+                conts.append(self.containers[i])
+                i += 1
+        if op in ("or", "xor"):
+            while j < nb:
+                keys.append(b_keys[j])
+                conts.append(other.containers[j])
+                j += 1
+        return RoaringBitmap(keys, conts)
+
+    def __and__(self, other):
+        return self._merge(other, "and")
+
+    def __or__(self, other):
+        return self._merge(other, "or")
+
+    def __xor__(self, other):
+        return self._merge(other, "xor")
+
+    def __sub__(self, other):
+        return self._merge(other, "andnot")
+
+    def andnot(self, other):
+        return self._merge(other, "andnot")
+
+    # ------------------------------------------------------------------
+    # count-only ("fast count", paper section 5.9) and similarity
+    # ------------------------------------------------------------------
+
+    def and_card(self, other: "RoaringBitmap") -> int:
+        cnt = 0
+        i = j = 0
+        while i < len(self.keys) and j < len(other.keys):
+            ka, kb = self.keys[i], other.keys[j]
+            if ka == kb:
+                cnt += C.container_and_card(
+                    self.containers[i], other.containers[j])
+                i += 1
+                j += 1
+            elif ka < kb:
+                i += 1
+            else:
+                j += 1
+        return cnt
+
+    def or_card(self, other) -> int:
+        return self.cardinality + other.cardinality - self.and_card(other)
+
+    def andnot_card(self, other) -> int:
+        return self.cardinality - self.and_card(other)
+
+    def xor_card(self, other) -> int:
+        return (self.cardinality + other.cardinality
+                - 2 * self.and_card(other))
+
+    def jaccard(self, other) -> float:
+        inter = self.and_card(other)
+        union = self.cardinality + other.cardinality - inter
+        return inter / union if union else 1.0
+
+    def cosine(self, other) -> float:
+        inter = self.and_card(other)
+        denom = (self.cardinality * other.cardinality) ** 0.5
+        return inter / denom if denom else 1.0
+
+    def intersects(self, other) -> bool:
+        return self.and_card(other) > 0
+
+    # ------------------------------------------------------------------
+    # wide aggregates (paper section 5.8: roaring_bitmap_or_many).
+    # Lazy accumulation in bitset domain per key; repack once at the end.
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def or_many(bitmaps: list["RoaringBitmap"]) -> "RoaringBitmap":
+        if not bitmaps:
+            return RoaringBitmap()
+        acc: dict[int, np.ndarray | Container] = {}
+        for bm in bitmaps:
+            for k, c in zip(bm.keys, bm.containers):
+                cur = acc.get(k)
+                if cur is None:
+                    acc[k] = c
+                    continue
+                if not isinstance(cur, np.ndarray):
+                    # promote lazily to a bitset accumulator (cardinality
+                    # deliberately NOT tracked until finalization: the
+                    # paper's "lazy" operations)
+                    cur = cur.to_bitset().words.copy()
+                    acc[k] = cur
+                if isinstance(c, ArrayContainer):
+                    idx = (c.values >> np.uint16(6)).astype(np.int64)
+                    bit = np.left_shift(
+                        np.uint64(1), c.values.astype(np.uint64) & np.uint64(63))
+                    np.bitwise_or.at(cur, idx, bit)
+                elif isinstance(c, BitsetContainer):
+                    np.bitwise_or(cur, c.words, out=cur)
+                else:
+                    np.bitwise_or(cur, c.to_bitset().words, out=cur)
+        keys = sorted(acc)
+        conts: list[Container] = []
+        for k in keys:
+            v = acc[k]
+            if isinstance(v, np.ndarray):
+                conts.append(C._result_from_bitset(v))
+            else:
+                conts.append(v)
+        return RoaringBitmap(keys, conts)
+
+    @staticmethod
+    def and_many(bitmaps: list["RoaringBitmap"]) -> "RoaringBitmap":
+        if not bitmaps:
+            return RoaringBitmap()
+        out = bitmaps[0]
+        for bm in sorted(bitmaps[1:], key=lambda b: b.cardinality):
+            out = out & bm
+            if not out:
+                break
+        return out
+
+    # ------------------------------------------------------------------
+    # maintenance (paper: run_optimize / shrink_to_fit)
+    # ------------------------------------------------------------------
+
+    def run_optimize(self) -> "RoaringBitmap":
+        self.containers = [optimize(c) for c in self.containers]
+        return self
+
+    def memory_bytes(self) -> int:
+        """Estimated in-memory footprint (paper section 5.4 accounting):
+        per-container payload + 8 bytes/container of key+type+card overhead
+        + 16 bytes of top-level header."""
+        payload = sum(c.memory_bytes() for c in self.containers)
+        return payload + 8 * len(self.containers) + 16
+
+    def bits_per_value(self) -> float:
+        card = self.cardinality
+        return 8.0 * self.memory_bytes() / card if card else float("inf")
+
+    # ------------------------------------------------------------------
+    # rank / select (advanced queries, paper section 6)
+    # ------------------------------------------------------------------
+
+    def rank(self, v: int) -> int:
+        """Number of elements <= v."""
+        hi, lo = int(v) >> 16, int(v) & 0xFFFF
+        total = 0
+        for k, c in zip(self.keys, self.containers):
+            if k < hi:
+                total += c.card
+            elif k == hi:
+                vals = c.to_array_values()
+                total += int(np.searchsorted(vals, np.uint16(lo),
+                                             side="right"))
+            else:
+                break
+        return total
+
+    def select(self, i: int) -> int:
+        """i-th smallest element (0-based)."""
+        if i < 0:
+            raise IndexError(i)
+        for k, c in zip(self.keys, self.containers):
+            if i < c.card:
+                vals = c.to_array_values()
+                return int((np.uint32(k) << np.uint32(16)) |
+                           np.uint32(vals[i]))
+            i -= c.card
+        raise IndexError("select out of range")
+
+    def min(self) -> int:
+        if not self.containers:
+            raise ValueError("empty bitmap")
+        return self.select(0)
+
+    def max(self) -> int:
+        if not self.containers:
+            raise ValueError("empty bitmap")
+        k, c = self.keys[-1], self.containers[-1]
+        vals = c.to_array_values()
+        return int((np.uint32(k) << np.uint32(16)) | np.uint32(vals[-1]))
+
+    def __repr__(self) -> str:
+        kinds = {}
+        for c in self.containers:
+            kinds[c.kind] = kinds.get(c.kind, 0) + 1
+        return (f"RoaringBitmap(card={self.cardinality}, "
+                f"containers={len(self.containers)}, kinds={kinds})")

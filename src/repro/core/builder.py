@@ -1,0 +1,36 @@
+"""Construction / conversion helpers around RoaringBitmap."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.bitmap import RoaringBitmap
+
+
+def from_indices(indices) -> RoaringBitmap:
+    return RoaringBitmap.from_values(indices)
+
+
+def from_dense(mask: np.ndarray) -> RoaringBitmap:
+    """Boolean occupancy vector -> RoaringBitmap."""
+    return RoaringBitmap.from_values(np.flatnonzero(np.asarray(mask)))
+
+
+def to_dense(bm: RoaringBitmap, n: int) -> np.ndarray:
+    out = np.zeros(n, dtype=bool)
+    vals = bm.to_array()
+    out[vals[vals < n]] = True
+    return out
+
+
+def complement(bm: RoaringBitmap, n: int) -> RoaringBitmap:
+    """Complement within the universe [0, n)."""
+    return RoaringBitmap.from_range(0, n) - bm
+
+
+def flip_range(bm: RoaringBitmap, start: int, stop: int) -> RoaringBitmap:
+    """Flip all bits in [start, stop) (paper: bitset negation, sec 2.2)."""
+    window = RoaringBitmap.from_range(start, stop)
+    inside_flipped = window - bm
+    outside = bm - window
+    return outside | inside_flipped

@@ -1,0 +1,91 @@
+"""Compact, portable serialization for RoaringBitmap (paper section 5.1:
+"The CRoaring library supports a compact and portable serialization format";
+in-memory and serialized sizes are nearly identical).
+
+Layout (little-endian):
+    magic   4 bytes  b"RJ01"
+    n       uint32   number of containers
+    keys    n x uint16
+    kinds   n x uint8      (1 array / 2 bitset / 3 run)
+    cards   n x uint16     (cardinality - 1; a container is never empty)
+    payloads, per container:
+      array : card x uint16 values
+      bitset: 1024 x uint64 words
+      run   : uint16 n_runs, then n_runs x (uint16 start, uint16 length)
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+from repro.core.bitmap import RoaringBitmap
+from repro.core.containers import (
+    ArrayContainer, BitsetContainer, RunContainer, BITSET_WORDS,
+)
+
+MAGIC = b"RJ01"
+
+
+def serialize(bm: RoaringBitmap) -> bytes:
+    n = len(bm.keys)
+    parts = [MAGIC, struct.pack("<I", n)]
+    parts.append(np.asarray(bm.keys, dtype=np.uint16).tobytes())
+    kinds, cards = [], []
+    for c in bm.containers:
+        kinds.append({"array": 1, "bitset": 2, "run": 3}[c.kind])
+        cards.append(c.card - 1)
+    parts.append(np.asarray(kinds, dtype=np.uint8).tobytes())
+    parts.append(np.asarray(cards, dtype=np.uint16).tobytes())
+    for c in bm.containers:
+        if isinstance(c, ArrayContainer):
+            parts.append(c.values.tobytes())
+        elif isinstance(c, BitsetContainer):
+            parts.append(c.words.tobytes())
+        else:
+            runs = c.runs.astype(np.uint16)
+            parts.append(struct.pack("<H", runs.shape[0]))
+            parts.append(runs.tobytes())
+    return b"".join(parts)
+
+
+def deserialize(buf: bytes) -> RoaringBitmap:
+    if buf[:4] != MAGIC:
+        raise ValueError("bad magic; not an RJ01 roaring payload")
+    (n,) = struct.unpack_from("<I", buf, 4)
+    off = 8
+    keys = np.frombuffer(buf, dtype=np.uint16, count=n, offset=off)
+    off += 2 * n
+    kinds = np.frombuffer(buf, dtype=np.uint8, count=n, offset=off)
+    off += n
+    cards = np.frombuffer(buf, dtype=np.uint16, count=n, offset=off)
+    off += 2 * n
+    out_keys, out_conts = [], []
+    for i in range(n):
+        card = int(cards[i]) + 1
+        kind = int(kinds[i])
+        if kind == 1:
+            vals = np.frombuffer(buf, dtype=np.uint16, count=card, offset=off)
+            off += 2 * card
+            out_conts.append(ArrayContainer(vals.copy()))
+        elif kind == 2:
+            words = np.frombuffer(buf, dtype=np.uint64,
+                                  count=BITSET_WORDS, offset=off)
+            off += 8 * BITSET_WORDS
+            out_conts.append(BitsetContainer(words.copy(), card))
+        elif kind == 3:
+            (nr,) = struct.unpack_from("<H", buf, off)
+            off += 2
+            runs = np.frombuffer(buf, dtype=np.uint16, count=2 * nr,
+                                 offset=off).reshape(nr, 2)
+            off += 4 * nr
+            out_conts.append(RunContainer(runs.astype(np.int32)))
+        else:
+            raise ValueError(f"bad container kind {kind}")
+        out_keys.append(int(keys[i]))
+    return RoaringBitmap(out_keys, out_conts)
+
+
+def serialized_size_bytes(bm: RoaringBitmap) -> int:
+    return len(serialize(bm))

@@ -1,0 +1,500 @@
+"""RoaringTensor: a fixed-capacity, jit-compatible device layout for batches
+of Roaring bitmaps (DESIGN.md section 5).
+
+Layout (B bitmaps, C container slots each):
+    keys  (B, C) int32   -- chunk key (high 16 bits); SENTINEL for empty slots
+    kinds (B, C) int32   -- 0 empty / 1 array / 2 bitset / 3 run
+    cards (B, C) int32   -- tracked cardinality (the paper tracks it; we do too)
+    aux   (B, C) int32   -- run count for run slots, 0 otherwise
+    slab  (B, C, 4096) uint16 -- 8 kB payload:
+        array : sorted values, tail padded with 0xFFFF
+        bitset: 4096 16-bit words (bit i at word i>>4, position i&15)
+        run   : interleaved [start0, len0, start1, len1, ...]
+
+Every CRoaring container is <= 8 kB, so the uniform slab wastes < 2x vs the
+ideal dynamic layout while giving static shapes; the *HBM* footprint of a
+stored bitmap is still governed by the container kinds via `packed_nbytes`.
+
+Compute plan (DESIGN.md section 3): binary algebra normalizes both operands
+to the bitset domain (two VPU registers per container on TPU), runs the fused
+logical-op+popcount kernel, then `repack()` re-derives the memory-optimal
+kinds -- mirroring roaring_bitmap_run_optimize.  Keys are aligned with a
+static-capacity sorted merge.  Count-only variants never materialize results
+(paper section 5.9).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bitmap import RoaringBitmap
+from repro.core.containers import (
+    ARRAY_MAX, ArrayContainer, BitsetContainer, RunContainer,
+)
+from repro.kernels import ops as kops
+from repro.kernels.ref import WORDS, CONTAINER_BITS
+
+SENTINEL = np.int32(0x7FFFFFFF)
+KIND_EMPTY, KIND_ARRAY, KIND_BITSET, KIND_RUN = 0, 1, 2, 3
+SLAB16 = 4096  # uint16 entries per slab
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class RoaringTensor:
+    keys: jax.Array    # (B, C) int32
+    kinds: jax.Array   # (B, C) int32
+    cards: jax.Array   # (B, C) int32
+    aux: jax.Array     # (B, C) int32
+    slab: jax.Array    # (B, C, SLAB16) uint16
+
+    # -- pytree plumbing ------------------------------------------------
+    def tree_flatten(self):
+        return (self.keys, self.kinds, self.cards, self.aux, self.slab), None
+
+    @classmethod
+    def tree_unflatten(cls, _, children):
+        return cls(*children)
+
+    # -- basic properties -----------------------------------------------
+    @property
+    def batch(self) -> int:
+        return self.keys.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.keys.shape[1]
+
+    def cardinality(self) -> jax.Array:
+        """(B,) total cardinalities."""
+        return jnp.where(self.kinds > 0, self.cards, 0).sum(axis=1)
+
+    def packed_nbytes(self) -> jax.Array:
+        """(B,) int32: serialized footprint implied by the container kinds
+        (what HBM/storage would hold after compaction) -- the device twin of
+        RoaringBitmap.memory_bytes."""
+        per = jnp.where(
+            self.kinds == KIND_ARRAY, 2 * self.cards,
+            jnp.where(self.kinds == KIND_BITSET, 2 * SLAB16,
+                      jnp.where(self.kinds == KIND_RUN, 4 * self.aux + 2, 0)))
+        overhead = jnp.where(self.kinds > 0, 8, 0)
+        return (per + overhead).sum(axis=1) + 16
+
+    # ====================================================================
+    # construction
+    # ====================================================================
+
+    @staticmethod
+    def from_bitmaps(bitmaps: list[RoaringBitmap],
+                     capacity: int | None = None) -> "RoaringTensor":
+        """Host -> device bridge (not jit-able)."""
+        b = len(bitmaps)
+        cap = capacity or max(1, max((len(bm.keys) for bm in bitmaps),
+                                     default=1))
+        keys = np.full((b, cap), SENTINEL, np.int32)
+        kinds = np.zeros((b, cap), np.int32)
+        cards = np.zeros((b, cap), np.int32)
+        aux = np.zeros((b, cap), np.int32)
+        slab = np.zeros((b, cap, SLAB16), np.uint16)
+        for i, bm in enumerate(bitmaps):
+            if len(bm.keys) > cap:
+                raise ValueError(
+                    f"bitmap {i} has {len(bm.keys)} containers > capacity {cap}")
+            for j, (k, c) in enumerate(zip(bm.keys, bm.containers)):
+                keys[i, j] = k
+                cards[i, j] = c.card
+                if isinstance(c, ArrayContainer):
+                    kinds[i, j] = KIND_ARRAY
+                    slab[i, j, :c.card] = c.values
+                    slab[i, j, c.card:] = 0xFFFF
+                elif isinstance(c, BitsetContainer):
+                    kinds[i, j] = KIND_BITSET
+                    slab[i, j] = c.words.view(np.uint16)
+                else:
+                    kinds[i, j] = KIND_RUN
+                    nr = c.num_runs()
+                    aux[i, j] = nr
+                    flat = c.runs.astype(np.uint16).reshape(-1)
+                    slab[i, j, :2 * nr] = flat
+        return RoaringTensor(jnp.asarray(keys), jnp.asarray(kinds),
+                             jnp.asarray(cards), jnp.asarray(aux),
+                             jnp.asarray(slab))
+
+    def to_bitmaps(self) -> list[RoaringBitmap]:
+        """Device -> host bridge (not jit-able)."""
+        keys = np.asarray(self.keys)
+        kinds = np.asarray(self.kinds)
+        cards = np.asarray(self.cards)
+        aux = np.asarray(self.aux)
+        slab = np.asarray(self.slab)
+        out = []
+        for i in range(self.batch):
+            ks, cs = [], []
+            order = np.argsort(keys[i], kind="stable")
+            for j in order:
+                if kinds[i, j] == KIND_EMPTY:
+                    continue
+                ks.append(int(keys[i, j]))
+                if kinds[i, j] == KIND_ARRAY:
+                    cs.append(ArrayContainer(slab[i, j, :cards[i, j]].copy()))
+                elif kinds[i, j] == KIND_BITSET:
+                    cs.append(BitsetContainer(
+                        slab[i, j].view(np.uint64).copy(), int(cards[i, j])))
+                else:
+                    nr = int(aux[i, j])
+                    runs = slab[i, j, :2 * nr].astype(np.int32).reshape(nr, 2)
+                    cs.append(RunContainer(runs))
+            out.append(RoaringBitmap(ks, cs))
+        return out
+
+    # ====================================================================
+    # bitset-domain decompression (DESIGN.md: "decompress array/run ->
+    # bitset in VMEM, operate in bitset domain")
+    # ====================================================================
+
+    def to_words(self) -> jax.Array:
+        """(B, C, WORDS) uint32 bitset-domain view of every slot."""
+        b, c = self.batch, self.capacity
+        flat_slab = self.slab.reshape(b * c, SLAB16)
+        kinds = self.kinds.reshape(b * c)
+        cards = self.cards.reshape(b * c)
+        aux = self.aux.reshape(b * c)
+
+        # bitset slots: plain bitcast uint16 -> uint32
+        bs_words = slab16_to_words32(flat_slab)
+
+        # array slots: disjoint-contribution scatter (masked to array kind)
+        a_card = jnp.where(kinds == KIND_ARRAY, cards, 0)
+        ar_words = kops.array_to_bitset(flat_slab.astype(jnp.int32), a_card)
+
+        # run slots: delta-coding + prefix sum over the 2^16 universe
+        n_runs = jnp.where(kinds == KIND_RUN, aux, 0)
+        run_words = _runs_to_words(flat_slab, n_runs)
+
+        words = jnp.where((kinds == KIND_BITSET)[:, None], bs_words,
+                          jnp.where((kinds == KIND_ARRAY)[:, None], ar_words,
+                                    jnp.where((kinds == KIND_RUN)[:, None],
+                                              run_words, jnp.uint32(0))))
+        return words.reshape(b, c, WORDS)
+
+    # ====================================================================
+    # set algebra
+    # ====================================================================
+
+    def _align(self, other: "RoaringTensor"):
+        """Static-capacity key merge: returns (out_keys (B, Co), a_words,
+        b_words, hit_a, hit_b) with Co = Ca + Cb."""
+        ka = jnp.where(self.kinds > 0, self.keys, SENTINEL)
+        kb = jnp.where(other.kinds > 0, other.keys, SENTINEL)
+        allk = jnp.sort(jnp.concatenate([ka, kb], axis=1), axis=1)
+        prev = jnp.pad(allk[:, :-1], ((0, 0), (1, 0)),
+                       constant_values=-1)
+        outk = jnp.sort(jnp.where(allk == prev, SENTINEL, allk), axis=1)
+
+        def locate(keys_row, out_row):
+            return jnp.searchsorted(keys_row, out_row).astype(jnp.int32)
+
+        ia = jax.vmap(locate)(ka, outk)
+        ib = jax.vmap(locate)(kb, outk)
+        ia_c = jnp.minimum(ia, ka.shape[1] - 1)
+        ib_c = jnp.minimum(ib, kb.shape[1] - 1)
+        hit_a = (jnp.take_along_axis(ka, ia_c, axis=1) == outk) & \
+                (outk != SENTINEL)
+        hit_b = (jnp.take_along_axis(kb, ib_c, axis=1) == outk) & \
+                (outk != SENTINEL)
+        aw = self.to_words()
+        bw = other.to_words()
+        aw = jnp.take_along_axis(aw, ia_c[:, :, None], axis=1)
+        bw = jnp.take_along_axis(bw, ib_c[:, :, None], axis=1)
+        aw = jnp.where(hit_a[:, :, None], aw, jnp.uint32(0))
+        bw = jnp.where(hit_b[:, :, None], bw, jnp.uint32(0))
+        return outk, aw, bw, hit_a, hit_b
+
+    def _binary(self, other: "RoaringTensor", op: str,
+                backend: str | None = None) -> "RoaringTensor":
+        outk, aw, bw, hit_a, hit_b = self._align(other)
+        b, co = outk.shape
+        rw, cards = kops.bitset_op(aw.reshape(b * co, WORDS),
+                                   bw.reshape(b * co, WORDS), op,
+                                   backend=backend)
+        rw = rw.reshape(b, co, WORDS)
+        cards = cards.reshape(b, co)
+        if op == "and":
+            present = hit_a & hit_b
+        elif op == "or":
+            present = hit_a | hit_b
+        elif op == "xor":
+            present = hit_a | hit_b
+        else:  # andnot
+            present = hit_a
+        present = present & (cards > 0)
+        return repack(jnp.where(present, outk, SENTINEL), cards, rw)
+
+    def __and__(self, other):
+        return self._binary(other, "and")
+
+    def __or__(self, other):
+        return self._binary(other, "or")
+
+    def __xor__(self, other):
+        return self._binary(other, "xor")
+
+    def andnot(self, other):
+        return self._binary(other, "andnot")
+
+    # count-only variants (paper section 5.9) --------------------------------
+    def _binary_card(self, other, op: str, backend=None) -> jax.Array:
+        outk, aw, bw, hit_a, hit_b = self._align(other)
+        b, co = outk.shape
+        cards = kops.bitset_op_card(aw.reshape(b * co, WORDS),
+                                    bw.reshape(b * co, WORDS), op,
+                                    backend=backend).reshape(b, co)
+        return cards.sum(axis=1)
+
+    def and_card(self, other) -> jax.Array:
+        return self._binary_card(other, "and")
+
+    def or_card(self, other) -> jax.Array:
+        return self._binary_card(other, "or")
+
+    def xor_card(self, other) -> jax.Array:
+        return self._binary_card(other, "xor")
+
+    def andnot_card(self, other) -> jax.Array:
+        return self._binary_card(other, "andnot")
+
+    def jaccard(self, other) -> jax.Array:
+        inter = self.and_card(other).astype(jnp.float32)
+        union = (self.cardinality() + other.cardinality()).astype(jnp.float32) \
+            - inter
+        return jnp.where(union > 0, inter / union, 1.0)
+
+    # ====================================================================
+    # membership (paper section 5.6)
+    # ====================================================================
+
+    def contains(self, queries: jax.Array) -> jax.Array:
+        """(B, Q) uint32 queries -> (B, Q) bool."""
+        hi = (queries >> 16).astype(jnp.int32)
+        lo = (queries & 0xFFFF).astype(jnp.int32)
+        ks = jnp.where(self.kinds > 0, self.keys, SENTINEL)
+
+        def locate(keys_row, q_row):
+            return jnp.searchsorted(keys_row, q_row).astype(jnp.int32)
+
+        idx = jax.vmap(locate)(ks, hi)
+        idx_c = jnp.minimum(idx, self.capacity - 1)
+        hit = jnp.take_along_axis(ks, idx_c, axis=1) == hi
+        kind = jnp.take_along_axis(self.kinds, idx_c, axis=1)
+        card = jnp.take_along_axis(self.cards, idx_c, axis=1)
+        aux = jnp.take_along_axis(self.aux, idx_c, axis=1)
+        slab = jnp.take_along_axis(self.slab, idx_c[:, :, None], axis=1)
+
+        # bitset probe (paper's `bt`)
+        word = jnp.take_along_axis(
+            slab, (lo >> 4)[:, :, None], axis=2)[:, :, 0].astype(jnp.int32)
+        in_bitset = ((word >> (lo & 15)) & 1).astype(bool)
+
+        # array probe: binary search in the sorted slab (tail = 0xFFFF)
+        def bsearch(slab_row, lo_row):
+            return jax.vmap(
+                lambda s, q: jnp.searchsorted(s, q.astype(jnp.uint16))
+            )(slab_row, lo_row).astype(jnp.int32)
+
+        pos = jax.vmap(bsearch)(slab, lo)
+        pos_c = jnp.minimum(pos, SLAB16 - 1)
+        at = jnp.take_along_axis(slab, pos_c[:, :, None],
+                                 axis=2)[:, :, 0].astype(jnp.int32)
+        in_array = (pos < card) & (at == lo)
+
+        # run probe: binary search over run starts (even slab positions)
+        starts = slab[:, :, 0::2].astype(jnp.int32)
+        lens = slab[:, :, 1::2].astype(jnp.int32)
+        n_half = SLAB16 // 2
+        starts_m = jnp.where(
+            jnp.arange(n_half)[None, None, :] < aux[:, :, None],
+            starts, jnp.int32(CONTAINER_BITS))
+
+        def rsearch(st_row, lo_row):
+            return jax.vmap(
+                lambda s, q: jnp.searchsorted(s, q, side="right")
+            )(st_row, lo_row).astype(jnp.int32)
+
+        r = jax.vmap(rsearch)(starts_m, lo) - 1
+        r_c = jnp.clip(r, 0, n_half - 1)
+        s_at = jnp.take_along_axis(starts, r_c[:, :, None], axis=2)[:, :, 0]
+        l_at = jnp.take_along_axis(lens, r_c[:, :, None], axis=2)[:, :, 0]
+        in_run = (r >= 0) & (r < aux) & (lo >= s_at) & (lo <= s_at + l_at)
+
+        found = jnp.where(kind == KIND_BITSET, in_bitset,
+                          jnp.where(kind == KIND_ARRAY, in_array,
+                                    jnp.where(kind == KIND_RUN, in_run,
+                                              False)))
+        return hit & found
+
+    # ====================================================================
+    # maintenance
+    # ====================================================================
+
+    def run_optimize(self) -> "RoaringTensor":
+        """Device-side roaring_bitmap_run_optimize: re-derive the cheapest
+        kind including runs (DESIGN.md: runs matter for contiguous attention
+        windows)."""
+        words = self.to_words()
+        b, c = self.batch, self.capacity
+        keys = jnp.where(self.kinds > 0, self.keys, SENTINEL)
+        return repack(keys, jnp.where(self.kinds > 0, self.cards, 0),
+                      words, allow_runs=True)
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def slab16_to_words32(slab: jax.Array) -> jax.Array:
+    """(..., 4096) uint16 -> (..., 2048) uint32 (little-endian packing)."""
+    pairs = slab.reshape(*slab.shape[:-1], SLAB16 // 2, 2)
+    lo = pairs[..., 0].astype(jnp.uint32)
+    hi = pairs[..., 1].astype(jnp.uint32)
+    return lo | (hi << np.uint32(16))
+
+
+def words32_to_slab16(words: jax.Array) -> jax.Array:
+    """(..., 2048) uint32 -> (..., 4096) uint16."""
+    lo = (words & np.uint32(0xFFFF)).astype(jnp.uint16)
+    hi = (words >> np.uint32(16)).astype(jnp.uint16)
+    return jnp.stack([lo, hi], axis=-1).reshape(*words.shape[:-1], SLAB16)
+
+
+def _runs_to_words(flat_slab: jax.Array, n_runs: jax.Array) -> jax.Array:
+    """(N, 4096) uint16 interleaved runs + (N,) run counts -> (N, WORDS)
+    uint32, via delta coding + prefix sum (no data-dependent shapes)."""
+    n = flat_slab.shape[0]
+    starts = flat_slab[:, 0::2].astype(jnp.int32)
+    lens = flat_slab[:, 1::2].astype(jnp.int32)
+    r = SLAB16 // 2
+    valid = jnp.arange(r)[None, :] < n_runs[:, None]
+    s = jnp.where(valid, starts, CONTAINER_BITS)        # OOB drops
+    e = jnp.where(valid, starts + lens + 1, CONTAINER_BITS)
+
+    def one(s_row, e_row):
+        delta = jnp.zeros(CONTAINER_BITS + 1, jnp.int32)
+        delta = delta.at[s_row].add(1, mode="drop")
+        delta = delta.at[e_row].add(-1, mode="drop")
+        occ = (jnp.cumsum(delta[:CONTAINER_BITS]) > 0)
+        bits = occ.reshape(WORDS, 32).astype(jnp.uint32)
+        weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+        return (bits * weights[None, :]).sum(axis=1, dtype=jnp.uint32)
+
+    return jax.vmap(one)(s, e)
+
+
+def _num_runs_words(words: jax.Array) -> jax.Array:
+    """(N, WORDS) uint32 -> (N,) number of runs of consecutive 1s."""
+    shifted = words << np.uint32(1)
+    carry = jnp.pad(words[:, :-1] >> np.uint32(31), ((0, 0), (1, 0)))
+    starts = words & ~(shifted | carry)
+    return kops.popcount(starts, backend="ref")
+
+
+def _extract_runs(words: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(N, WORDS) -> (slab (N, 4096) uint16 interleaved runs, n_runs (N,)).
+    Only meaningful when n_runs <= 2047."""
+    n = words.shape[0]
+    bit_pos = jnp.arange(CONTAINER_BITS)
+    occ = ((words[:, bit_pos >> 5] >> (bit_pos & 31).astype(jnp.uint32))
+           & np.uint32(1)).astype(jnp.int32)
+    prev = jnp.pad(occ[:, :-1], ((0, 0), (1, 0)))
+    nxt = jnp.pad(occ[:, 1:], ((0, 0), (0, 1)))
+    is_start = occ & (1 - prev)
+    is_end = occ & (1 - nxt)
+    r = SLAB16 // 2
+    targets = jnp.arange(1, r + 1)
+
+    def pos_of(flags):
+        cs = jnp.cumsum(flags)
+        return jnp.searchsorted(cs, targets, side="left").astype(jnp.int32)
+
+    spos = jax.vmap(pos_of)(is_start)
+    epos = jax.vmap(pos_of)(is_end)
+    n_runs = is_start.sum(axis=1).astype(jnp.int32)
+    valid = targets[None, :] <= n_runs[:, None]
+    starts16 = jnp.where(valid, spos, 0).astype(jnp.uint16)
+    lens16 = jnp.where(valid, epos - spos, 0).astype(jnp.uint16)
+    slab = jnp.stack([starts16, lens16], axis=-1).reshape(n, SLAB16)
+    return slab, n_runs
+
+
+def repack(keys: jax.Array, cards: jax.Array, words: jax.Array,
+           allow_runs: bool = False) -> RoaringTensor:
+    """Re-derive canonical kinds/slabs from bitset-domain words.
+
+    keys: (B, C) int32 with SENTINEL for empty; cards: (B, C); words:
+    (B, C, WORDS).  Mirrors the paper's result-kind policy: array if
+    card <= 4096 else bitset; runs only when allow_runs (run_optimize).
+    Slots are re-sorted by key so searchsorted lookups stay valid.
+    """
+    b, c = keys.shape
+    empty = (keys == SENTINEL) | (cards == 0)
+    keys = jnp.where(empty, SENTINEL, keys)
+    cards = jnp.where(empty, 0, cards)
+
+    kind = jnp.where(empty, KIND_EMPTY,
+                     jnp.where(cards <= ARRAY_MAX, KIND_ARRAY, KIND_BITSET))
+    aux = jnp.zeros_like(cards)
+
+    flat_words = words.reshape(b * c, WORDS)
+    # array extraction (clip pads 65536 -> 0xFFFF for sorted-tail invariant)
+    vals, _ = kops.bitset_to_array(flat_words)
+    arr_slab = jnp.minimum(vals, CONTAINER_BITS - 1).astype(jnp.uint16) \
+        .reshape(b, c, SLAB16)
+    bs_slab = words32_to_slab16(words)
+    slab = jnp.where((kind == KIND_ARRAY)[:, :, None], arr_slab, bs_slab)
+
+    if allow_runs:
+        n_runs = _num_runs_words(flat_words).reshape(b, c)
+        run_bytes = 4 * n_runs + 2
+        arr_bytes = jnp.where(cards <= ARRAY_MAX, 2 * cards, 1 << 30)
+        bs_bytes = 2 * SLAB16
+        best_run = (n_runs <= 2047) & (run_bytes < arr_bytes) & \
+                   (run_bytes < bs_bytes) & ~empty
+        run_slab, _ = _extract_runs(flat_words)
+        run_slab = run_slab.reshape(b, c, SLAB16)
+        slab = jnp.where(best_run[:, :, None], run_slab, slab)
+        kind = jnp.where(best_run, KIND_RUN, kind)
+        aux = jnp.where(best_run, n_runs, aux)
+
+    slab = jnp.where((kind == KIND_EMPTY)[:, :, None], jnp.uint16(0), slab)
+
+    # canonicalize slot order (empties at the end)
+    order = jnp.argsort(keys, axis=1, stable=True)
+    keys = jnp.take_along_axis(keys, order, axis=1)
+    kind = jnp.take_along_axis(kind, order, axis=1)
+    cards = jnp.take_along_axis(cards, order, axis=1)
+    aux = jnp.take_along_axis(aux, order, axis=1)
+    slab = jnp.take_along_axis(slab, order[:, :, None], axis=1)
+    return RoaringTensor(keys, kind, cards, aux, slab)
+
+
+# ---------------------------------------------------------------------------
+# attention-mask utilities (serving integration)
+# ---------------------------------------------------------------------------
+
+def block_mask_words(bitmaps: list[RoaringBitmap], n_blocks: int) -> jax.Array:
+    """Host bridge: per-sequence visible-block sets -> (B, ceil(n/32)) uint32
+    words for the block-sparse attention kernel.  Universe must fit one
+    container (n_blocks <= 65536)."""
+    assert n_blocks <= CONTAINER_BITS
+    n_words = max(1, (n_blocks + 31) // 32)
+    out = np.zeros((len(bitmaps), n_words), np.uint32)
+    for i, bm in enumerate(bitmaps):
+        vals = bm.to_array()
+        vals = vals[vals < n_blocks]
+        np.bitwise_or.at(out[i], vals >> 5,
+                         np.uint32(1) << (vals & np.uint32(31)))
+    return jnp.asarray(out)

@@ -1,0 +1,63 @@
+"""A small inverted index on Roaring bitmaps -- the paper's motivating
+application (section 1: "inverted indexes map query terms to document
+identifiers").  Used by examples/analytics_index.py and the benchmarks.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import RoaringBitmap
+
+
+class InvertedIndex:
+    def __init__(self):
+        self.postings: dict[str, RoaringBitmap] = {}
+        self.n_docs = 0
+
+    def add_document(self, doc_id: int, terms) -> None:
+        self.n_docs = max(self.n_docs, doc_id + 1)
+        for t in set(terms):
+            bm = self.postings.get(t)
+            if bm is None:
+                bm = self.postings[t] = RoaringBitmap()
+            bm.add(doc_id)
+
+    def build(self, docs: list[list[str]]) -> "InvertedIndex":
+        # columnar build: term -> sorted doc ids, one from_values each
+        by_term: dict[str, list[int]] = {}
+        for i, terms in enumerate(docs):
+            for t in set(terms):
+                by_term.setdefault(t, []).append(i)
+        self.n_docs = len(docs)
+        for t, ids in by_term.items():
+            self.postings[t] = RoaringBitmap.from_values(
+                np.asarray(ids, np.uint32))
+        return self
+
+    def optimize(self):
+        for bm in self.postings.values():
+            bm.run_optimize()
+        return self
+
+    # query surface ------------------------------------------------------
+    def _get(self, term: str) -> RoaringBitmap:
+        return self.postings.get(term, RoaringBitmap())
+
+    def query_and(self, *terms) -> RoaringBitmap:
+        return RoaringBitmap.and_many([self._get(t) for t in terms])
+
+    def query_or(self, *terms) -> RoaringBitmap:
+        return RoaringBitmap.or_many([self._get(t) for t in terms])
+
+    def query_andnot(self, keep: str, drop: str) -> RoaringBitmap:
+        return self._get(keep) - self._get(drop)
+
+    def count_and(self, a: str, b: str) -> int:
+        return self._get(a).and_card(self._get(b))  # fast count, sec 5.9
+
+    def jaccard(self, a: str, b: str) -> float:
+        return self._get(a).jaccard(self._get(b))
+
+    def memory_bytes(self) -> int:
+        return sum(bm.memory_bytes() for bm in self.postings.values())

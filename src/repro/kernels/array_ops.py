@@ -1,0 +1,104 @@
+"""Vectorized sorted-array intersection (paper section 4.2) as a Pallas TPU
+kernel: the pcmpistrm analogue.
+
+The paper divides both arrays into blocks and uses the SSE4.1 string-compare
+instruction for an all-vs-all equality test between two blocks, stepping
+blocks by comparing block maxima (Algorithm 1).  The TPU analogue of the
+all-vs-all compare is a broadcast equality outer product on the VPU; the
+block-maxima stepping becomes a *skip predicate*: the grid is static, but a
+tile pair whose value ranges cannot overlap is skipped with @pl.when, which
+on TPU elides the compute exactly like the paper's merge stepping avoids
+non-matching block pairs (sortedness makes the ranges available for free).
+
+Output is A-side: a 0/1 membership mask over A's slots plus the intersection
+cardinality.  Difference (section 4.4) is the complement of this mask on
+valid slots (the paper builds the difference by OR-accumulating intersection
+masks and negating).  Union / symmetric difference (sections 4.3/4.5) use the
+merge + dedup oracles in ref.py, or the bitset-domain plan in core.tensor.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import ARRAY_CAP, CONTAINER_BITS
+
+TILE = 512  # values per compare tile; (TILE, TILE) i32 eq-matrix = 1 MB
+
+
+def _intersect_kernel(a_ref, a_card_ref, b_ref, b_card_ref,
+                      mask_ref, count_ref):
+    a = a_ref[...]                                   # (1, ARRAY_CAP)
+    b = b_ref[...]
+    a_card, b_card = a_card_ref[0, 0], b_card_ref[0, 0]
+    pos = jax.lax.broadcasted_iota(jnp.int32, (1, ARRAY_CAP), 1)
+    a_valid = pos < a_card
+    b_valid = pos < b_card
+    # invalid slots get sentinel values that can never match
+    a_v = jnp.where(a_valid, a, np.int32(CONTAINER_BITS))
+    b_v = jnp.where(b_valid, b, np.int32(CONTAINER_BITS + 1))
+
+    n_tiles = ARRAY_CAP // TILE
+    mask = jnp.zeros((1, ARRAY_CAP), jnp.int32)
+    for i in range(n_tiles):
+        at = jax.lax.dynamic_slice(a_v, (0, i * TILE), (1, TILE))
+        a_min, a_max = at[0, 0], at[0, TILE - 1]
+        hit = jnp.zeros((1, TILE), jnp.int32)
+        for j in range(n_tiles):
+            bt = jax.lax.dynamic_slice(b_v, (0, j * TILE), (1, TILE))
+            b_min, b_max = bt[0, 0], bt[0, TILE - 1]
+            # Algorithm 1's block-maxima stepping as a skip predicate:
+            # sorted tiles whose ranges don't overlap can't match.
+            overlap = (a_min <= b_max) & (b_min <= a_max)
+            eq_any = jnp.where(
+                overlap,
+                (at[0, :, None] == bt[0, None, :]).any(axis=-1)
+                .astype(jnp.int32)[None, :],
+                jnp.zeros((1, TILE), jnp.int32))
+            hit = hit | eq_any
+        mask = jax.lax.dynamic_update_slice(mask, hit, (0, i * TILE))
+    mask_ref[...] = mask
+    count_ref[...] = mask.sum(axis=-1, dtype=jnp.int32)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def array_intersect(a_vals: jax.Array, a_card: jax.Array,
+                    b_vals: jax.Array, b_card: jax.Array, *,
+                    interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
+    """Batched sorted-array intersection.
+
+    a_vals/b_vals: (N, ARRAY_CAP) int32 (sorted; slots >= card ignored)
+    returns: (mask (N, ARRAY_CAP) int32 over A's slots, count (N,) int32)
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n = a_vals.shape[0]
+    vspec = pl.BlockSpec((1, ARRAY_CAP), lambda i: (i, 0))
+    cspec = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    mask, count = pl.pallas_call(
+        _intersect_kernel,
+        grid=(n,),
+        in_specs=[vspec, cspec, vspec, cspec],
+        out_specs=[vspec, cspec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, ARRAY_CAP), jnp.int32),
+            jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(a_vals.astype(jnp.int32), a_card.astype(jnp.int32)[:, None],
+      b_vals.astype(jnp.int32), b_card.astype(jnp.int32)[:, None])
+    return mask, count[:, 0]
+
+
+def array_difference(a_vals, a_card, b_vals, b_card, *, interpret=None):
+    """Section 4.4: A \\ B = valid slots of A minus the intersection mask."""
+    mask, inter = array_intersect(a_vals, a_card, b_vals, b_card,
+                                  interpret=interpret)
+    valid = (jnp.arange(ARRAY_CAP)[None, :] < a_card[:, None]).astype(jnp.int32)
+    keep = valid * (1 - mask)
+    return keep, (a_card.astype(jnp.int32) - inter)

@@ -1,0 +1,114 @@
+"""Array-container <-> bitset-container conversion kernels (paper sections
+3.1 / 3.2), adapted for TPU.
+
+section 3.2 (x64): set bits of a bitset at indexes given by an array, with
+branchless cardinality tracking (`bts` + `sbb`, or the XOR trick).  TPU has
+no scatter inside a kernel, but Roaring array containers hold *distinct*
+values, so each (word, bit) contribution is disjoint and OR == +:
+the scatter becomes a masked compare-and-accumulate over word indexes --
+a shape the VPU executes well.  The cardinality delta uses exactly the
+paper's XOR trick: popcount(old ^ new).
+
+section 3.1 (bitset -> array extraction, blsi/tzcnt loop): the TPU idiom is a
+prefix sum over bit occupancy; it needs a 65536-long cumsum and binary
+search, which XLA already fuses well outside a kernel -- see
+`repro.kernels.ref.bitset_to_array` (used directly by ops.py; it is the
+repack path, not the hot loop).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.harley_seal import harley_seal_reduce
+from repro.kernels.ref import ARRAY_CAP, WORDS
+
+VALUE_TILE = 512  # values processed per inner step: (WORDS, 512) i32 = 4 MB
+
+
+def _a2b_body(vals, card):
+    """(1, ARRAY_CAP) int32 values + scalar card -> (1, WORDS) uint32."""
+    valid = jax.lax.broadcasted_iota(jnp.int32, (1, ARRAY_CAP), 1) < card
+    widx = jnp.where(valid, vals >> 5, WORDS)          # OOB -> contributes 0
+    bit = jnp.where(valid,
+                    np.uint32(1) << (vals & 31).astype(jnp.uint32),
+                    np.uint32(0))
+    wids = jax.lax.broadcasted_iota(jnp.int32, (1, WORDS, 1), 1)
+    acc = jnp.zeros((1, WORDS), jnp.uint32)
+    for t in range(ARRAY_CAP // VALUE_TILE):
+        wv = jax.lax.dynamic_slice(widx, (0, t * VALUE_TILE), (1, VALUE_TILE))
+        bv = jax.lax.dynamic_slice(bit, (0, t * VALUE_TILE), (1, VALUE_TILE))
+        eq = wids == wv[:, None, :]                    # (1, WORDS, TILE)
+        acc = acc + jnp.where(eq, bv[:, None, :],
+                              np.uint32(0)).sum(axis=-1, dtype=jnp.uint32)
+    return acc
+
+
+def _a2b_kernel(vals_ref, card_ref, words_ref):
+    words_ref[...] = _a2b_body(vals_ref[...], card_ref[0, 0])
+
+
+def _set_many_kernel(init_ref, vals_ref, card_ref, words_ref, delta_ref):
+    """Fused section 3.2: new = old | onehot(values); delta = pc(old ^ new)."""
+    old = init_ref[...]
+    add = _a2b_body(vals_ref[...], card_ref[0, 0])
+    new = old | add
+    words_ref[...] = new
+    changed = old ^ new
+    delta_ref[...] = harley_seal_reduce(
+        changed.reshape(1, WORDS // 16, 16))[:, None]
+
+
+def _specs():
+    return dict(
+        vals=pl.BlockSpec((1, ARRAY_CAP), lambda i: (i, 0)),
+        card=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        words=pl.BlockSpec((1, WORDS), lambda i: (i, 0)),
+        delta=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def array_to_bitset(values: jax.Array, card: jax.Array, *,
+                    interpret: bool | None = None) -> jax.Array:
+    """(N, ARRAY_CAP) int32 sorted values, (N,) cards -> (N, WORDS) uint32."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n = values.shape[0]
+    s = _specs()
+    return pl.pallas_call(
+        _a2b_kernel,
+        grid=(n,),
+        in_specs=[s["vals"], s["card"]],
+        out_specs=s["words"],
+        out_shape=jax.ShapeDtypeStruct((n, WORDS), jnp.uint32),
+        interpret=interpret,
+    )(values.astype(jnp.int32), card.astype(jnp.int32)[:, None])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitset_set_many(words: jax.Array, values: jax.Array, card: jax.Array, *,
+                    interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
+    """OR an array container into a bitset container, returning
+    (new words (N, WORDS), cardinality delta (N,)) -- section 3.2 fused."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n = words.shape[0]
+    s = _specs()
+    new, delta = pl.pallas_call(
+        _set_many_kernel,
+        grid=(n,),
+        in_specs=[s["words"], s["vals"], s["card"]],
+        out_specs=[s["words"], s["delta"]],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, WORDS), jnp.uint32),
+            jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(words, values.astype(jnp.int32), card.astype(jnp.int32)[:, None])
+    return new, delta[:, 0]

@@ -1,0 +1,131 @@
+"""Roaring-masked block-sparse decode attention (Pallas TPU kernel).
+
+This is the framework integration of the paper's data structure: for
+long-context serving the set of *visible key blocks* per sequence is an
+integer set over [0, seq/block_size) -- exactly one Roaring bitset container
+row (a 4096-block universe covers 512 k tokens at block_size 128).  The
+kernel walks the KV cache block by block, tests the container bit for each
+block (the paper's section 3.2 `bt` primitive), and *skips all compute and
+(on TPU) the HBM traffic* for absent blocks via @pl.when -- giving
+sub-quadratic attention whose cost scales with the bitmap cardinality, not
+the sequence length.
+
+Flash-attention-style online softmax keeps the accumulator in VMEM scratch
+across the KV-block grid axis (TPU grids iterate minor-axis sequentially, so
+scratch carries state).  GQA is handled by folding query heads into
+(kv_head, group) tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_SIZE = 128
+_NEG = np.float32(-1e30)
+
+
+def _bsa_kernel(mask_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref,
+                acc_ref, m_ref, l_ref, *, block_size, sm_scale, hkv, groups,
+                softcap):
+    blk = pl.program_id(1)
+    nblk = pl.num_programs(1)
+
+    @pl.when(blk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros(acc_ref.shape, acc_ref.dtype)
+        m_ref[...] = jnp.full(m_ref.shape, _NEG, m_ref.dtype)
+        l_ref[...] = jnp.zeros(l_ref.shape, l_ref.dtype)
+
+    word = mask_ref[0, blk >> 5]
+    bit = (word >> (blk & 31).astype(jnp.uint32)) & np.uint32(1)
+    kvl = kvlen_ref[0, 0]
+    start = blk * block_size
+
+    @pl.when((bit == np.uint32(1)) & (start < kvl))
+    def _compute():
+        d = q_ref.shape[-1]
+        q = q_ref[0].reshape(hkv, groups, d).astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)           # (hkv, bs, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32) * sm_scale   # (hkv, g, bs)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        pos = start + jax.lax.broadcasted_iota(jnp.int32, (1, 1, block_size), 2)
+        s = jnp.where(pos < kvl, s, _NEG)
+        m_old = m_ref[...]
+        m_new = jnp.maximum(m_old, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_old - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+        pv = jax.lax.dot_general(
+            p, v, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)              # (hkv, g, d)
+        acc_ref[...] = acc_ref[...] * alpha[..., None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(blk == nblk - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe = jnp.where(l > 0, l, 1.0)
+        out = acc_ref[...] / safe[..., None]
+        out = jnp.where((l > 0)[..., None], out, 0.0)
+        o_ref[...] = out.reshape(1, hkv * groups, q_ref.shape[-1]) \
+            .astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_size", "sm_scale", "softcap", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     block_mask_words: jax.Array, kv_len: jax.Array, *,
+                     block_size: int = DEFAULT_BLOCK_SIZE,
+                     sm_scale: float | None = None,
+                     softcap: float = 0.0,
+                     interpret: bool | None = None) -> jax.Array:
+    """Single-token decode attention with a Roaring block-visibility mask.
+
+    q: (B, H, D); k, v: (B, Hkv, S, D); block_mask_words: (B, ceil(S/bs/32))
+    uint32 Roaring bitset words; kv_len: (B,) int32.  Returns (B, H, D).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, h, d = q.shape
+    _, hkv, s, _ = k.shape
+    assert s % block_size == 0, (s, block_size)
+    nblk = s // block_size
+    groups = h // hkv
+    scale = (d ** -0.5) if sm_scale is None else sm_scale
+    words = block_mask_words.shape[1]
+    assert words * 32 >= nblk, (words, nblk)
+
+    grid = (b, nblk)
+    out = pl.pallas_call(
+        functools.partial(_bsa_kernel, block_size=block_size,
+                          sm_scale=scale, hkv=hkv, groups=groups,
+                          softcap=softcap),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, words), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, h, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, hkv, block_size, d), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, hkv, block_size, d), lambda i, j: (i, 0, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((hkv, groups, d), jnp.float32),
+            pltpu.VMEM((hkv, groups), jnp.float32),
+            pltpu.VMEM((hkv, groups), jnp.float32),
+        ],
+        interpret=interpret,
+    )(block_mask_words, kv_len.astype(jnp.int32)[:, None], q, k, v)
+    return out

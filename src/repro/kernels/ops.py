@@ -1,0 +1,93 @@
+"""Public jit'd wrappers over the Pallas kernels, with a backend switch.
+
+``backend``:
+  * "pallas" -- always run the Pallas kernel (interpret=True off-TPU);
+  * "ref"    -- always run the pure-jnp oracle (fast under jit on CPU);
+  * "auto"   -- Pallas on TPU, oracle elsewhere (default: the oracle *is*
+                the correct lowering for CPU tests, and the kernels are the
+                TPU target validated in interpret mode by the test suite).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import array_ops as _array_ops
+from repro.kernels import bitset_convert as _convert
+from repro.kernels import bitset_ops as _bitset_ops
+from repro.kernels import block_sparse_attn as _bsa
+from repro.kernels import harley_seal as _hs
+from repro.kernels import ref
+
+Backend = str
+_DEFAULT: Backend = "auto"
+
+
+def set_default_backend(backend: Backend) -> None:
+    global _DEFAULT
+    assert backend in ("auto", "pallas", "ref")
+    _DEFAULT = backend
+
+
+def _use_pallas(backend: Backend | None) -> bool:
+    b = _DEFAULT if backend is None else backend
+    if b == "pallas":
+        return True
+    if b == "ref":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def popcount(words: jax.Array, *, backend: Backend | None = None) -> jax.Array:
+    if _use_pallas(backend):
+        return _hs.popcount(words)
+    return ref.popcount_words(words)
+
+
+def bitset_op(a, b, op: str, *, backend: Backend | None = None):
+    if _use_pallas(backend):
+        return _bitset_ops.bitset_op(a, b, op)
+    return ref.bitset_op(a, b, op)
+
+
+def bitset_op_card(a, b, op: str, *, backend: Backend | None = None):
+    if _use_pallas(backend):
+        return _bitset_ops.bitset_op_card(a, b, op)
+    return ref.bitset_op_card(a, b, op)
+
+
+def array_to_bitset(values, card, *, backend: Backend | None = None):
+    if _use_pallas(backend):
+        return _convert.array_to_bitset(values, card)
+    return ref.array_to_bitset(values, card)
+
+
+def bitset_set_many(words, values, card, *, backend: Backend | None = None):
+    if _use_pallas(backend):
+        return _convert.bitset_set_many(words, values, card)
+    return ref.bitset_set_many(words, values, card)
+
+
+def bitset_to_array(words):
+    """Extraction is a pure-jnp path on all backends (see bitset_convert)."""
+    return ref.bitset_to_array(words)
+
+
+def array_intersect(a_vals, a_card, b_vals, b_card, *,
+                    backend: Backend | None = None):
+    if _use_pallas(backend):
+        return _array_ops.array_intersect(a_vals, a_card, b_vals, b_card)
+    return ref.array_intersect_mask(a_vals, a_card, b_vals, b_card)
+
+
+def decode_attention(q, k, v, block_mask_words, kv_len, *,
+                     block_size: int = 128, sm_scale=None, softcap: float = 0.0,
+                     backend: Backend | None = None):
+    if _use_pallas(backend):
+        return _bsa.decode_attention(q, k, v, block_mask_words, kv_len,
+                                     block_size=block_size, sm_scale=sm_scale,
+                                     softcap=softcap)
+    return ref.block_sparse_attention_decode(
+        q, k, v, block_mask_words, kv_len,
+        block_size=block_size, sm_scale=sm_scale, softcap=softcap)

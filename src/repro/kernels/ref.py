@@ -1,0 +1,219 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Device bitset convention: one Roaring bitset container = 2048 x uint32 words;
+bit ``i`` of the container lives in ``words[i >> 5]`` at position ``i & 31``.
+(The host path uses 1024 x uint64; the uint32 choice matches the TPU VPU's
+32-bit lanes -- see DESIGN.md section 3.)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+WORDS = 2048            # uint32 words per 2^16-bit container
+CONTAINER_BITS = 1 << 16
+ARRAY_CAP = 4096        # fixed capacity of the array-value slab
+
+_M1 = jnp.uint32(0x55555555)
+_M2 = jnp.uint32(0x33333333)
+_M4 = jnp.uint32(0x0F0F0F0F)
+_H01 = jnp.uint32(0x01010101)
+
+
+def popcount_u32(v: jax.Array) -> jax.Array:
+    """SWAR per-lane popcount of uint32 values -> int32."""
+    v = v.astype(jnp.uint32)
+    v = v - ((v >> jnp.uint32(1)) & _M1)
+    v = (v & _M2) + ((v >> jnp.uint32(2)) & _M2)
+    v = (v + (v >> jnp.uint32(4))) & _M4
+    return ((v * _H01) >> jnp.uint32(24)).astype(jnp.int32)
+
+
+def popcount_words(words: jax.Array) -> jax.Array:
+    """(..., WORDS) uint32 -> (...,) int32 cardinality (section 4.1.1 oracle)."""
+    return popcount_u32(words).sum(axis=-1).astype(jnp.int32)
+
+
+def bitset_op(a: jax.Array, b: jax.Array, op: str) -> tuple[jax.Array, jax.Array]:
+    """(..., WORDS) x2 -> (result words, cardinality).  Section 4.1.2 oracle."""
+    a = a.astype(jnp.uint32)
+    b = b.astype(jnp.uint32)
+    if op == "and":
+        r = a & b
+    elif op == "or":
+        r = a | b
+    elif op == "xor":
+        r = a ^ b
+    elif op == "andnot":
+        r = a & ~b
+    else:
+        raise ValueError(op)
+    return r, popcount_words(r)
+
+
+def bitset_op_card(a: jax.Array, b: jax.Array, op: str) -> jax.Array:
+    """Count-only variant (paper section 5.9): never materializes ``r``
+    outside registers."""
+    return bitset_op(a, b, op)[1]
+
+
+def array_to_bitset(values: jax.Array, card: jax.Array) -> jax.Array:
+    """Sorted uint16-valued (N, ARRAY_CAP) int32 arrays (first ``card`` entries
+    valid) -> (N, WORDS) uint32 bitsets.  Oracle for the section 3.2 analogue.
+
+    Uses the disjoint-contribution sum trick: values are distinct, so each
+    (word, bit) pair is hit at most once and OR == +.
+    """
+    n = values.shape[0]
+    valid = (jnp.arange(ARRAY_CAP)[None, :] < card[:, None])
+    word_idx = jnp.where(valid, values >> 5, WORDS)  # out-of-range drops
+    bit = jnp.where(valid, jnp.uint32(1) << (values & 31).astype(jnp.uint32),
+                    jnp.uint32(0))
+
+    def one(widx, b):
+        return jnp.zeros(WORDS, jnp.uint32).at[widx].add(b, mode="drop")
+
+    return jax.vmap(one)(word_idx, bit)
+
+
+def bitset_set_many(words: jax.Array, values: jax.Array,
+                    card: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """OR an array container into an existing bitset, tracking the cardinality
+    delta via the paper's XOR trick (section 3.2).  Returns (words, delta)."""
+    add = array_to_bitset(values, card)
+    new = words | add
+    delta = popcount_words(words ^ new)
+    return new, delta
+
+
+def bitset_to_array(words: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(N, WORDS) uint32 -> ((N, ARRAY_CAP) int32 sorted values, (N,) card).
+
+    Oracle for the section 3.1 extraction.  Positions beyond the cardinality
+    are padded with CONTAINER_BITS (an impossible value).  Only meaningful
+    when card <= ARRAY_CAP (the Roaring array-container invariant); extra
+    values are dropped, matching the fixed-capacity device layout.
+    """
+    n = words.shape[0]
+    bit_pos = jnp.arange(CONTAINER_BITS)
+    bits = ((words[:, bit_pos >> 5] >> (bit_pos & 31).astype(jnp.uint32))
+            & jnp.uint32(1)).astype(jnp.int32)
+    csum = jnp.cumsum(bits, axis=-1)
+    card = csum[:, -1]
+    # value k of the output = first position whose running count is k+1
+    targets = jnp.arange(1, ARRAY_CAP + 1)
+
+    def one(cs):
+        return jnp.searchsorted(cs, targets, side="left").astype(jnp.int32)
+
+    vals = jax.vmap(one)(csum)
+    vals = jnp.where(targets[None, :] <= card[:, None], vals,
+                     jnp.int32(CONTAINER_BITS))
+    return vals, card.astype(jnp.int32)
+
+
+def array_intersect_mask(a_vals: jax.Array, a_card: jax.Array,
+                         b_vals: jax.Array, b_card: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """All-vs-all membership (the pcmpistrm analogue, section 4.2 oracle).
+
+    Inputs: (N, ARRAY_CAP) int32 sorted values + (N,) cards.
+    Returns (mask (N, ARRAY_CAP) bool over A's slots, counts (N,) int32).
+    """
+    va = (jnp.arange(ARRAY_CAP)[None, :] < a_card[:, None])
+    vb = (jnp.arange(ARRAY_CAP)[None, :] < b_card[:, None])
+    eq = (a_vals[:, :, None] == b_vals[:, None, :]) & vb[:, None, :]
+    mask = eq.any(axis=-1) & va
+    return mask, mask.sum(axis=-1).astype(jnp.int32)
+
+
+def merge_sorted(a_vals: jax.Array, a_card: jax.Array,
+                 b_vals: jax.Array, b_card: jax.Array,
+                 cap: int = 2 * ARRAY_CAP) -> tuple[jax.Array, jax.Array]:
+    """Branch-free merge of two padded sorted arrays (section 4.3 oracle for
+    the sorting-network merger): returns (merged (N, cap) int32 with PAD at
+    the tail, total count).  PAD = CONTAINER_BITS."""
+    pad = jnp.int32(CONTAINER_BITS)
+    a = jnp.where(jnp.arange(a_vals.shape[1])[None] < a_card[:, None],
+                  a_vals, pad)
+    b = jnp.where(jnp.arange(b_vals.shape[1])[None] < b_card[:, None],
+                  b_vals, pad)
+    merged = jnp.sort(jnp.concatenate([a, b], axis=-1), axis=-1)[:, :cap]
+    return merged, (a_card + b_card).astype(jnp.int32)
+
+
+def dedup_sorted(merged: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Union-style dedup (section 4.3 store_unique oracle): keep one copy of
+    each duplicated value; stable-compacts to the left, PAD at the tail."""
+    pad = jnp.int32(CONTAINER_BITS)
+    prev = jnp.concatenate(
+        [jnp.full((merged.shape[0], 1), -1, merged.dtype), merged[:, :-1]],
+        axis=-1)
+    keep = (merged != prev) & (merged < pad)
+    return _compact(merged, keep)
+
+
+def xor_dedup_sorted(merged: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric-difference dedup (section 4.5 oracle): drop values that occur
+    twice entirely (inputs are sets, so multiplicity is 1 or 2)."""
+    pad = jnp.int32(CONTAINER_BITS)
+    prev = jnp.concatenate(
+        [jnp.full((merged.shape[0], 1), -1, merged.dtype), merged[:, :-1]],
+        axis=-1)
+    nxt = jnp.concatenate(
+        [merged[:, 1:], jnp.full((merged.shape[0], 1), -2, merged.dtype)],
+        axis=-1)
+    keep = (merged != prev) & (merged != nxt) & (merged < pad)
+    return _compact(merged, keep)
+
+
+def _compact(vals: jax.Array, keep: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Stable left-compaction of kept values; the TPU-idiomatic stream
+    compaction is a prefix sum + scatter."""
+    pad = jnp.int32(CONTAINER_BITS)
+    rank = jnp.cumsum(keep.astype(jnp.int32), axis=-1) - 1
+    count = jnp.where(keep.any(-1), rank[:, -1] + 1, 0).astype(jnp.int32)
+    dst = jnp.where(keep, rank, vals.shape[1])  # dropped -> OOB
+
+    def one(v, d):
+        return jnp.full(vals.shape[1], pad, vals.dtype).at[d].set(
+            v, mode="drop")
+
+    return jax.vmap(one)(vals, dst), count
+
+
+# ---------------------------------------------------------------------------
+# Roaring-masked block-sparse attention (decode step) oracle
+# ---------------------------------------------------------------------------
+
+def block_sparse_attention_decode(
+        q: jax.Array,            # (B, H, D)
+        k: jax.Array,            # (B, Hkv, S, D)
+        v: jax.Array,            # (B, Hkv, S, D)
+        block_mask_words: jax.Array,  # (B, n_blocks/32) uint32 roaring bitset
+        kv_len: jax.Array,       # (B,) int32 valid KV length
+        block_size: int = 128,
+        sm_scale: float | None = None,
+        softcap: float = 0.0) -> jax.Array:
+    """Reference decode attention where key/value *blocks* are visible only if
+    their bit is set in a Roaring bitset container row.  Returns (B, H, D)."""
+    b_, h, d = q.shape
+    _, hkv, s, _ = k.shape
+    n_blocks = s // block_size
+    scale = (d ** -0.5) if sm_scale is None else sm_scale
+    groups = h // hkv
+    qg = q.reshape(b_, hkv, groups, d)
+    scores = jnp.einsum("bkgd,bksd->bkgs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap:
+        scores = softcap * jnp.tanh(scores / softcap)
+    blk = jnp.arange(s) // block_size
+    visible = ((block_mask_words[:, blk >> 5] >> (blk & 31).astype(jnp.uint32))
+               & jnp.uint32(1)).astype(bool)
+    visible &= jnp.arange(s)[None, :] < kv_len[:, None]
+    scores = jnp.where(visible[:, None, None, :], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    w = jnp.where(jnp.isnan(w), 0.0, w)  # fully-masked rows -> zero output
+    out = jnp.einsum("bkgs,bksd->bkgd", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b_, h, d).astype(q.dtype)

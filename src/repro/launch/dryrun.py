@@ -1,0 +1,220 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this lowers the real step function (train_step / prefill /
+decode_step) with ShapeDtypeStruct inputs under the production mesh,
+compiles it, and records memory_analysis / cost_analysis / the collective
+schedule parsed from the optimized HLO.  Failures here are sharding bugs.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh both --out results/dryrun
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b \
+        --shape train_4k --mesh single
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as C
+from repro.dist import sharding as SH
+from repro.launch import roofline as R
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.train import train_step as TS
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+
+def lower_cell(cfg, shape_name: str, mesh, *, compile_: bool = True,
+               hlo_path: str | None = None):
+    """Returns a result dict for one (arch, shape, mesh) cell."""
+    spec = C.SHAPES[shape_name]
+    chips = int(np.prod(mesh.devices.shape))
+    t0 = time.monotonic()
+
+    pdp = getattr(cfg, "pure_dp", False)
+    from repro.dist import ctx as _ctx
+    _ctx.set_pure_dp(pdp)
+    param_shapes = T.param_shapes(cfg)
+    p_shard = SH.param_shardings(param_shapes, mesh, pure_dp=pdp)
+    batch_shapes = C.input_specs(cfg, shape_name)
+    b_shard = SH.batch_shardings(batch_shapes, mesh, pure_dp=pdp)
+
+    if spec.step == "train":
+        opt_shapes = jax.eval_shape(adamw.init_state, param_shapes)
+        o_shard = jax.tree.map(
+            lambda l, s=None: None, opt_shapes)  # placeholder, built below
+        # optimizer state mirrors params; step counter replicated
+        o_shard = {
+            "m": SH.param_shardings(opt_shapes["m"], mesh, pure_dp=pdp),
+            "v": SH.param_shardings(opt_shapes["v"], mesh, pure_dp=pdp),
+            "step": SH.replicated(mesh),
+        }
+        opt_cfg = adamw.AdamWConfig()
+        fn = TS.make_train_step(cfg, opt_cfg)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, None))
+        args = (_sds(param_shapes), _sds(opt_shapes), batch_shapes)
+        model_flops = R.model_flops_train(cfg, spec.seq_len,
+                                          spec.global_batch)
+    elif spec.step == "prefill":
+        fn = lambda params, batch: T.prefill(params, batch, cfg,
+                                             s_max=spec.seq_len)
+        jitted = jax.jit(fn, in_shardings=(p_shard, b_shard))
+        args = (_sds(param_shapes), batch_shapes)
+        model_flops = R.model_flops_prefill(cfg, spec.seq_len,
+                                            spec.global_batch)
+    else:  # decode
+        state_shapes = C.decode_state_specs(cfg, shape_name)
+        s_shard = SH.decode_state_shardings(state_shapes, mesh, pure_dp=pdp)
+        inputs = C.input_specs(cfg, shape_name)
+        tok_shard = SH.batch_shardings({"tokens": inputs["tokens"]},
+                                       mesh, pure_dp=pdp)["tokens"]
+        if "block_mask_words" in inputs:
+            fn = lambda params, state, tokens, mask: T.decode_step(
+                params, state, tokens, cfg, mask)
+            mask_shard = SH.batch_shardings(
+                {"m": inputs["block_mask_words"]}, mesh)["m"]
+            jitted = jax.jit(
+                fn, in_shardings=(p_shard, s_shard, tok_shard, mask_shard),
+                out_shardings=(None, s_shard))
+            args = (_sds(param_shapes), state_shapes, inputs["tokens"],
+                    inputs["block_mask_words"])
+        else:
+            fn = lambda params, state, tokens: T.decode_step(
+                params, state, tokens, cfg)
+            jitted = jax.jit(
+                fn, in_shardings=(p_shard, s_shard, tok_shard),
+                out_shardings=(None, s_shard))
+            args = (_sds(param_shapes), state_shapes, inputs["tokens"])
+        model_flops = R.model_flops_decode(cfg, spec.global_batch)
+
+    with jax.set_mesh(mesh):
+        lowered = jitted.lower(*args)
+        result = {
+            "arch": cfg.name, "shape": shape_name,
+            "mesh": "x".join(map(str, mesh.devices.shape)),
+            "chips": chips,
+            "step": spec.step,
+            "lower_s": round(time.monotonic() - t0, 1),
+        }
+        if not compile_:
+            return result
+        compiled = lowered.compile()
+    result["compile_s"] = round(time.monotonic() - t0, 1)
+
+    mem = compiled.memory_analysis()
+    result["memory"] = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes",
+                                        None),
+    }
+    cost = compiled.cost_analysis()
+    result["cost"] = {k: float(v) for k, v in cost.items()
+                      if isinstance(v, (int, float)) and
+                      k in ("flops", "bytes accessed", "transcendentals",
+                            "optimal_seconds", "utilization operand")}
+    hlo = compiled.as_text()
+    if hlo_path:
+        import gzip
+        with gzip.open(hlo_path, "wt") as f:
+            f.write(hlo)
+    from repro.launch.hlo_analysis import analyze_text
+    ana = analyze_text(hlo)
+    result["collectives"] = {
+        k: ana[k] for k in ("all-reduce", "all-gather", "reduce-scatter",
+                            "all-to-all", "collective-permute")}
+    result["collectives"]["total"] = ana["collective_total"]
+    result["analysis"] = {"flops": ana["flops"], "bytes": ana["bytes"],
+                          "transcendentals": ana["transcendentals"]}
+    result["roofline"] = R.roofline_terms_from_analysis(
+        ana, model_flops, chips)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--variant", default="",
+                    help="config variant fn, e.g. roaring_sparse_variant")
+    args = ap.parse_args()
+
+    archs = C.ARCH_IDS if args.arch == "all" else \
+        [C.ALIASES.get(args.arch, args.arch)]
+    shapes = list(C.SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        if args.variant:
+            import importlib
+            mod = importlib.import_module(f"repro.configs.{arch}")
+            cfg = getattr(mod, args.variant)()
+        else:
+            cfg = C.get_config(arch)
+        for shape in shapes:
+            ok, why = C.applicable(cfg, shape)
+            for multi in meshes:
+                tag = f"{arch}-{shape}-{'multi' if multi else 'single'}"
+                if args.variant:
+                    tag += f"-{args.variant}"
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[cached] {tag}")
+                    continue
+                if not ok:
+                    json.dump({"arch": cfg.name, "shape": shape,
+                               "skipped": why}, open(path, "w"), indent=1)
+                    print(f"[skip] {tag}: {why}")
+                    n_skip += 1
+                    continue
+                mesh = make_production_mesh(multi_pod=multi)
+                try:
+                    res = lower_cell(cfg, shape, mesh,
+                                     hlo_path=path[:-5] + ".hlo.gz")
+                    json.dump(res, open(path, "w"), indent=1)
+                    r = res["roofline"]
+                    print(f"[ok] {tag}: compile={res['compile_s']}s "
+                          f"compute={r['compute_s']:.3e}s "
+                          f"memory={r['memory_s']:.3e}s "
+                          f"coll={r['collective_s']:.3e}s "
+                          f"dominant={r['dominant']}")
+                    n_ok += 1
+                except Exception as e:
+                    n_fail += 1
+                    err = f"{type(e).__name__}: {e}"
+                    json.dump({"arch": cfg.name, "shape": shape,
+                               "error": err[:2000]},
+                              open(path, "w"), indent=1)
+                    print(f"[FAIL] {tag}: {err[:500]}")
+                    traceback.print_exc()
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,438 @@
+"""Trip-count-aware cost analysis of optimized HLO text.
+
+XLA's built-in ``compiled.cost_analysis()`` counts a ``while`` body ONCE,
+which under-reports FLOPs/bytes/collectives of scanned-layer models by a
+factor of the trip count (layers, attention chunks, scan steps...).  This
+module re-derives the three roofline inputs from the HLO text itself:
+
+  * dot FLOPs   = 2 x |output| x |contracting dims|, multiplied through the
+                  call graph (while bodies x known_trip_count);
+  * bytes       = sum over materializing instructions of
+                  (operand bytes + output bytes) -- XLA's own fusion-level
+                  accounting convention;
+  * collectives = operand bytes of all-reduce / all-gather / reduce-scatter /
+                  all-to-all / collective-permute, per kind, with loop
+                  multipliers.
+
+Trip counts come from the ``backend_config={"known_trip_count":{"n":...}}``
+annotation XLA attaches after loop analysis, with a fallback to the loop
+condition's comparison constant.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16, "token": 0,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1,
+    "f8e4m3fnuz": 1, "f8e3m4": 1, "f8e4m3": 1, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "while", "conditional", "after-all", "iota", "partition-id",
+    "replica-id",
+    # standalone dtype converts fuse into their consumers on TPU (the
+    # consumer is charged the converted-size operand read); standalone
+    # materialization is a CPU-backend bf16-legalization artifact
+    "convert",
+}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _dims_of(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _elems(type_str: str) -> int:
+    n = 1
+    for d in _dims_of(type_str):
+        n *= d
+    return n
+
+
+@dataclass
+class Instruction:
+    name: str
+    type_str: str
+    opcode: str
+    operands: list[str]
+    raw: str
+    is_root: bool = False
+
+
+@dataclass
+class Computation:
+    name: str
+    instructions: list[Instruction] = field(default_factory=list)
+    types: dict = field(default_factory=dict)  # symbol -> type str
+
+
+def _split_type_and_rest(s: str) -> tuple[str, str]:
+    s = s.lstrip()
+    if s.startswith("("):
+        depth = 0
+        for i, ch in enumerate(s):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return s[:i + 1], s[i + 1:]
+    i = s.find(" ")
+    return s[:i], s[i:]
+
+
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->")
+
+
+def parse_module(text: str) -> tuple[dict, str]:
+    """Returns ({comp_name: Computation}, entry_name)."""
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not stripped or stripped.startswith("//"):
+            continue
+        if stripped.endswith("{") and ("->" in stripped or
+                                       stripped.startswith("ENTRY")):
+            m = _COMP_RE.match(stripped)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if stripped.startswith("ENTRY"):
+                    entry = cur.name
+                # parameter types from the header
+                for pm in re.finditer(r"%?([\w.\-]+):\s*([^,()]+(?:\([^)]*\))?"
+                                      r"(?:\[[\d,]*\])?(?:\{[^}]*\})?)",
+                                      m.group(2)):
+                    cur.types[pm.group(1)] = pm.group(2)
+                continue
+        if stripped == "}" or stripped.startswith("} "):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(stripped)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        type_str, tail = _split_type_and_rest(rest)
+        om = re.match(r"\s*([\w\-]+)\(", tail)
+        if not om:
+            continue
+        opcode = om.group(1)
+        # operand segment: up to matching close paren
+        args = tail[om.end():]
+        depth = 1
+        for i, ch in enumerate(args):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    args_str, attrs = args[:i], args[i + 1:]
+                    break
+        else:
+            args_str, attrs = args, ""
+        operands = re.findall(r"%([\w.\-]+)", args_str)
+        inst = Instruction(name, type_str, opcode, operands,
+                           stripped, stripped.startswith("ROOT"))
+        cur.instructions.append(inst)
+        cur.types[name] = type_str
+    return comps, entry
+
+
+def _attr(raw: str, key: str) -> str | None:
+    m = re.search(key + r"=%?([\w.\-]+)", raw)
+    return m.group(1) if m else None
+
+
+def _trip_count(inst: Instruction, comps: dict) -> int:
+    m = re.search(r'known_trip_count[":{\s]+n["\s:]+(\d+)', inst.raw)
+    if m:
+        return int(m.group(1))
+    cond = _attr(inst.raw, "condition")
+    if cond and cond in comps:
+        for ci in comps[cond].instructions:
+            cm = re.search(r"constant\((\d+)\)", ci.raw)
+            if cm:
+                return int(cm.group(1))
+        # condition may compare against a fused constant
+        for ci in comps[cond].instructions:
+            if ci.opcode == "fusion":
+                callee = _attr(ci.raw, "calls")
+                if callee and callee in comps:
+                    for fi in comps[callee].instructions:
+                        cm = re.search(r"constant\((\d+)\)", fi.raw)
+                        if cm:
+                            return int(cm.group(1))
+    return 1
+
+
+def _dot_flops(inst: Instruction, comp: Computation) -> float:
+    out_elems = _elems(inst.type_str)
+    lhs = inst.operands[0] if inst.operands else None
+    lhs_type = comp.types.get(lhs, "")
+    dims = _dims_of(lhs_type)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.raw)
+    k = 1
+    if m and dims:
+        for idx in m.group(1).split(","):
+            if idx and int(idx) < len(dims):
+                k *= dims[int(idx)]
+    return 2.0 * out_elems * k
+
+
+# loop-invariant tensors up to this size are assumed VMEM-resident across
+# iterations (charged once, not x trip_count) -- e.g. recurrent weight
+# matrices; larger invariants still pay HBM per iteration.
+VMEM_RESIDENT_CAP = 8 * 1024 * 1024
+
+
+class Analyzer:
+    def __init__(self, text: str):
+        self.comps, self.entry = parse_module(text)
+        self._cache: dict = {}
+
+    def _loop_invariants(self, body_name: str) -> frozenset:
+        """Symbols of while-carry elements passed through unchanged (and
+        small enough to stay VMEM-resident)."""
+        comp = self.comps.get(body_name)
+        if comp is None:
+            return frozenset()
+        root = None
+        gte_by_index: dict[int, Instruction] = {}
+        for inst in comp.instructions:
+            if inst.opcode == "get-tuple-element":
+                m = re.search(r"index=(\d+)", inst.raw)
+                if m:
+                    gte_by_index[int(m.group(1))] = inst
+            if inst.is_root:
+                root = inst
+        if root is None or root.opcode != "tuple":
+            return frozenset()
+        out = set()
+        for i, operand in enumerate(root.operands):
+            gte = gte_by_index.get(i)
+            if gte is not None and gte.name == operand and \
+                    _type_bytes(gte.type_str) <= VMEM_RESIDENT_CAP:
+                out.add(gte.name)
+        return frozenset(out)
+
+    def _cost_of(self, comp_name: str,
+                 invariants: frozenset = frozenset()) -> dict:
+        key = (comp_name, invariants)
+        if key in self._cache:
+            return self._cache[key]
+        comp = self.comps.get(comp_name)
+        cost = {"flops": 0.0, "bytes": 0.0, "transcendentals": 0.0,
+                **{c: 0.0 for c in _COLLECTIVES}}
+        if comp is None:
+            return cost
+        self._cache[key] = cost  # guards recursion
+        for inst in comp.instructions:
+            op = inst.opcode
+            if op == "while":
+                n = _trip_count(inst, self.comps)
+                body = _attr(inst.raw, "body")
+                cond = _attr(inst.raw, "condition")
+                invs = self._loop_invariants(body) if body else frozenset()
+                for sub in (body, cond):
+                    if sub:
+                        s = self._cost_of(sub, invs)
+                        for k in cost:
+                            cost[k] += n * s[k]
+                # invariant residents charged once for the initial load
+                if body and invs:
+                    bcomp = self.comps[body]
+                    cost["bytes"] += sum(
+                        _type_bytes(bcomp.types.get(sym, ""))
+                        for sym in invs)
+                continue
+            if op == "conditional":
+                branches = re.findall(r"branch_computations=\{([^}]*)\}",
+                                      inst.raw)
+                names = re.findall(r"%([\w.\-]+)",
+                                   branches[0]) if branches else []
+                tc = _attr(inst.raw, "true_computation")
+                fc = _attr(inst.raw, "false_computation")
+                names += [x for x in (tc, fc) if x]
+                for sub in names:
+                    s = self._cost_of(sub)
+                    for k in cost:
+                        cost[k] += s[k]
+                continue
+            inplace_bytes = None
+            if op == "dot":
+                cost["flops"] += _dot_flops(inst, comp)
+            if op == "dynamic-update-slice" and len(inst.operands) >= 2:
+                # in-place semantics: read + write only the updated window
+                upd = _type_bytes(comp.types.get(inst.operands[1], ""))
+                inplace_bytes = 2 * upd
+            if op in ("dynamic-slice", "gather"):
+                # reads only the addressed windows, not the whole operand
+                inplace_bytes = 2 * _type_bytes(inst.type_str)
+            if op == "scatter" and len(inst.operands) >= 3:
+                # in-place: touches only the update windows + indices
+                upd = _type_bytes(comp.types.get(inst.operands[2], ""))
+                idxb = _type_bytes(comp.types.get(inst.operands[1], ""))
+                inplace_bytes = 2 * upd + idxb
+            if op == "fusion":
+                callee = _attr(inst.raw, "calls")
+                if callee and callee in self.comps:
+                    # dots / transcendentals nested in fusions
+                    sub = self.comps[callee]
+                    # pure dtype/layout shim fusions (parameter + converts /
+                    # bitcasts only) are a CPU-backend bf16-legalization
+                    # artifact: on TPU they fuse into their consumers, which
+                    # already pay the operand read.  Charge zero here.
+                    if sub.instructions and all(
+                            fi.opcode in ("parameter", "convert", "bitcast",
+                                          "copy", "reshape", "transpose",
+                                          "broadcast")
+                            for fi in sub.instructions):
+                        continue
+                    root = None
+                    param_by_idx: dict[int, str] = {}
+                    for fi in sub.instructions:
+                        if fi.is_root:
+                            root = fi
+                        if fi.opcode == "parameter":
+                            pm = re.search(r"parameter\((\d+)\)", fi.raw)
+                            if pm:
+                                param_by_idx[int(pm.group(1))] = fi.name
+                        if fi.opcode == "dot":
+                            cost["flops"] += _dot_flops(fi, sub)
+                        elif fi.opcode in ("exponential", "tanh", "log",
+                                           "rsqrt", "sqrt", "power",
+                                           "logistic", "sine", "cosine"):
+                            cost["transcendentals"] += _elems(fi.type_str)
+                    if root is None and sub.instructions:
+                        root = sub.instructions[-1]
+                    # effective root: CPU bf16 legalization wraps the real
+                    # dus/scatter in converts; trace back through view ops
+                    _by_name = {fi.name: fi for fi in sub.instructions}
+                    _view = {"bitcast", "reshape", "copy", "convert",
+                             "transpose"}
+                    seen_r = 0
+                    while root is not None and root.opcode in _view and \
+                            len(root.operands) == 1 and \
+                            root.operands[0] in _by_name and seen_r < 8:
+                        root = _by_name[root.operands[0]]
+                        seen_r += 1
+                    # window-accurate fusion accounting:
+                    #  * an operand used ONLY via internal dynamic-slices is
+                    #    charged the slice windows, not the whole buffer
+                    #    (scan xs / KV caches feed fusions this way);
+                    #  * a root dynamic-update-slice/scatter aliases its big
+                    #    operand and writes only the updated window.
+                    # origin map traces params through view/convert chains
+                    # (bitcast/reshape/copy/convert) so aliasing is detected
+                    # even when XLA interposes a bitcast.
+                    view_ops = {"bitcast", "reshape", "copy", "convert",
+                                "transpose"}
+                    origin: dict[str, str] = {v: v
+                                              for v in param_by_idx.values()}
+                    for fi in sub.instructions:
+                        if fi.opcode in view_ops and len(fi.operands) == 1 \
+                                and fi.operands[0] in origin:
+                            origin[fi.name] = origin[fi.operands[0]]
+                    in_b = 0
+                    for pi, o in enumerate(inst.operands):
+                        if o in invariants:
+                            continue
+                        full = _type_bytes(comp.types.get(o, ""))
+                        pname = param_by_idx.get(pi)
+                        if pname is not None:
+                            uses = [fi for fi in sub.instructions
+                                    if fi.opcode not in view_ops and any(
+                                        origin.get(u) == pname
+                                        for u in fi.operands)]
+                            if uses and all(
+                                    u.opcode in ("dynamic-slice", "gather")
+                                    and u.operands and
+                                    origin.get(u.operands[0]) == pname
+                                    for u in uses):
+                                # windowed reads only (slices / gathered
+                                # blocks), not the whole buffer
+                                in_b += sum(_type_bytes(u.type_str)
+                                            for u in uses)
+                                continue
+                            if root is not None and \
+                                    root.opcode in ("dynamic-update-slice",
+                                                    "scatter") \
+                                    and root.operands and \
+                                    origin.get(root.operands[0]) == pname:
+                                continue  # aliased in-place destination
+                        in_b += full
+                    if root is not None and \
+                            root.opcode == "dynamic-update-slice" and \
+                            len(root.operands) >= 2:
+                        out_b = 2 * _type_bytes(
+                            sub.types.get(root.operands[1], ""))
+                    elif root is not None and root.opcode == "scatter" and \
+                            len(root.operands) >= 3:
+                        out_b = 2 * _type_bytes(
+                            sub.types.get(root.operands[2], ""))
+                        # the aliased scatter destination operand
+                        in_b = max(0, in_b - _type_bytes(inst.type_str))
+                    else:
+                        out_b = _type_bytes(inst.type_str)
+                    inplace_bytes = in_b + out_b
+            for c in _COLLECTIVES:
+                if op == c or op.startswith(c + "-start"):
+                    b = sum(_type_bytes(comp.types.get(o, ""))
+                            for o in inst.operands
+                            if o in comp.types)
+                    if b == 0:
+                        b = _type_bytes(inst.type_str)
+                    cost[c] += b
+            if op in _SKIP_BYTES_OPS or op.endswith("-done"):
+                continue
+            if inplace_bytes is not None:
+                cost["bytes"] += inplace_bytes
+                continue
+            out_b = _type_bytes(inst.type_str)
+            in_b = sum(_type_bytes(comp.types.get(o, ""))
+                       for o in inst.operands
+                       if o in comp.types and o not in invariants)
+            cost["bytes"] += out_b + in_b
+        return cost
+
+    def analyze(self) -> dict:
+        cost = self._cost_of(self.entry)
+        out = dict(cost)
+        out["collective_total"] = sum(cost[c] for c in _COLLECTIVES)
+        return out
+
+
+def analyze_text(text: str) -> dict:
+    return Analyzer(text).analyze()

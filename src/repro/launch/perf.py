@@ -1,0 +1,80 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf hillclimb harness: lower one cell with config overrides and compare
+its roofline terms against the stored baseline (EXPERIMENTS.md sec Perf).
+
+    PYTHONPATH=src python -m repro.launch.perf --arch xlstm-350m \
+        --shape train_4k --set xlstm_chunk=64 --tag chunked_mlstm
+"""
+
+import argparse
+import ast
+import dataclasses
+import json
+
+import jax
+
+import repro.configs as C
+from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import make_production_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--set", nargs="*", default=[],
+                    help="config overrides key=value (python literals)")
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--baseline", default="results/dryrun")
+    ap.add_argument("--out", default="results/perf")
+    args = ap.parse_args()
+
+    cfg = C.get_config(args.arch)
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            overrides[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            overrides[k] = v
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    os.makedirs(args.out, exist_ok=True)
+    arch_key = C.ALIASES.get(args.arch, args.arch)
+    suffix = "multi" if args.multi_pod else "single"
+    tag = f"{arch_key}-{args.shape}-{suffix}-{args.tag}"
+    res = lower_cell(cfg, args.shape, mesh,
+                     hlo_path=os.path.join(args.out, tag + ".hlo.gz"))
+    res["overrides"] = overrides
+    json.dump(res, open(os.path.join(args.out, tag + ".json"), "w"),
+              indent=1)
+
+    base_path = os.path.join(args.baseline,
+                             f"{arch_key}-{args.shape}-{suffix}.json")
+    r = res["roofline"]
+    print(f"\n=== {tag} ===")
+    if os.path.exists(base_path):
+        base = json.load(open(base_path))
+        if "roofline" in base:
+            b = base["roofline"]
+            for term in ("compute_s", "memory_s", "collective_s"):
+                delta = (r[term] / b[term] - 1) * 100 if b[term] else 0
+                print(f"{term:13s}: {b[term]:.3e} -> {r[term]:.3e} "
+                      f"({delta:+.1f}%)")
+            print(f"dominant     : {b['dominant']} -> {r['dominant']}")
+            print(f"model/HLO    : {b['model_to_hlo_flops']:.3f} -> "
+                  f"{r['model_to_hlo_flops']:.3f}")
+            print(f"roofline_frac: {b['roofline_fraction']:.4f} -> "
+                  f"{r['roofline_fraction']:.4f}")
+            return
+    print({k: f"{v:.3e}" if isinstance(v, float) else v
+           for k, v in r.items()})
+
+
+if __name__ == "__main__":
+    main()

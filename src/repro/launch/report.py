@@ -1,0 +1,151 @@
+"""Render EXPERIMENTS.md sections from results/dryrun/*.json.
+
+    PYTHONPATH=src python -m repro.launch.report results/dryrun
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x * 1e6:.1f}us"
+    if x < 1:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def load(out_dir):
+    cells = []
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(p) as f:
+            cells.append((os.path.basename(p)[:-5], json.load(f)))
+    return cells
+
+
+def improvement_note(d):
+    r = d.get("roofline", {})
+    dom = r.get("dominant")
+    step = d.get("step")
+    if dom == "memory":
+        if step == "train":
+            return ("fuse attention-tile elementwise chains / bf16 tiles; "
+                    "cut remat traffic")
+        return "shrink KV reads (roaring block-sparse; quantized cache)"
+    if dom == "collective":
+        return ("reduce TP all-reduces (sequence-parallel norms) or "
+                "gradient compression on the dp axis")
+    return "increase per-chip arithmetic intensity (bigger microbatch)"
+
+
+def dryrun_section(cells):
+    out = ["### Dry-run results (per cell)", "",
+           "| cell | mesh | status | compile | arg bytes/dev | temp "
+           "bytes/dev | HLO GFLOPs/dev | coll bytes/dev | collectives |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for name, d in cells:
+        if "skipped" in d:
+            out.append(f"| {name} | - | SKIP: {d['skipped'][:60]} "
+                       "| - | - | - | - | - | - |")
+            continue
+        if "error" in d:
+            out.append(f"| {name} | - | **FAIL**: {d['error'][:60]} "
+                       "| - | - | - | - | - | - |")
+            continue
+        m = d["memory"]
+        coll = d["collectives"]
+        parts = [f"{k.split('-')[0][:3]}{k.split('-')[1][:3] if '-' in k else ''}:"
+                 f"{fmt_bytes(v)}"
+                 for k, v in coll.items()
+                 if k != "total" and v]
+        out.append(
+            f"| {name} | {d['mesh']} | ok | {d['compile_s']}s "
+            f"| {fmt_bytes(m['argument_bytes'])} "
+            f"| {fmt_bytes(m['temp_bytes'])} "
+            f"| {d['analysis']['flops'] / 1e9:.0f} "
+            f"| {fmt_bytes(coll['total'])} "
+            f"| {' '.join(parts) or '-'} |")
+    return "\n".join(out)
+
+
+def roofline_section(cells, single_only=True):
+    out = ["### Roofline terms (single-pod 16x16, per device)", "",
+           "| arch x shape | compute | memory | collective | dominant | "
+           "MODEL_FLOPS/HLO | note |",
+           "|---|---|---|---|---|---|---|"]
+    for name, d in cells:
+        if "roofline" not in d:
+            continue
+        if single_only and not name.endswith("-single"):
+            continue
+        r = d["roofline"]
+        out.append(
+            f"| {name.replace('-single', '')} | {fmt_s(r['compute_s'])} "
+            f"| {fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} "
+            f"| **{r['dominant']}** | {r['model_to_hlo_flops']:.2f} "
+            f"| {improvement_note(d)} |")
+    return "\n".join(out)
+
+
+def reanalyze(out_dir):
+    """Recompute roofline terms from saved .hlo.gz (no recompilation)."""
+    import gzip
+
+    from repro.launch import roofline as R
+    from repro.launch.hlo_analysis import analyze_text
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        hlo_path = p[:-5] + ".hlo.gz"
+        if not os.path.exists(hlo_path):
+            continue
+        with open(p) as f:
+            d = json.load(f)
+        if "roofline" not in d:
+            continue
+        with gzip.open(hlo_path, "rt") as f:
+            ana = analyze_text(f.read())
+        d["analysis"] = {"flops": ana["flops"], "bytes": ana["bytes"],
+                         "transcendentals": ana["transcendentals"]}
+        d["collectives"] = {k: ana[k] for k in (
+            "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+            "collective-permute")}
+        d["collectives"]["total"] = ana["collective_total"]
+        d["roofline"] = R.roofline_terms_from_analysis(
+            ana, d["roofline"]["model_flops_global"], d["chips"])
+        with open(p, "w") as f:
+            json.dump(d, f, indent=1)
+        print("reanalyzed", os.path.basename(p))
+
+
+def main():
+    if len(sys.argv) > 1 and sys.argv[1] == "--reanalyze":
+        reanalyze(sys.argv[2] if len(sys.argv) > 2 else "results/dryrun")
+        return
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    cells = load(out_dir)
+    n_ok = sum(1 for _, d in cells if "roofline" in d)
+    n_skip = sum(1 for _, d in cells if "skipped" in d)
+    n_fail = sum(1 for _, d in cells if "error" in d)
+    print(f"<!-- {n_ok} ok / {n_skip} skipped / {n_fail} failed -->\n")
+    print(dryrun_section(cells))
+    print()
+    print(roofline_section(cells))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell, in seconds (see the brief):
+
+    compute    = per_device_HLO_FLOPs / PEAK_FLOPS_BF16
+    memory     = per_device_HLO_bytes / HBM_BW
+    collective = per_device_collective_bytes / ICI_BW
+
+``cost_analysis()`` runs on the post-SPMD per-device module, so its flops /
+bytes are already per-device; the brief's ``HLO_FLOPs / (chips x peak)``
+with *global* FLOPs is the same number (global = per_device x chips).  The
+collective bytes come from parsing the optimized HLO and summing operand
+sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instructions (also per-device shapes).
+"""
+
+from __future__ import annotations
+
+import re
+
+import numpy as np
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "s2": 1, "u2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(\(?[^)=]*?\)?)\s+"
+                     r"([\w\-]+)\(")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _type_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string, handling tuples."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes per collective kind from optimized HLO text."""
+    sizes: dict[str, int] = {}
+    lines = hlo_text.splitlines()
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if m:
+            sizes[m.group(1).lstrip("%")] = _type_bytes(m.group(2))
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        op = m.group(3)
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-"):
+                kind = c
+                break
+        if kind is None:
+            continue
+        # operand list inside the parens
+        args = ln[ln.index("(") + 1:]
+        depth = 1
+        for i, ch in enumerate(args):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    args = args[:i]
+                    break
+        b = 0
+        for ref in re.findall(r"%?([\w.\-]+)", args):
+            if ref in sizes:
+                b += sizes[ref]
+        if b == 0:
+            # fallback: use the result size
+            b = _type_bytes(m.group(2))
+        out[kind] += b
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def roofline_terms(cost: dict, coll: dict, model_flops: float,
+                   chips: int) -> dict:
+    """cost: compiled.cost_analysis(); coll: collective_bytes()."""
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    coll_dev = float(coll.get("total", 0))
+    return _terms(flops_dev, bytes_dev, coll_dev, model_flops, chips)
+
+
+def roofline_terms_from_analysis(ana: dict, model_flops: float,
+                                 chips: int) -> dict:
+    """ana: hlo_analysis.analyze_text() output (trip-count-aware)."""
+    return _terms(float(ana["flops"]), float(ana["bytes"]),
+                  float(ana["collective_total"]), model_flops, chips)
+
+
+def _terms(flops_dev: float, bytes_dev: float, coll_dev: float,
+           model_flops: float, chips: int) -> dict:
+    t_compute = flops_dev / PEAK_FLOPS_BF16
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    bound = max(t_compute, t_memory, t_coll)
+    useful = model_flops / chips / PEAK_FLOPS_BF16 if model_flops else 0.0
+    return {
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_coll,
+        "dominant": dominant,
+        "hlo_flops_per_device": flops_dev,
+        "hlo_bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll_dev,
+        "model_flops_global": model_flops,
+        # how much of compiled compute is useful (catches remat waste)
+        "model_to_hlo_flops": (model_flops / (flops_dev * chips)
+                               if flops_dev else 0.0),
+        # fraction of roofline if the dominant term were perfectly achieved
+        "roofline_fraction": (useful / bound) if bound > 0 else 0.0,
+    }
+
+
+def model_flops_train(cfg, seq_len: int, global_batch: int) -> float:
+    """6 * N(_active) * D for a train step."""
+    n = cfg.active_params_count()
+    return 6.0 * n * seq_len * global_batch
+
+
+def model_flops_prefill(cfg, seq_len: int, global_batch: int) -> float:
+    return 2.0 * cfg.active_params_count() * seq_len * global_batch
+
+
+def model_flops_decode(cfg, global_batch: int) -> float:
+    """One token per sequence."""
+    return 2.0 * cfg.active_params_count() * global_batch

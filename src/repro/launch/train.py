@@ -1,0 +1,55 @@
+"""Production train launcher.
+
+On real hardware this process runs per-host under `jax.distributed`; here it
+also runs standalone on CPU with reduced configs.  The dry-run
+(launch/dryrun.py) is the no-hardware proof of the full-scale path.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
+        --reduced --steps 50 --ckpt /tmp/ck
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--distributed", action="store_true",
+                    help="initialize jax.distributed from env (TPU fleets)")
+    args = ap.parse_args()
+
+    if args.distributed:
+        import jax
+        jax.distributed.initialize()
+
+    import repro.configs as C
+    from repro.data.pipeline import RoaringDataPipeline
+    from repro.optim.adamw import AdamWConfig
+    from repro.train.trainer import Trainer
+
+    cfg = C.get_config(args.arch, reduced=args.reduced)
+    pipe = RoaringDataPipeline(
+        n_docs=65536, seq_len=args.seq_len, batch_size=args.batch,
+        vocab=cfg.vocab, seed=0)
+    opt = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                      total_steps=args.steps)
+    tr = Trainer(cfg, opt, pipe, args.ckpt, ckpt_every=args.ckpt_every)
+    if args.resume and tr.maybe_resume():
+        print(f"resumed at step {tr.step}")
+    tr.train(args.steps, log_every=10)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Model zoo: unified transformer/SSM/hybrid stack (see config.py)."""
+
+from repro.models.config import ModelConfig  # noqa: F401

@@ -1,0 +1,629 @@
+"""Shared neural layers: norms, RoPE / M-RoPE, chunked flash attention
+(train), decode attention (dense + Roaring block-sparse), and DeepSeek-V2
+multi-head latent attention (MLA).
+
+All functions are pure; parameters are plain dicts of jax arrays.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+
+_NEG = np.float32(-1e30)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return ((1.0 + scale.astype(jnp.float32)) * out).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (scale.astype(jnp.float32) * out
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(x, params, cfg):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, params["scale"], params["bias"], cfg.norm_eps)
+    return rms_norm(x, params["scale"], cfg.norm_eps)
+
+
+def norm_params(cfg, shape_d):
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((shape_d,), jnp.float32),
+                "bias": jnp.zeros((shape_d,), jnp.float32)}
+    return {"scale": jnp.zeros((shape_d,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# RoPE (+ multimodal M-RoPE sections, qwen2-vl)
+# ---------------------------------------------------------------------------
+
+def _rope_freqs(hd: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, hd, 2, dtype=np.float64) / hd))
+
+
+def apply_rope(x, positions, theta: float,
+               sections: tuple[int, int, int] | None = None):
+    """x: (..., S, H, D); positions: (..., S) int32 (text stub: the three
+    M-RoPE streams share one position id, making the sectioned rotation
+    exactly equivalent to 1-D RoPE while keeping the sectioned layout)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(_rope_freqs(d, theta), jnp.float32)  # (d/2,)
+    if sections is not None:
+        assert sum(sections) == d // 2, (sections, d)
+        # each frequency index belongs to a (temporal/height/width) section;
+        # with a single position stream the angles coincide with 1-D RoPE.
+    ang = positions[..., :, None].astype(jnp.float32) * freqs[None, :]
+    cos = jnp.cos(ang)[..., :, None, :]   # (..., S, 1, d/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked flash attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _block_pairs(nq, qc, nk, kc, causal, window, skip):
+    """Static (query-block, kv-block) schedule.  With skip=True only block
+    pairs that can contain visible positions are visited (beyond-paper perf
+    lever: halves compute for causal, gives O(S*W) for sliding windows)."""
+    pairs = []
+    for i in range(nq):
+        for j in range(nk):
+            if skip:
+                if causal and j * kc > i * qc + qc - 1:
+                    continue  # entirely in the future
+                if window and (j * kc + kc - 1) < (i * qc - window + 1):
+                    continue  # entirely out of the window
+            pairs.append((i, j))
+    return (np.asarray([p[0] for p in pairs], np.int32),
+            np.asarray([p[1] for p in pairs], np.int32))
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    scale=None, q_chunk=512, k_chunk=1024, block_skip=False):
+    """Memory-bounded attention: O(S * k_chunk) live intermediates.
+
+    q: (B, S, H, D); k, v: (B, S, Hkv, D).  Returns (B, S, H, D).
+    """
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    dv = v.shape[-1]          # value head dim may differ (MLA)
+    g = h // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    qc, kc = min(q_chunk, s), min(k_chunk, s)
+    nq, nk = s // qc, s // kc
+    assert nq * qc == s and nk * kc == s, (s, qc, kc)
+
+    qr = q.reshape(b, nq, qc, hkv, g, d)
+    kr = k.reshape(b, nk, kc, hkv, d)
+    vr = v.reshape(b, nk, kc, hkv, dv)
+
+    # keep attention tiles tensor-parallel: without these constraints GSPMD
+    # tends to replicate heads through the scan carry, multiplying FLOPs
+    from repro.dist import ctx
+    dp = ctx.dp_axes()
+    plan = ctx.attn_head_plan(hkv, g, qc)
+    qdims = {0: dp}
+    kdims = {0: dp}
+    cdims = {0: dp}           # carry (b, nq, hkv, g, qc[, dv])
+    if plan == "hkv":
+        qdims[3] = "model"
+        kdims[3] = "model"
+        cdims[2] = "model"
+    elif plan == "g":
+        qdims[4] = "model"
+        cdims[3] = "model"
+    elif plan == "qc":
+        qdims[2] = "model"
+        cdims[4] = "model"
+    if plan != "auto":
+        # 'auto': GSPMD splits the model axis jointly over (hkv, g) from the
+        # projection's head sharding; constraining here would conflict.
+        qr = ctx.constrain(qr, qdims)
+        kr = ctx.constrain(kr, kdims)
+        vr = ctx.constrain(vr, kdims)
+
+    qi, kj = _block_pairs(nq, qc, nk, kc, causal, window, block_skip)
+
+    m0 = jnp.full((b, nq, hkv, g, qc), _NEG, jnp.float32)
+    l0 = jnp.zeros((b, nq, hkv, g, qc), jnp.float32)
+    a0 = jnp.zeros((b, nq, hkv, g, qc, dv), jnp.float32)
+    if plan != "auto":
+        m0 = ctx.constrain(m0, cdims)
+        l0 = ctx.constrain(l0, cdims)
+        a0 = ctx.constrain(a0, cdims)
+
+    qpos_in = jnp.arange(qc)
+    kpos_in = jnp.arange(kc)
+
+    def body(carry, ij):
+        m, l, acc = carry
+        i, j = ij
+        qb = jax.lax.dynamic_index_in_dim(qr, i, 1, keepdims=False)
+        kb = jax.lax.dynamic_index_in_dim(kr, j, 1, keepdims=False)
+        vb = jax.lax.dynamic_index_in_dim(vr, j, 1, keepdims=False)
+        sc = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb,
+                        preferred_element_type=jnp.float32) * scale
+        if softcap:
+            sc = softcap * jnp.tanh(sc / softcap)
+        qpos = i * qc + qpos_in
+        kpos = j * kc + kpos_in
+        mask = jnp.ones((qc, kc), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window:
+            mask &= (qpos[:, None] - kpos[None, :]) < window
+        sc = jnp.where(mask[None, None, None], sc, _NEG)
+        mb = jax.lax.dynamic_index_in_dim(m, i, 1, keepdims=False)
+        lb = jax.lax.dynamic_index_in_dim(l, i, 1, keepdims=False)
+        ab = jax.lax.dynamic_index_in_dim(acc, i, 1, keepdims=False)
+        m_new = jnp.maximum(mb, sc.max(axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        alpha = jnp.exp(mb - m_new)
+        l_new = alpha * lb + p.sum(axis=-1)
+        # probabilities drop to the value dtype for the PV matmul (f32
+        # accumulation); upcasting the V tile would materialize it in f32
+        a_new = alpha[..., None] * ab + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32).astype(jnp.float32)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, i, 1)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, i, 1)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, i, 1)
+        return (m, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (jnp.asarray(qi), jnp.asarray(kj)))
+    l_safe = jnp.where(l > 0, l, 1.0)
+    out = acc / l_safe[..., None]
+    out = jnp.where((l > 0)[..., None], out, 0.0)
+    # (b, nq, hkv, g, qc, dv) -> (b, s, h, dv)
+    out = out.transpose(0, 1, 4, 2, 3, 5).reshape(b, s, h, dv)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode attention (single new token over a KV cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention_dense(q, k_cache, v_cache, kv_len, *,
+                           window=0, softcap=0.0, scale=None):
+    """q: (B, H, D); caches: (B, Hkv, S, D); kv_len: (B,) -> (B, H, D)."""
+    b, h, d = q.shape
+    hkv, s = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    qg = q.reshape(b, hkv, g, d)
+    sc = jnp.einsum("bhgd,bhsd->bhgs", qg, k_cache,
+                    preferred_element_type=jnp.float32) * scale
+    if softcap:
+        sc = softcap * jnp.tanh(sc / softcap)
+    pos = jnp.arange(s)
+    valid = pos[None, :] < kv_len[:, None]
+    if window:
+        valid &= pos[None, :] >= (kv_len[:, None] - window)
+    sc = jnp.where(valid[:, None, None, :], sc, _NEG)
+    w = jax.nn.softmax(sc, axis=-1)
+    # keep the cache in its storage dtype: casting it would materialize the
+    # full (B, Hkv, S, D) buffer in f32 (EXPERIMENTS.md sec Perf, decode)
+    out = jnp.einsum("bhgs,bhsd->bhgd", w.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def decode_attention_roaring(q, k_cache, v_cache, kv_len, block_mask_words,
+                             *, block_size=128, scale=None, softcap=0.0):
+    """Paper-technique decode path: the Roaring block-visibility kernel."""
+    return kops.decode_attention(q, k_cache, v_cache, block_mask_words,
+                                 kv_len, block_size=block_size,
+                                 sm_scale=scale, softcap=softcap)
+
+
+def decode_attention_block_gather(q, k_cache, v_cache, kv_len,
+                                  block_mask_words, *, block_size=128,
+                                  topk=64, scale=None, softcap=0.0):
+    """Gather-based Roaring block-sparse decode (portable twin of the Pallas
+    kernel): materializes the visible-block id list from the bitset words
+    (rank = prefix sum -- the paper's sec 3.1 extraction), gathers only
+    those KV blocks, and attends over the gathered window.  HBM traffic
+    scales with `topk * block_size` instead of the full cache length.
+
+    q: (B, H, D); caches (B, Hkv, S, D); block_mask_words (B, W) uint32.
+    """
+    b, h, d = q.shape
+    hkv, s = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    nblk = s // block_size
+    topk = min(topk, nblk)
+    scale = (d ** -0.5) if scale is None else scale
+    blocks = jnp.arange(nblk)
+    vis = ((block_mask_words[:, blocks >> 5]
+            >> (blocks & 31).astype(jnp.uint32)) & np.uint32(1)).astype(bool)
+    vis &= (blocks[None, :] * block_size) < kv_len[:, None]
+
+    def extract(vis_row):
+        rank = jnp.cumsum(vis_row) - 1
+        dst = jnp.where(vis_row & (rank < topk), rank, topk)
+        idx = jnp.zeros(topk + 1, jnp.int32).at[dst].set(
+            blocks.astype(jnp.int32), mode="drop")[:topk]
+        n = jnp.minimum(vis_row.sum(), topk)
+        return idx, n
+
+    idx, n_vis = jax.vmap(extract)(vis)                 # (B, topk), (B,)
+    kb = k_cache.reshape(b, hkv, nblk, block_size, d)
+    vb = v_cache.reshape(b, hkv, nblk, block_size, d)
+    sel = idx[:, None, :, None, None]
+    k_sel = jnp.take_along_axis(kb, jnp.broadcast_to(
+        sel, (b, hkv, topk, block_size, d)).astype(jnp.int32), axis=2)
+    v_sel = jnp.take_along_axis(vb, jnp.broadcast_to(
+        sel, (b, hkv, topk, block_size, d)).astype(jnp.int32), axis=2)
+    qg = q.reshape(b, hkv, g, d)
+    sc = jnp.einsum("bhgd,bhtsd->bhgts", qg, k_sel,
+                    preferred_element_type=jnp.float32) * scale
+    if softcap:
+        sc = softcap * jnp.tanh(sc / softcap)
+    pos = idx[:, :, None] * block_size + jnp.arange(block_size)[None, None]
+    valid = (jnp.arange(topk)[None, :, None] < n_vis[:, None, None]) \
+        & (pos < kv_len[:, None, None])
+    sc = jnp.where(valid[:, None, None], sc, _NEG)
+    sc2 = sc.reshape(b, hkv, g, topk * block_size)
+    w = jax.nn.softmax(sc2, axis=-1).reshape(b, hkv, g, topk, block_size)
+    out = jnp.einsum("bhgts,bhtsd->bhgd", w.astype(v_sel.dtype), v_sel,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention blocks (projection + rope + attention + output)
+# ---------------------------------------------------------------------------
+
+def attn_params(cfg, rng):
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    k = jax.random.split(rng, 4)
+    std = d ** -0.5
+    p = {
+        "wq": jax.random.normal(k[0], (d, h, hd), jnp.float32) * std,
+        "wk": jax.random.normal(k[1], (d, hkv, hd), jnp.float32) * std,
+        "wv": jax.random.normal(k[2], (d, hkv, hd), jnp.float32) * std,
+        "wo": jax.random.normal(k[3], (h, hd, d), jnp.float32)
+        * ((h * hd) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), jnp.float32)
+        p["bk"] = jnp.zeros((hkv, hd), jnp.float32)
+        p["bv"] = jnp.zeros((hkv, hd), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), jnp.float32)
+        p["k_norm"] = jnp.zeros((hd,), jnp.float32)
+    return p
+
+
+def _project_qkv(x, p, cfg, positions):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.m_rope_sections)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.m_rope_sections)
+    return q, k, v
+
+
+def attn_train(x, p, cfg, mixer, positions):
+    """x: (B, S, d) -> (B, S, d).  mixer in full|local|global|enc."""
+    q, k, v = _project_qkv(x, p, cfg, positions)
+    out = flash_attention(
+        q, k, v,
+        causal=(mixer != "enc"),
+        window=cfg.sliding_window if mixer == "local" else 0,
+        softcap=cfg.attn_softcap,
+        q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk,
+        block_skip=cfg.flash_block_skip)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def attn_decode(x_tok, p, cfg, mixer, cache, pos, block_mask_words=None):
+    """x_tok: (B, d); cache: {'k','v'}: (B, Hkv, S, D); pos: (B,) int32.
+    Returns (out (B, d), new cache)."""
+    dt = x_tok.dtype
+    x = x_tok[:, None, :]                                   # (B, 1, d)
+    q, k, v = _project_qkv(x, p, cfg, positions=pos[:, None])
+    q = q[:, 0]                                             # (B, H, D)
+    k_new = k[:, 0]                                         # (B, Hkv, D)
+    v_new = v[:, 0]
+    kc = _cache_insert(cache["k"], k_new, pos)
+    vc = _cache_insert(cache["v"], v_new, pos)
+    kv_len = pos + 1
+    if mixer == "global" and cfg.roaring_sparse_global \
+            and block_mask_words is not None:
+        if cfg.sparse_topk_blocks:
+            out = decode_attention_block_gather(
+                q, kc, vc, kv_len, block_mask_words,
+                block_size=cfg.attn_block_size,
+                topk=cfg.sparse_topk_blocks, scale=cfg.hd ** -0.5,
+                softcap=cfg.attn_softcap)
+        else:
+            out = decode_attention_roaring(
+                q, kc, vc, kv_len, block_mask_words,
+                block_size=cfg.attn_block_size, scale=cfg.hd ** -0.5,
+                softcap=cfg.attn_softcap)
+    else:
+        out = decode_attention_dense(
+            q, kc, vc, kv_len,
+            window=cfg.sliding_window if mixer == "local" else 0,
+            softcap=cfg.attn_softcap)
+    out = jnp.einsum("bhk,hkd->bd", out, p["wo"].astype(dt))
+    return out, {"k": kc, "v": vc}
+
+
+def _cache_insert(cache, new, pos):
+    """cache: (B, Hkv, S, D); new: (B, Hkv, D); pos: (B,)."""
+    b = cache.shape[0]
+    return jax.vmap(
+        lambda c, n, p_: jax.lax.dynamic_update_slice(
+            c, n[:, None, :].astype(c.dtype), (0, p_, 0))
+    )(cache, new, pos)
+
+
+def insert_token_stacked(stack, new, i, pos):
+    """Write one token column into a batch-major layer-stacked cache IN
+    PLACE.
+
+    stack: (B, R, H, S, D) or (B, R, S, D); new: (B, H, D) / (B, D);
+    i: scalar layer index; pos: (B,) positions.  One scatter with a
+    token-column window -- the whole point of carrying caches through the
+    decode layer-scan instead of re-stacking them as scan outputs
+    (EXPERIMENTS.md sec Perf, decode restructure)."""
+    b = new.shape[0]
+    if stack.ndim == 5:
+        hh = stack.shape[2]
+        return stack.at[jnp.arange(b)[:, None], i,
+                        jnp.arange(hh)[None, :], pos[:, None], :].set(
+            new.astype(stack.dtype))
+    return stack.at[jnp.arange(b), i, pos, :].set(new.astype(stack.dtype))
+
+
+def visible_block_ids(block_mask_words, kv_len, n_blocks, block_size, topk):
+    """Roaring words -> dense (B, topk) visible-block id list + counts.
+    The rank extraction is the paper's sec 3.1 prefix-sum idiom."""
+    blocks = jnp.arange(n_blocks)
+    vis = ((block_mask_words[:, blocks >> 5]
+            >> (blocks & 31).astype(jnp.uint32)) & np.uint32(1)).astype(bool)
+    vis &= (blocks[None, :] * block_size) < kv_len[:, None]
+
+    def extract(vis_row):
+        rank = jnp.cumsum(vis_row) - 1
+        dst = jnp.where(vis_row & (rank < topk), rank, topk)
+        idx = jnp.zeros(topk + 1, jnp.int32).at[dst].set(
+            blocks.astype(jnp.int32), mode="drop")[:topk]
+        return idx, jnp.minimum(vis_row.sum(), topk)
+
+    return jax.vmap(extract)(vis)
+
+
+def gather_blocks_stacked(stack, layer_i, block_ids, block_size):
+    """(B, R, Hkv, S, D) + (B, topk) block ids -> (B, topk, Hkv, bs, D),
+    reading ONLY the addressed blocks of layer `layer_i` (a batch-aligned
+    lax.gather on the contiguous batch-major stack -- no per-layer slice
+    materialization, no transpose, shard-local under dp sharding)."""
+    b, r, hkv, s, d = stack.shape
+    topk = block_ids.shape[1]
+    starts = jnp.stack([
+        jnp.broadcast_to(layer_i, (b, topk)).astype(jnp.int32),
+        block_ids.astype(jnp.int32) * block_size,
+    ], axis=-1)                                   # (B, topk, 2)
+    dnums = jax.lax.GatherDimensionNumbers(
+        offset_dims=(1, 2, 3),                    # Hkv, bs, D in the output
+        collapsed_slice_dims=(0,),
+        start_index_map=(0, 2))
+
+    def one(stack_b, starts_b):
+        return jax.lax.gather(
+            stack_b, starts_b, dnums,
+            slice_sizes=(1, hkv, block_size, d),
+            mode=jax.lax.GatherScatterMode.CLIP)
+
+    return jax.vmap(one)(stack, starts)
+
+
+def attn_decode_stacked(x_tok, p, cfg, mixer, k_stack, v_stack, i, pos,
+                        block_mask_words=None):
+    """Decode step against batch-major stacked caches (B, R, Hkv, S, D); updates
+    only the new token column; the roaring-sparse path gathers only the
+    visible blocks straight from the stack (paper technique on the decode
+    hot path)."""
+    dt = x_tok.dtype
+    x = x_tok[:, None, :]
+    q, k, v = _project_qkv(x, p, cfg, positions=pos[:, None])
+    q = q[:, 0]
+    k_stack = insert_token_stacked(k_stack, k[:, 0], i, pos)
+    v_stack = insert_token_stacked(v_stack, v[:, 0], i, pos)
+    kv_len = pos + 1
+    sparse = (mixer == "global" and cfg.roaring_sparse_global
+              and block_mask_words is not None and cfg.sparse_topk_blocks)
+    if sparse:
+        b, h, d = q.shape
+        hkv = cfg.n_kv_heads
+        g = h // hkv
+        bs = cfg.attn_block_size
+        n_blocks = k_stack.shape[3] // bs  # (B, R, Hkv, S, D)
+        topk = min(cfg.sparse_topk_blocks, n_blocks)
+        idx, n_vis = visible_block_ids(block_mask_words, kv_len, n_blocks,
+                                       bs, topk)
+        k_sel = gather_blocks_stacked(k_stack, i, idx, bs)  # (B,t,Hkv,bs,D)
+        v_sel = gather_blocks_stacked(v_stack, i, idx, bs)
+        qg = q.reshape(b, hkv, g, d)
+        sc = jnp.einsum("bhgd,bthsd->bhgts", qg, k_sel,
+                        preferred_element_type=jnp.float32) * (d ** -0.5)
+        if cfg.attn_softcap:
+            sc = cfg.attn_softcap * jnp.tanh(sc / cfg.attn_softcap)
+        posns = idx[:, :, None] * bs + jnp.arange(bs)[None, None]
+        valid = (jnp.arange(topk)[None, :, None] < n_vis[:, None, None]) \
+            & (posns < kv_len[:, None, None])
+        sc = jnp.where(valid[:, None, None], sc, _NEG)
+        w = jax.nn.softmax(sc.reshape(b, hkv, g, topk * bs), axis=-1) \
+            .reshape(b, hkv, g, topk, bs)
+        out = jnp.einsum("bhgts,bthsd->bhgd", w.astype(v_sel.dtype), v_sel,
+                         preferred_element_type=jnp.float32)
+        out = out.reshape(b, h, d).astype(dt)
+    else:
+        kc = jax.lax.dynamic_index_in_dim(k_stack, i, 1, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(v_stack, i, 1, keepdims=False)
+        if mixer == "global" and cfg.roaring_sparse_global \
+                and block_mask_words is not None:
+            out = decode_attention_roaring(
+                q, kc, vc, kv_len, block_mask_words,
+                block_size=cfg.attn_block_size, scale=cfg.hd ** -0.5,
+                softcap=cfg.attn_softcap)
+        else:
+            out = decode_attention_dense(
+                q, kc, vc, kv_len,
+                window=cfg.sliding_window if mixer == "local" else 0,
+                softcap=cfg.attn_softcap)
+    out = jnp.einsum("bhk,hkd->bd", out, p["wo"].astype(dt))
+    return out, k_stack, v_stack
+
+
+def mla_decode_stacked(x_tok, p, cfg, ckv_stack, kr_stack, i, pos):
+    """Absorbed MLA decode against layer-stacked compressed caches
+    (R, B, S, kl) / (R, B, S, rope_d)."""
+    x = x_tok[:, None, :]
+    q_nope, q_rope = _mla_q(x, p, cfg, pos[:, None])
+    q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]
+    ckv_new, kr_new = _mla_ckv(x, p, cfg, pos[:, None])
+    ckv_stack = insert_token_stacked(ckv_stack, ckv_new[:, 0], i, pos)
+    kr_stack = insert_token_stacked(kr_stack, kr_new[:, 0], i, pos)
+    ckv_c = jax.lax.dynamic_index_in_dim(ckv_stack, i, 1, keepdims=False)
+    kr_c = jax.lax.dynamic_index_in_dim(kr_stack, i, 1, keepdims=False)
+    dt = x_tok.dtype
+    q_c = jnp.einsum("bhn,khn->bhk", q_nope, p["w_uk"].astype(dt))
+    sc = jnp.einsum("bhk,bsk->bhs", q_c, ckv_c,
+                    preferred_element_type=jnp.float32)
+    sc = sc + jnp.einsum("bhr,bsr->bhs", q_rope, kr_c,
+                         preferred_element_type=jnp.float32)
+    sc = sc * ((cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5)
+    s = ckv_c.shape[1]
+    valid = jnp.arange(s)[None, :] < (pos + 1)[:, None]
+    sc = jnp.where(valid[:, None, :], sc, _NEG)
+    w = jax.nn.softmax(sc, axis=-1)
+    ctx = jnp.einsum("bhs,bsk->bhk", w.astype(ckv_c.dtype), ckv_c,
+                     preferred_element_type=jnp.float32).astype(dt)
+    vout = jnp.einsum("bhk,khv->bhv", ctx, p["w_uv"].astype(dt))
+    out = jnp.einsum("bhv,hvd->bd", vout, p["wo"].astype(dt))
+    return out, ckv_stack, kr_stack
+
+
+# ---------------------------------------------------------------------------
+# Multi-head latent attention (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def mla_params(cfg, rng):
+    d, h = cfg.d_model, cfg.n_heads
+    ql, kl = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rope_d, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    k = jax.random.split(rng, 6)
+    std = d ** -0.5
+    return {
+        "w_dq": jax.random.normal(k[0], (d, ql), jnp.float32) * std,
+        "q_ln": jnp.zeros((ql,), jnp.float32),
+        "w_uq": jax.random.normal(k[1], (ql, h, nope + rope_d), jnp.float32)
+        * (ql ** -0.5),
+        "w_dkv": jax.random.normal(k[2], (d, kl + rope_d), jnp.float32) * std,
+        "kv_ln": jnp.zeros((kl,), jnp.float32),
+        "w_uk": jax.random.normal(k[3], (kl, h, nope), jnp.float32)
+        * (kl ** -0.5),
+        "w_uv": jax.random.normal(k[4], (kl, h, vd), jnp.float32)
+        * (kl ** -0.5),
+        "wo": jax.random.normal(k[5], (h, vd, d), jnp.float32)
+        * ((h * vd) ** -0.5),
+    }
+
+
+def _mla_q(x, p, cfg, positions):
+    cq = rms_norm(jnp.einsum("bsd,dq->bsq", x, p["w_dq"].astype(x.dtype)),
+                  p["q_ln"], cfg.norm_eps)
+    q = jnp.einsum("bsq,qhk->bshk", cq, p["w_uq"].astype(x.dtype))
+    q_nope = q[..., :cfg.qk_nope_dim]
+    q_rope = apply_rope(q[..., cfg.qk_nope_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_ckv(x, p, cfg, positions):
+    dkv = jnp.einsum("bsd,dk->bsk", x, p["w_dkv"].astype(x.dtype))
+    ckv = rms_norm(dkv[..., :cfg.kv_lora_rank], p["kv_ln"], cfg.norm_eps)
+    k_rope = apply_rope(dkv[..., None, cfg.kv_lora_rank:], positions,
+                        cfg.rope_theta)[:, :, 0]           # (B, S, rope_d)
+    return ckv, k_rope
+
+
+def mla_train(x, p, cfg, positions):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope = _mla_q(x, p, cfg, positions)
+    ckv, k_rope = _mla_ckv(x, p, cfg, positions)
+    k_nope = jnp.einsum("bsk,khn->bshn", ckv, p["w_uk"].astype(x.dtype))
+    vfull = jnp.einsum("bsk,khv->bshv", ckv, p["w_uv"].astype(x.dtype))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (b, s, h, cfg.qk_rope_dim))], axis=-1)
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    # decompressed space is MHA; pad v to qk head width for the shared kernel
+    out = flash_attention(q, k, vfull, causal=True, scale=scale,
+                          q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk,
+                          block_skip=cfg.flash_block_skip)
+    return jnp.einsum("bshv,hvd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def mla_decode(x_tok, p, cfg, cache, pos):
+    """Absorbed-matrix MLA decode: the cache holds only (ckv, k_rope) --
+    the paper('s subject)-sized KV cache advantage of MLA.
+
+    cache: {'ckv': (B, S, kl), 'kr': (B, S, rope_d)}."""
+    x = x_tok[:, None, :]
+    q_nope, q_rope = _mla_q(x, p, cfg, pos[:, None])
+    q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]             # (B, H, *)
+    ckv_new, kr_new = _mla_ckv(x, p, cfg, pos[:, None])
+    ckv_c = jax.vmap(lambda c, n, p_: jax.lax.dynamic_update_slice(
+        c, n.astype(c.dtype), (p_, 0)))(cache["ckv"], ckv_new, pos)
+    kr_c = jax.vmap(lambda c, n, p_: jax.lax.dynamic_update_slice(
+        c, n.astype(c.dtype), (p_, 0)))(cache["kr"], kr_new, pos)
+    dt = x_tok.dtype
+    q_c = jnp.einsum("bhn,khn->bhk", q_nope, p["w_uk"].astype(dt))
+    sc = jnp.einsum("bhk,bsk->bhs", q_c, ckv_c,
+                    preferred_element_type=jnp.float32)
+    sc = sc + jnp.einsum("bhr,bsr->bhs", q_rope, kr_c,
+                         preferred_element_type=jnp.float32)
+    sc = sc * ((cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5)
+    s = ckv_c.shape[1]
+    valid = jnp.arange(s)[None, :] < (pos + 1)[:, None]
+    sc = jnp.where(valid[:, None, :], sc, _NEG)
+    w = jax.nn.softmax(sc, axis=-1)
+    ctx = jnp.einsum("bhs,bsk->bhk", w, ckv_c.astype(jnp.float32),
+                     preferred_element_type=jnp.float32).astype(dt)
+    vout = jnp.einsum("bhk,khv->bhv", ctx, p["w_uv"].astype(dt))
+    out = jnp.einsum("bhv,hvd->bd", vout, p["wo"].astype(dt))
+    return out, {"ckv": ckv_c, "kr": kr_c}

@@ -1,0 +1,185 @@
+"""Dense feed-forward and Mixture-of-Experts layers.
+
+MoE dispatch strategies (EXPERIMENTS.md section Perf levers):
+
+  * "dense"   -- every expert runs on every token, combined with routing
+                 weights.  O(E x tokens) FLOPs: the correctness oracle used
+                 by smoke tests and the scatter path's property tests.
+  * "scatter" -- capacity-bucketed sort-free dispatch: tokens are scattered
+                 into (E, capacity, d) buckets via a cumulative-position
+                 scatter, experts run one batched einsum, results gather
+                 back with routing weights.  O(top_k x tokens) FLOPs.
+                 Tokens beyond an expert's capacity are dropped (standard
+                 Switch-style behaviour), tracked by `dropped_fraction`.
+
+Roaring integration: per-expert token-id sets are exposed as Roaring
+bitmaps by `repro.serve/telemetry` helpers for load-balance analytics
+(paper section 5.9 fast counts).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# dense MLP
+# ---------------------------------------------------------------------------
+
+def mlp_params(cfg, rng, d_ff=None):
+    d = cfg.d_model
+    ff = d_ff or cfg.dense_d_ff or cfg.d_ff
+    k = jax.random.split(rng, 3)
+    std_in, std_out = d ** -0.5, ff ** -0.5
+    if cfg.act in ("swiglu", "geglu"):
+        return {
+            "w_gate": jax.random.normal(k[0], (d, ff), jnp.float32) * std_in,
+            "w_up": jax.random.normal(k[1], (d, ff), jnp.float32) * std_in,
+            "w_down": jax.random.normal(k[2], (ff, d), jnp.float32) * std_out,
+        }
+    return {
+        "w_in": jax.random.normal(k[0], (d, ff), jnp.float32) * std_in,
+        "w_out": jax.random.normal(k[1], (ff, d), jnp.float32) * std_out,
+    }
+
+
+def _act(x, kind):
+    if kind == "swiglu":
+        return jax.nn.silu(x)
+    return jax.nn.gelu(x)
+
+
+def mlp(x, p, cfg):
+    dt = x.dtype
+    if cfg.act in ("swiglu", "geglu"):
+        h = _act(x @ p["w_gate"].astype(dt), cfg.act) * (x @ p["w_up"].astype(dt))
+        return h @ p["w_down"].astype(dt)
+    return _act(x @ p["w_in"].astype(dt), "gelu") @ p["w_out"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+def moe_params(cfg, rng):
+    d = cfg.d_model
+    ff = cfg.moe_d_ff or cfg.d_ff
+    e = cfg.n_experts
+    k = jax.random.split(rng, 5)
+    std_in, std_out = d ** -0.5, ff ** -0.5
+    p = {
+        "router": jax.random.normal(k[0], (d, e), jnp.float32) * std_in,
+        "wg": jax.random.normal(k[1], (e, d, ff), jnp.float32) * std_in,
+        "wu": jax.random.normal(k[2], (e, d, ff), jnp.float32) * std_in,
+        "wd": jax.random.normal(k[3], (e, ff, d), jnp.float32) * std_out,
+    }
+    if cfg.n_shared_experts:
+        sf = cfg.n_shared_experts * ff
+        ks = jax.random.split(k[4], 3)
+        p["shared"] = {
+            "w_gate": jax.random.normal(ks[0], (d, sf), jnp.float32) * std_in,
+            "w_up": jax.random.normal(ks[1], (d, sf), jnp.float32) * std_in,
+            "w_down": jax.random.normal(ks[2], (sf, d), jnp.float32)
+            * (sf ** -0.5),
+        }
+    return p
+
+
+def _routing(x2, p, cfg):
+    """x2: (T, d) -> (topk weights (T, K), topk experts (T, K), aux loss)."""
+    logits = (x2.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                   # (T, E)
+    w, idx = jax.lax.top_k(probs, cfg.moe_top_k)              # (T, K)
+    w = w / jnp.maximum(w.sum(axis=-1, keepdims=True), 1e-9)
+    # Switch-style load-balance auxiliary loss
+    e = cfg.n_experts
+    me = probs.mean(axis=0)                                   # (E,)
+    ce = jnp.zeros((e,), jnp.float32).at[idx.reshape(-1)].add(
+        1.0 / idx.size)
+    aux = e * jnp.sum(me * ce)
+    return w.astype(x2.dtype), idx, aux
+
+
+def _expert_ffn(xe, p, cfg):
+    """xe: (E, C, d) -> (E, C, d) through each expert's SwiGLU."""
+    dt = xe.dtype
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["wg"].astype(dt))) \
+        * jnp.einsum("ecd,edf->ecf", xe, p["wu"].astype(dt))
+    return jnp.einsum("ecf,efd->ecd", h, p["wd"].astype(dt))
+
+
+def moe(x, p, cfg):
+    """x: (B, S, d) -> (y (B, S, d), metrics dict)."""
+    b, s, d = x.shape
+    x2 = x.reshape(b * s, d)
+    w, idx, aux = _routing(x2, p, cfg)
+    t, k = idx.shape
+    e = cfg.n_experts
+
+    if cfg.moe_dispatch == "dense":
+        # oracle: all experts on all tokens
+        ye = _expert_ffn(
+            jnp.broadcast_to(x2[None], (e, t, d)).astype(x.dtype), p, cfg)
+        onehot = jax.nn.one_hot(idx, e, dtype=x.dtype)        # (T, K, E)
+        comb = (onehot * w[..., None]).sum(axis=1)            # (T, E)
+        y2 = jnp.einsum("te,etd->td", comb, ye)
+        dropped = jnp.float32(0.0)
+    else:
+        # Dispatch LOCALLY within each data shard: tokens grouped by dp rank
+        # scatter into per-group buckets, so the bucket tensor is dp-sharded
+        # instead of partial-replicated (which costs an all-reduce of the
+        # expert matmul outputs -- EXPERIMENTS.md sec Perf, mixtral cell).
+        from repro.dist import ctx
+        dpa = ctx.dp_axes()
+        sizes = ctx.axis_sizes()
+        groups = 1
+        for a in dpa:
+            groups *= sizes.get(a, 1)
+        if groups <= 1 or t % groups != 0:
+            groups = 1
+        tl = t // groups                                      # local tokens
+        cap = int(max(1, round(cfg.capacity_factor * tl * k / e)))
+        cap = min(cap, tl)
+        xg = x2.reshape(groups, tl, d)
+        idxg = idx.reshape(groups, tl, k)
+
+        def dispatch(xl, il):
+            flat_e = il.reshape(-1)                           # (Tl*K,)
+            onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+            pos = jnp.take_along_axis(jnp.cumsum(onehot, axis=0) - 1,
+                                      flat_e[:, None], axis=1)[:, 0]
+            keep = pos < cap
+            dst = jnp.where(keep, flat_e * cap + pos, e * cap)
+            buckets = jnp.zeros((e * cap + 1, d), x.dtype).at[dst].set(
+                jnp.repeat(xl, k, axis=0), mode="drop")
+            return buckets[:-1].reshape(e, cap, d), keep, \
+                jnp.where(keep, flat_e * cap + pos, 0)
+
+        buckets, keep, src = jax.vmap(dispatch)(xg, idxg)     # (G, e, cap, d)
+        buckets = ctx.constrain(buckets, {0: dpa, 1: "model"})
+        dropped = 1.0 - keep.mean()
+        dt_ = x.dtype
+        hbk = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buckets,
+                                     p["wg"].astype(dt_))) \
+            * jnp.einsum("gecd,edf->gecf", buckets, p["wu"].astype(dt_))
+        ye = jnp.einsum("gecf,efd->gecd", hbk, p["wd"].astype(dt_))
+        # reshard expert outputs to group-local BEFORE the combine gather:
+        # an explicit bf16 all-gather over the model axis, instead of the
+        # mask + f32 all-reduce GSPMD otherwise derives for a cross-shard
+        # take_along_axis (EXPERIMENTS.md sec Perf, deepseek cell)
+        ye = ctx.constrain(ye, {0: dpa})
+        gathered = ye.reshape(groups, e * cap, d)
+        yk = jnp.take_along_axis(gathered, src[..., None], axis=1) \
+            * keep[..., None].astype(dt_)                     # (G, Tl*K, d)
+        y2 = (yk.reshape(t, k, d) * w[..., None]).sum(axis=1)
+
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        dt = x.dtype
+        hs = jax.nn.silu(x2 @ sp["w_gate"].astype(dt)) \
+            * (x2 @ sp["w_up"].astype(dt))
+        y2 = y2 + hs @ sp["w_down"].astype(dt)
+    metrics = {"router_aux": aux, "dropped_fraction": dropped,
+               "expert_idx": idx.reshape(b, s, k)}
+    return y2.reshape(b, s, d), metrics

@@ -1,0 +1,404 @@
+"""State-space / recurrent mixers: Mamba-1 (Jamba), mLSTM and sLSTM (xLSTM).
+
+All three are attention-free mixers with O(1)-per-token decode state -- the
+sub-quadratic families that run the `long_500k` shape (DESIGN.md section 8).
+
+Mamba uses a chunked selective scan: `lax.scan` over sequence chunks with an
+associative scan inside each chunk, so peak activation memory is
+O(B * chunk * d_inner * d_state) instead of O(B * S * ...).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1
+# ---------------------------------------------------------------------------
+
+def mamba_dims(cfg):
+    di = cfg.ssm_expand * cfg.d_model
+    dt_rank = cfg.ssm_dt_rank or -(-cfg.d_model // 16)
+    return di, dt_rank
+
+
+def mamba_params(cfg, rng):
+    d = cfg.d_model
+    di, dt_rank = mamba_dims(cfg)
+    ds, dc = cfg.ssm_d_state, cfg.ssm_d_conv
+    k = jax.random.split(rng, 6)
+    return {
+        "in_proj": jax.random.normal(k[0], (d, 2 * di), jnp.float32)
+        * d ** -0.5,
+        "conv_w": jax.random.normal(k[1], (dc, di), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": jax.random.normal(k[2], (di, dt_rank + 2 * ds), jnp.float32)
+        * di ** -0.5,
+        "dt_proj": jax.random.normal(k[3], (dt_rank, di), jnp.float32)
+        * dt_rank ** -0.5,
+        "dt_bias": jnp.full((di,), -4.6, jnp.float32),  # softplus ~ 0.01
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, ds))
+            .copy()),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": jax.random.normal(k[5], (di, d), jnp.float32) * di ** -0.5,
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x: (B, T, di); w: (dc, di); state: (B, dc-1, di)
+    carried tail for decode.  Returns (y, new_state)."""
+    dc = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], dc - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(dc))
+    new_state = xp[:, -(dc - 1):, :]
+    return y + b[None, None, :], new_state
+
+
+def _selective_scan_chunk(a, bx, h0):
+    """a, bx: (B, T, di, ds); h0: (B, di, ds) -> (h_all (B,T,di,ds), h_T)."""
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+    a_c, b_c = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    h_all = b_c + a_c * h0[:, None]
+    return h_all, h_all[:, -1]
+
+
+def mamba_train(x, p, cfg, return_state=False):
+    """x: (B, S, d) -> (B, S, d) [, final decode state]."""
+    b, s, d = x.shape
+    di, dt_rank = mamba_dims(cfg)
+    ds = cfg.ssm_d_state
+    dt_proj = p["dt_proj"].astype(x.dtype)
+    xz = x @ p["in_proj"].astype(x.dtype)
+    xi_raw, z = jnp.split(xz, 2, axis=-1)
+    xi, _ = _causal_conv(xi_raw, p["conv_w"].astype(x.dtype),
+                         p["conv_b"].astype(x.dtype))
+    xi = jax.nn.silu(xi)
+    proj = xi @ p["x_proj"].astype(x.dtype)
+    dt = jax.nn.softplus(proj[..., :dt_rank] @ dt_proj
+                         + p["dt_bias"].astype(x.dtype))      # (B, S, di)
+    bmat = proj[..., dt_rank:dt_rank + ds]                    # (B, S, ds)
+    cmat = proj[..., dt_rank + ds:]                           # (B, S, ds)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))              # (di, ds)
+
+    chunk = min(cfg.ssm_chunk, s)
+    assert s % chunk == 0
+    nch = s // chunk
+
+    def body(h, inp):
+        xi_c, dt_c, b_c, c_c = inp                            # (B, T, ...)
+        dt32 = dt_c.astype(jnp.float32)
+        abar = jnp.exp(dt32[..., None] * a[None, None])       # (B,T,di,ds)
+        bx = (dt32 * xi_c.astype(jnp.float32))[..., None] \
+            * b_c.astype(jnp.float32)[:, :, None, :]          # (B,T,di,ds)
+        h_all, h_t = _selective_scan_chunk(abar, bx, h)
+        y = jnp.einsum("btds,bts->btd", h_all,
+                       c_c.astype(jnp.float32))               # (B,T,di)
+        return h_t, y.astype(x.dtype)
+
+    def to_chunks(t):
+        return t.reshape(b, nch, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    h0 = jnp.zeros((b, di, ds), jnp.float32)
+    h_final, ys = jax.lax.scan(
+        body, h0, (to_chunks(xi), to_chunks(dt), to_chunks(bmat),
+                   to_chunks(cmat)))
+    y = ys.swapaxes(0, 1).reshape(b, s, di)
+    y = y + xi * p["D"].astype(x.dtype)[None, None, :]
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    if return_state:
+        # conv state carries the last (d_conv - 1) *pre-conv* activations
+        state = {"conv": xi_raw[:, -(cfg.ssm_d_conv - 1):, :],
+                 "h": h_final}
+        return out, state
+    return out
+
+
+def mamba_init_state(cfg, batch, dtype):
+    di, _ = mamba_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_d_conv - 1, di), dtype),
+        "h": jnp.zeros((batch, di, cfg.ssm_d_state), jnp.float32),
+    }
+
+
+def mamba_decode(x_tok, p, cfg, state):
+    """x_tok: (B, d); O(1) state update."""
+    b, d = x_tok.shape
+    di, dt_rank = mamba_dims(cfg)
+    ds = cfg.ssm_d_state
+    x = x_tok[:, None, :]
+    xz = x @ p["in_proj"].astype(x.dtype)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi, conv_state = _causal_conv(xi, p["conv_w"].astype(x.dtype),
+                                  p["conv_b"].astype(x.dtype), state["conv"])
+    xi = jax.nn.silu(xi)[:, 0]                                # (B, di)
+    proj = xi @ p["x_proj"].astype(x.dtype)
+    dt = jax.nn.softplus(proj[..., :dt_rank] @ p["dt_proj"].astype(x.dtype)
+                         + p["dt_bias"].astype(x.dtype))
+    bvec = proj[..., dt_rank:dt_rank + ds].astype(jnp.float32)
+    cvec = proj[..., dt_rank + ds:].astype(jnp.float32)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt32 = dt.astype(jnp.float32)
+    abar = jnp.exp(dt32[..., None] * a[None])                 # (B, di, ds)
+    bx = (dt32 * xi.astype(jnp.float32))[..., None] * bvec[:, None, :]
+    h = abar * state["h"] + bx
+    y = jnp.einsum("bds,bs->bd", h, cvec).astype(x_tok.dtype)
+    y = y + xi * p["D"].astype(x_tok.dtype)[None, :]
+    y = y * jax.nn.silu(z[:, 0])
+    out = y @ p["out_proj"].astype(x_tok.dtype)
+    return out, {"conv": conv_state, "h": h}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory) and sLSTM (scalar memory)
+# ---------------------------------------------------------------------------
+
+def mlstm_params(cfg, rng):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    h = cfg.xlstm_heads
+    dh = di // h
+    k = jax.random.split(rng, 7)
+    std = di ** -0.5
+    return {
+        "up": jax.random.normal(k[0], (d, 2 * di), jnp.float32) * d ** -0.5,
+        "wq": jax.random.normal(k[1], (di, h, dh), jnp.float32) * std,
+        "wk": jax.random.normal(k[2], (di, h, dh), jnp.float32) * std,
+        "wv": jax.random.normal(k[3], (di, h, dh), jnp.float32) * std,
+        "wi": jax.random.normal(k[4], (di, h), jnp.float32) * std,
+        "wf": jax.random.normal(k[5], (di, h), jnp.float32) * std,
+        "bi": jnp.zeros((h,), jnp.float32),
+        "bf": jnp.full((h,), 3.0, jnp.float32),   # forget-dominant init
+        "ln": jnp.zeros((di,), jnp.float32),
+        "down": jax.random.normal(k[6], (di, d), jnp.float32) * di ** -0.5,
+    }
+
+
+def mlstm_init_state(cfg, batch, dtype):
+    di = cfg.ssm_expand * cfg.d_model
+    h = cfg.xlstm_heads
+    dh = di // h
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_step(state, qkvif):
+    """One stabilized mLSTM step (exponential gating, Beck et al. 2024)."""
+    q, k, v, i_pre, f_pre = qkvif          # (B,h,dh) x3, (B,h) x2
+    C, n, m = state["C"], state["n"], state["m"]
+    f_log = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(f_log + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(f_log + m - m_new)
+    C_new = f_g[..., None, None] * C + i_g[..., None, None] \
+        * (v[..., :, None] * k[..., None, :])               # (B,h,dh,dh)
+    n_new = f_g[..., None] * n + i_g[..., None] * k
+    num = jnp.einsum("bhvk,bhk->bhv", C_new, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q)),
+                      jnp.exp(-m_new))
+    h_out = num / den[..., None]
+    return {"C": C_new, "n": n_new, "m": m_new}, h_out
+
+
+def _mlstm_inputs(xi, p, cfg):
+    h = cfg.xlstm_heads
+    q = jnp.einsum("btd,dhk->bthk", xi, p["wq"].astype(xi.dtype)) \
+        .astype(jnp.float32)
+    k = jnp.einsum("btd,dhk->bthk", xi, p["wk"].astype(xi.dtype)) \
+        .astype(jnp.float32) * (q.shape[-1] ** -0.5)
+    v = jnp.einsum("btd,dhk->bthk", xi, p["wv"].astype(xi.dtype)) \
+        .astype(jnp.float32)
+    i_pre = (xi @ p["wi"].astype(xi.dtype)).astype(jnp.float32) \
+        + p["bi"][None, None]
+    f_pre = (xi @ p["wf"].astype(xi.dtype)).astype(jnp.float32) \
+        + p["bf"][None, None]
+    return q, k, v, i_pre, f_pre
+
+
+def mlstm_train(x, p, cfg, return_state=False):
+    b, s, d = x.shape
+    di = cfg.ssm_expand * d
+    xz = x @ p["up"].astype(x.dtype)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    q, k, v, i_pre, f_pre = _mlstm_inputs(xi, p, cfg)
+
+    chunk = getattr(cfg, "xlstm_chunk", 0)
+    if chunk and s % chunk == 0 and s > chunk:
+        hs, st = _mlstm_chunked(q, k, v, i_pre, f_pre, cfg, chunk)
+    else:
+        def body(state, inp):
+            return _mlstm_step(state, inp)
+
+        state0 = mlstm_init_state(cfg, b, x.dtype)
+        swap = lambda t: t.swapaxes(0, 1)
+        st, hs = jax.lax.scan(body, state0,
+                              (swap(q), swap(k), swap(v), swap(i_pre),
+                               swap(f_pre)))
+        hs = hs.swapaxes(0, 1)
+    hs = hs.reshape(b, s, di).astype(x.dtype)
+    from repro.models.layers import rms_norm
+    hs = rms_norm(hs, p["ln"], cfg.norm_eps)
+    hs = hs * jax.nn.silu(z)
+    out = hs @ p["down"].astype(x.dtype)
+    return (out, st) if return_state else out
+
+
+def _mlstm_chunked(q, k, v, i_pre, f_pre, cfg, chunk):
+    """Chunkwise-parallel mLSTM (EXPERIMENTS.md sec Perf, xlstm hillclimb).
+
+    Mathematically identical to the sequential recurrence: the matrix state
+    C is updated once per chunk instead of once per token, and the
+    within-chunk contribution is an (L, L)-masked attention-like product.
+    HBM traffic for the state drops by the chunk length (the sequential
+    scan reads+writes C = (B, H, dh, dh) every token).
+
+    Derivation (stabilized, mirroring _mlstm_step exactly):
+        F_t     = cumsum(log_sigmoid(f_t))       within the chunk
+        m_t     = F_t + cummax(max(m0 - 0, max_{j<=t}(i_j - F_j)))
+        C_t     = e^{m0+F_t-m_t} C_0 + sum_{j<=t} e^{i_j+F_t-F_j-m_t} v_j k_j
+        h_t     = C_t q_t / max(|n_t q_t|, e^{-m_t})
+    """
+    b, s, h, dh = q.shape
+    n_chunks = s // chunk
+
+    def to_chunks(t):
+        return t.reshape(b, n_chunks, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    ic, fc = to_chunks(i_pre), to_chunks(f_pre)
+
+    state0 = mlstm_init_state(cfg, b, q.dtype)
+
+    def body(state, inp):
+        qt, kt, vt, it, ft = inp                  # (B, L, H, *) / (B, L, H)
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+        f_log = jax.nn.log_sigmoid(ft)            # (B, L, H)
+        F = jnp.cumsum(f_log, axis=1)             # decay from chunk start
+        # running stabilizer: m_t = F_t + cummax(max(m0, i_j - F_j))
+        g = jnp.maximum(m0[:, None], jax.lax.cummax(it - F, axis=1))
+        m = F + g                                 # (B, L, H)
+        # inter-chunk weights and within-chunk log-weight matrix
+        w0 = jnp.exp(m0[:, None] + F - m)         # (B, L, H)
+        D = (it[:, None, :, :] + F[:, :, None, :] - F[:, None, :, :]
+             - m[:, :, None, :])                  # (B, L_t, L_j, H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        D = jnp.where(tri[None, :, :, None], D, -jnp.inf)
+        expD = jnp.exp(D)
+        A = jnp.einsum("bthd,bjhd->btjh", qt, kt) * expD
+        h_num = (w0[..., None] * jnp.einsum("bthd,bhvd->bthv", qt, C0)
+                 + jnp.einsum("btjh,bjhv->bthv", A, vt))
+        n_t = (w0[..., None] * n0[:, None]
+               + jnp.einsum("btjh,bjhd->bthd", expD, kt))
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bthd,bthd->bth", n_t, qt)), jnp.exp(-m))
+        h_out = h_num / den[..., None]            # (B, L, H, dh)
+        # chunk-end state (t = L-1)
+        m_new = m[:, -1]
+        wC = jnp.exp(m0 + F[:, -1] - m_new)       # (B, H)
+        wj = jnp.exp(it + F[:, -1:] - F - m_new[:, None])   # (B, L, H)
+        C_new = wC[..., None, None] * C0 + jnp.einsum(
+            "bjh,bjhv,bjhd->bhvd", wj, vt, kt)
+        n_new = wC[..., None] * n0 + jnp.einsum("bjh,bjhd->bhd", wj, kt)
+        return ({"C": C_new, "n": n_new, "m": m_new},
+                h_out.reshape(b, chunk, h * dh))
+
+    st, hs = jax.lax.scan(body, state0, (qc, kc, vc, ic, fc))
+    return hs.swapaxes(0, 1).reshape(b, s, h * dh), st
+
+
+def mlstm_decode(x_tok, p, cfg, state):
+    x = x_tok[:, None, :]
+    xz = x @ p["up"].astype(x.dtype)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    q, k, v, i_pre, f_pre = _mlstm_inputs(xi, p, cfg)
+    state, h_out = _mlstm_step(
+        state, (q[:, 0], k[:, 0], v[:, 0], i_pre[:, 0], f_pre[:, 0]))
+    b = x_tok.shape[0]
+    di = cfg.ssm_expand * cfg.d_model
+    hs = h_out.reshape(b, di).astype(x_tok.dtype)
+    from repro.models.layers import rms_norm
+    hs = rms_norm(hs, p["ln"], cfg.norm_eps)
+    hs = hs * jax.nn.silu(z[:, 0])
+    return hs @ p["down"].astype(x_tok.dtype), state
+
+
+def slstm_params(cfg, rng):
+    d = cfg.d_model
+    h = cfg.xlstm_heads
+    dh = d // h
+    ff = max(1, (4 * d) // 3)
+    k = jax.random.split(rng, 4)
+    return {
+        "w": jax.random.normal(k[0], (d, 4, h, dh), jnp.float32) * d ** -0.5,
+        "r": jax.random.normal(k[1], (4, h, dh, dh), jnp.float32) * dh ** -0.5,
+        "b": jnp.zeros((4, h, dh), jnp.float32),
+        "up": jax.random.normal(k[2], (d, 2 * ff), jnp.float32) * d ** -0.5,
+        "down": jax.random.normal(k[3], (ff, d), jnp.float32) * ff ** -0.5,
+    }
+
+
+def slstm_init_state(cfg, batch, dtype):
+    h = cfg.xlstm_heads
+    dh = cfg.d_model // h
+    z = jnp.zeros((batch, h, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, h, dh), -1e30,
+                                                  jnp.float32)}
+
+
+def _slstm_step(p, state, wx):
+    """wx: (B, 4, h, dh) precomputed input contributions."""
+    c, n, hprev, m = state["c"], state["n"], state["h"], state["m"]
+    rec = jnp.einsum("ghkl,bhl->bghk", p["r"].astype(jnp.float32), hprev)
+    pre = wx.astype(jnp.float32) + rec + p["b"][None]
+    i_pre, f_pre, z_pre, o_pre = (pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3])
+    f_log = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(f_log + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(f_log + m - m_new)
+    c_new = f_g * c + i_g * jnp.tanh(z_pre)
+    n_new = f_g * n + i_g
+    h_new = jax.nn.sigmoid(o_pre) * c_new / jnp.maximum(n_new, 1e-6)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}, h_new
+
+
+def slstm_train(x, p, cfg, return_state=False):
+    b, s, d = x.shape
+    h = cfg.xlstm_heads
+    dh = d // h
+    wx = jnp.einsum("bsd,dghk->bsghk", x, p["w"].astype(x.dtype))
+
+    def body(state, wx_t):
+        return _slstm_step(p, state, wx_t)
+
+    state0 = slstm_init_state(cfg, b, x.dtype)
+    st, hs = jax.lax.scan(body, state0, wx.swapaxes(0, 1))
+    hs = hs.swapaxes(0, 1).reshape(b, s, d).astype(x.dtype)
+    # post up/down projection (proj factor 4/3, gated)
+    u = hs @ p["up"].astype(x.dtype)
+    u1, u2 = jnp.split(u, 2, axis=-1)
+    out = (jax.nn.gelu(u1) * u2) @ p["down"].astype(x.dtype)
+    return (out, st) if return_state else out
+
+
+def slstm_decode(x_tok, p, cfg, state):
+    wx = jnp.einsum("bd,dghk->bghk", x_tok, p["w"].astype(x_tok.dtype))
+    state, h_new = _slstm_step(p, state, wx)
+    b, d = x_tok.shape
+    hs = h_new.reshape(b, d).astype(x_tok.dtype)
+    u = hs @ p["up"].astype(x_tok.dtype)
+    u1, u2 = jnp.split(u, 2, axis=-1)
+    return (jax.nn.gelu(u1) * u2) @ p["down"].astype(x_tok.dtype), state

@@ -1,0 +1,474 @@
+"""Unified model: embeds -> (prefix blocks + scanned pattern groups) -> head.
+
+The layer plan comes from ModelConfig.prefix / .pattern (see config.py).
+Parameters of each pattern position are stacked over repeats and the stack
+is traversed with `lax.scan`, so the lowered HLO is O(len(pattern)) in size
+regardless of depth -- essential for compiling 80-layer models in the
+multi-pod dry-run.
+
+Three entry points (shapes per the assignment):
+  * loss_and_metrics / train-step path  (train_4k)
+  * prefill                             (prefill_32k)
+  * decode_step                         (decode_32k, long_500k)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import mlp as M
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+
+ATTN = ("full", "local", "global", "enc")
+
+
+# ---------------------------------------------------------------------------
+# parameter construction
+# ---------------------------------------------------------------------------
+
+def _mixer_params(cfg, mixer, rng):
+    if mixer in ATTN:
+        return L.attn_params(cfg, rng)
+    if mixer == "mla":
+        return L.mla_params(cfg, rng)
+    if mixer == "mamba":
+        return S.mamba_params(cfg, rng)
+    if mixer == "mlstm":
+        return S.mlstm_params(cfg, rng)
+    if mixer == "slstm":
+        return S.slstm_params(cfg, rng)
+    raise ValueError(mixer)
+
+
+def block_params(cfg: ModelConfig, kind, rng):
+    mixer, ffn = kind
+    k = jax.random.split(rng, 2)
+    p = {"ln1": L.norm_params(cfg, cfg.d_model),
+         "mixer": _mixer_params(cfg, mixer, k[0])}
+    if cfg.post_block_norms:
+        p["ln1_post"] = L.norm_params(cfg, cfg.d_model)
+    if ffn == "mlp":
+        p["ln2"] = L.norm_params(cfg, cfg.d_model)
+        p["ffn"] = M.mlp_params(cfg, k[1])
+        if cfg.post_block_norms:
+            p["ln2_post"] = L.norm_params(cfg, cfg.d_model)
+    elif ffn == "moe":
+        p["ln2"] = L.norm_params(cfg, cfg.d_model)
+        p["ffn"] = M.moe_params(cfg, k[1])
+        if cfg.post_block_norms:
+            p["ln2_post"] = L.norm_params(cfg, cfg.d_model)
+    return p
+
+
+def init_params(cfg: ModelConfig, rng) -> dict:
+    ks = jax.random.split(rng, 4 + len(cfg.prefix))
+    d = cfg.d_model
+    params: dict = {
+        "embed": jax.random.normal(ks[0], (cfg.vocab, d), jnp.float32)
+        * d ** -0.5,
+        "final_norm": L.norm_params(cfg, d),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            ks[1], (d, cfg.vocab), jnp.float32) * d ** -0.5
+    if cfg.frontend != "none":
+        fd = cfg.frontend_dim or d
+        params["frontend_proj"] = jax.random.normal(
+            ks[2], (fd, d), jnp.float32) * fd ** -0.5
+    for i, kind in enumerate(cfg.prefix):
+        params[f"prefix_{i}"] = block_params(cfg, kind, ks[4 + i])
+    # stacked pattern groups
+    rep = cfg.n_repeats
+    if rep:
+        base = jax.random.split(ks[3], len(cfg.pattern))
+        pat = []
+        for pi, kind in enumerate(cfg.pattern):
+            rngs = jax.random.split(base[pi], rep)
+            pat.append(jax.vmap(lambda r, kind=kind: block_params(
+                cfg, kind, r))(rngs))
+        params["pattern"] = tuple(pat)
+    return params
+
+
+def param_shapes(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+
+
+# ---------------------------------------------------------------------------
+# forward blocks (training)
+# ---------------------------------------------------------------------------
+
+def block_train(x, p, cfg: ModelConfig, kind, positions):
+    mixer, ffn = kind
+    h = L.apply_norm(x, p["ln1"], cfg)
+    if mixer in ATTN:
+        h = L.attn_train(h, p["mixer"], cfg, mixer, positions)
+    elif mixer == "mla":
+        h = L.mla_train(h, p["mixer"], cfg, positions)
+    elif mixer == "mamba":
+        h = S.mamba_train(h, p["mixer"], cfg)
+    elif mixer == "mlstm":
+        h = S.mlstm_train(h, p["mixer"], cfg)
+    elif mixer == "slstm":
+        h = S.slstm_train(h, p["mixer"], cfg)
+    if cfg.post_block_norms:
+        h = L.apply_norm(h, p["ln1_post"], cfg)
+    x = x + h
+    aux = jnp.float32(0.0)
+    if ffn != "none":
+        h = L.apply_norm(x, p["ln2"], cfg)
+        if ffn == "mlp":
+            h = M.mlp(h, p["ffn"], cfg)
+        else:
+            h, metrics = M.moe(h, p["ffn"], cfg)
+            aux = metrics["router_aux"]
+        if cfg.post_block_norms:
+            h = L.apply_norm(h, p["ln2_post"], cfg)
+        x = x + h
+    return x, aux
+
+
+def _embed_inputs(params, batch, cfg: ModelConfig):
+    """Returns (x (B, S, d), positions (B, S), label_mask_offset)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    parts = []
+    if cfg.frontend != "none" and "frontend_embeds" in batch:
+        fe = batch["frontend_embeds"].astype(dt)
+        parts.append(fe @ params["frontend_proj"].astype(dt))
+    if "tokens" in batch:
+        emb = params["embed"].astype(dt)[batch["tokens"]]
+        parts.append(emb)
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dt)
+    from repro.dist import ctx
+    x = ctx.constrain(x, {0: ctx.dp_axes()})
+    b, s = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    return x, positions
+
+
+def backbone(params, x, positions, cfg: ModelConfig):
+    """Shared trunk: prefix blocks then scanned pattern groups."""
+    aux_total = jnp.float32(0.0)
+    for i, kind in enumerate(cfg.prefix):
+        x, aux = block_train(x, params[f"prefix_{i}"], cfg, kind, positions)
+        aux_total = aux_total + aux
+    if cfg.n_repeats:
+        pattern = cfg.pattern
+
+        def body(carry, layer_params):
+            h, aux_sum = carry
+            for pi, kind in enumerate(pattern):
+                h, aux = block_train(h, layer_params[pi], cfg, kind,
+                                     positions)
+                aux_sum = aux_sum + aux
+            return (h, aux_sum), None
+
+        if cfg.remat == "block":
+            body = jax.checkpoint(body, prevent_cse=False)
+        (x, aux_total), _ = jax.lax.scan(
+            body, (x, aux_total), params["pattern"])
+    x = L.apply_norm(x, params["final_norm"], cfg)
+    return x, aux_total
+
+
+def _logits(params, x, cfg: ModelConfig):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    if cfg.final_softcap:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits
+
+
+def _ce(logits, labels):
+    """logits (..., V) fp32-softmaxed CE; labels -1 = masked."""
+    logits = logits.astype(jnp.float32)
+    mask = labels >= 0
+    safe = jnp.where(mask, labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = jnp.where(mask, lse - gold, 0.0)
+    return nll.sum(), mask.sum()
+
+
+def loss_and_metrics(params, batch, cfg: ModelConfig):
+    """batch: {'tokens': (B,S)} and/or {'frontend_embeds'}, 'labels': (B,S).
+    Returns (loss, metrics)."""
+    x, positions = _embed_inputs(params, batch, cfg)
+    x, aux = backbone(params, x, positions, cfg)
+    labels = batch["labels"]
+    if labels.shape[1] != x.shape[1]:  # frontend tokens carry no labels
+        pad = x.shape[1] - labels.shape[1]
+        labels = jnp.pad(labels, ((0, 0), (pad, 0)), constant_values=-1)
+    if cfg.ce_chunk:
+        c = min(cfg.ce_chunk, x.shape[1])
+        s = x.shape[1]
+        assert s % c == 0
+        xs = x.reshape(x.shape[0], s // c, c, -1).swapaxes(0, 1)
+        ls = labels.reshape(labels.shape[0], s // c, c).swapaxes(0, 1)
+
+        def body(carry, inp):
+            nll_sum, n_sum = carry
+            xc, lc = inp
+            nll, n = _ce(_logits(params, xc, cfg), lc)
+            return (nll_sum + nll, n_sum + n), None
+
+        (nll, n), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.int32(0)),
+                                   (xs, ls))
+    else:
+        nll, n = _ce(_logits(params, x, cfg), labels)
+    loss = nll / jnp.maximum(n, 1)
+    total = loss + cfg.router_aux_coef * aux
+    return total, {"ce_loss": loss, "router_aux": aux, "tokens": n}
+
+
+# ---------------------------------------------------------------------------
+# decode state
+# ---------------------------------------------------------------------------
+
+def _mixer_state(cfg: ModelConfig, mixer, batch, s_max, dtype):
+    if mixer in ATTN:
+        return {"k": jnp.zeros((batch, cfg.n_kv_heads, s_max, cfg.hd), dtype),
+                "v": jnp.zeros((batch, cfg.n_kv_heads, s_max, cfg.hd), dtype)}
+    if mixer == "mla":
+        return {"ckv": jnp.zeros((batch, s_max, cfg.kv_lora_rank), dtype),
+                "kr": jnp.zeros((batch, s_max, cfg.qk_rope_dim), dtype)}
+    if mixer == "mamba":
+        return S.mamba_init_state(cfg, batch, dtype)
+    if mixer == "mlstm":
+        return S.mlstm_init_state(cfg, batch, dtype)
+    if mixer == "slstm":
+        return S.slstm_init_state(cfg, batch, dtype)
+    raise ValueError(mixer)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, s_max: int):
+    dt = jnp.dtype(cfg.compute_dtype)
+    state = {"pos": jnp.zeros((batch,), jnp.int32)}
+    for i, (mixer, _) in enumerate(cfg.prefix):
+        state[f"prefix_{i}"] = _mixer_state(cfg, mixer, batch, s_max, dt)
+    pat = []
+    for (mixer, _) in cfg.pattern:
+        one = _mixer_state(cfg, mixer, batch, s_max, dt)
+        # batch-major layer stacks (B, R, ...): keeps decode gathers local
+        # and contiguous per batch shard (EXPERIMENTS.md sec Perf)
+        pat.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a[:, None], (a.shape[0], cfg.n_repeats) + a.shape[1:])
+            .copy() if cfg.n_repeats else a, one))
+    state["pattern"] = tuple(pat)
+    return state
+
+
+def block_decode(x, p, cfg, kind, st, pos, block_mask_words):
+    mixer, ffn = kind
+    h = L.apply_norm(x, p["ln1"], cfg)
+    if mixer in ATTN:
+        h, st = L.attn_decode(h, p["mixer"], cfg, mixer, st, pos,
+                              block_mask_words)
+    elif mixer == "mla":
+        h, st = L.mla_decode(h, p["mixer"], cfg, st, pos)
+    elif mixer == "mamba":
+        h, st = S.mamba_decode(h, p["mixer"], cfg, st)
+    elif mixer == "mlstm":
+        h, st = S.mlstm_decode(h, p["mixer"], cfg, st)
+    elif mixer == "slstm":
+        h, st = S.slstm_decode(h, p["mixer"], cfg, st)
+    if cfg.post_block_norms:
+        h = L.apply_norm(h, p["ln1_post"], cfg)
+    x = x + h
+    if ffn != "none":
+        h = L.apply_norm(x, p["ln2"], cfg)
+        if ffn == "mlp":
+            h = M.mlp(h[:, None, :], p["ffn"], cfg)[:, 0]
+        else:
+            h, _ = M.moe(h[:, None, :], p["ffn"], cfg)
+            h = h[:, 0]
+        if cfg.post_block_norms:
+            h = L.apply_norm(h, p["ln2_post"], cfg)
+        x = x + h
+    return x, st
+
+
+def decode_step(params, state, tokens, cfg: ModelConfig,
+                block_mask_words=None):
+    """One decode step.  tokens: (B,) int32; returns (logits (B, V), state).
+
+    For 'global' mixers with cfg.roaring_sparse_global, block_mask_words
+    (B, words) uint32 Roaring containers select visible KV blocks -- the
+    paper's data structure on the serving hot path."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    pos = state["pos"]
+    x = params["embed"].astype(dt)[tokens]
+    if cfg.scale_embed:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dt)
+    new_state = {"pos": pos + 1}
+    for i, kind in enumerate(cfg.prefix):
+        x, st = block_decode(x, params[f"prefix_{i}"], cfg, kind,
+                             state[f"prefix_{i}"], pos, block_mask_words)
+        new_state[f"prefix_{i}"] = st
+    if cfg.n_repeats:
+        pattern = cfg.pattern
+
+        # Layer-stacked states ride the scan CARRY and are updated in place
+        # (token-column scatters for KV caches) instead of being re-stacked
+        # as scan outputs -- re-stacking copies the full per-layer cache
+        # every step (EXPERIMENTS.md sec Perf, decode restructure).
+        def body(carry, inp):
+            h, pat_state = carry
+            layer_params, i = inp
+            pat_state = list(pat_state)
+            for pi, kind in enumerate(pattern):
+                mixer, ffn = kind
+                p = layer_params[pi]
+                st = pat_state[pi]
+                hn = L.apply_norm(h, p["ln1"], cfg)
+                if mixer in ATTN:
+                    hn, k_stack, v_stack = L.attn_decode_stacked(
+                        hn, p["mixer"], cfg, mixer, st["k"], st["v"], i,
+                        pos, block_mask_words)
+                    pat_state[pi] = {"k": k_stack, "v": v_stack}
+                elif mixer == "mla":
+                    hn, ckv, kr = L.mla_decode_stacked(
+                        hn, p["mixer"], cfg, st["ckv"], st["kr"], i, pos)
+                    pat_state[pi] = {"ckv": ckv, "kr": kr}
+                else:
+                    st_i = jax.tree.map(
+                        lambda a: jax.lax.dynamic_index_in_dim(
+                            a, i, 1, keepdims=False), st)
+                    if mixer == "mamba":
+                        hn, st_i = S.mamba_decode(hn, p["mixer"], cfg, st_i)
+                    elif mixer == "mlstm":
+                        hn, st_i = S.mlstm_decode(hn, p["mixer"], cfg, st_i)
+                    elif mixer == "slstm":
+                        hn, st_i = S.slstm_decode(hn, p["mixer"], cfg, st_i)
+                    pat_state[pi] = jax.tree.map(
+                        lambda full, upd: jax.lax.dynamic_update_index_in_dim(
+                            full, upd.astype(full.dtype), i, 1), st, st_i)
+                if cfg.post_block_norms:
+                    hn = L.apply_norm(hn, p["ln1_post"], cfg)
+                h = h + hn
+                if ffn != "none":
+                    hn = L.apply_norm(h, p["ln2"], cfg)
+                    if ffn == "mlp":
+                        hn = M.mlp(hn[:, None, :], p["ffn"], cfg)[:, 0]
+                    else:
+                        hn, _ = M.moe(hn[:, None, :], p["ffn"], cfg)
+                        hn = hn[:, 0]
+                    if cfg.post_block_norms:
+                        hn = L.apply_norm(hn, p["ln2_post"], cfg)
+                    h = h + hn
+            return (h, tuple(pat_state)), None
+
+        (x, pat_state), _ = jax.lax.scan(
+            body, (x, state["pattern"]),
+            (params["pattern"], jnp.arange(cfg.n_repeats)))
+        new_state["pattern"] = pat_state
+    else:
+        new_state["pattern"] = state["pattern"]
+    x = L.apply_norm(x, params["final_norm"], cfg)
+    logits = _logits(params, x, cfg)
+    return logits, new_state
+
+
+# ---------------------------------------------------------------------------
+# prefill (builds the decode state for a whole prompt)
+# ---------------------------------------------------------------------------
+
+def _mixer_prefill(x, p, cfg, mixer, positions, s_max, dtype):
+    """Returns (mixer output, decode state after the prompt)."""
+    b, s, _ = x.shape
+    if mixer in ATTN:
+        q, k, v = L._project_qkv(x, p, cfg, positions)
+        out = L.flash_attention(
+            q, k, v, causal=(mixer != "enc"),
+            window=cfg.sliding_window if mixer == "local" else 0,
+            softcap=cfg.attn_softcap, q_chunk=cfg.attn_q_chunk,
+            k_chunk=cfg.attn_k_chunk, block_skip=cfg.flash_block_skip)
+        out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+        kc = jnp.zeros((b, cfg.n_kv_heads, s_max, cfg.hd), dtype)
+        vc = jnp.zeros((b, cfg.n_kv_heads, s_max, cfg.hd), dtype)
+        kc = jax.lax.dynamic_update_slice(
+            kc, k.transpose(0, 2, 1, 3).astype(dtype), (0, 0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            vc, v.transpose(0, 2, 1, 3).astype(dtype), (0, 0, 0, 0))
+        return out, {"k": kc, "v": vc}
+    if mixer == "mla":
+        out = L.mla_train(x, p, cfg, positions)
+        ckv, kr = L._mla_ckv(x, p, cfg, positions)
+        ckv_c = jnp.zeros((b, s_max, cfg.kv_lora_rank), dtype)
+        kr_c = jnp.zeros((b, s_max, cfg.qk_rope_dim), dtype)
+        ckv_c = jax.lax.dynamic_update_slice(ckv_c, ckv.astype(dtype),
+                                             (0, 0, 0))
+        kr_c = jax.lax.dynamic_update_slice(kr_c, kr.astype(dtype), (0, 0, 0))
+        return out, {"ckv": ckv_c, "kr": kr_c}
+    if mixer == "mamba":
+        # the chunked train pass carries the exact decode state
+        out, st = S.mamba_train(x, p, cfg, return_state=True)
+        st = {"conv": st["conv"].astype(dtype), "h": st["h"]}
+        return out, st
+    if mixer == "mlstm":
+        out, st = S.mlstm_train(x, p, cfg, return_state=True)
+        return out, st
+    if mixer == "slstm":
+        out, st = S.slstm_train(x, p, cfg, return_state=True)
+        return out, st
+    raise ValueError(mixer)
+
+
+def _block_prefill(x, p, cfg, kind, positions, s_max, dtype):
+    mixer, ffn = kind
+    h = L.apply_norm(x, p["ln1"], cfg)
+    h, st = _mixer_prefill(h, p["mixer"], cfg, mixer, positions, s_max, dtype)
+    if cfg.post_block_norms:
+        h = L.apply_norm(h, p["ln1_post"], cfg)
+    x = x + h
+    if ffn != "none":
+        h = L.apply_norm(x, p["ln2"], cfg)
+        h = M.mlp(h, p["ffn"], cfg) if ffn == "mlp" \
+            else M.moe(h, p["ffn"], cfg)[0]
+        if cfg.post_block_norms:
+            h = L.apply_norm(h, p["ln2_post"], cfg)
+        x = x + h
+    return x, st
+
+
+def prefill(params, batch, cfg: ModelConfig, s_max: int | None = None):
+    """Process a prompt; returns (last-position logits, decode state)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    x, positions = _embed_inputs(params, batch, cfg)
+    b, s = x.shape[0], x.shape[1]
+    s_max = s_max or s
+    state = {"pos": jnp.full((b,), s, jnp.int32)}
+    for i, kind in enumerate(cfg.prefix):
+        x, st = _block_prefill(x, params[f"prefix_{i}"], cfg, kind,
+                               positions, s_max, dt)
+        state[f"prefix_{i}"] = st
+    if cfg.n_repeats:
+        pattern = cfg.pattern
+
+        def body(h, layer_params):
+            sts = []
+            for pi, kind in enumerate(pattern):
+                h, st = _block_prefill(h, layer_params[pi], cfg, kind,
+                                       positions, s_max, dt)
+                sts.append(st)
+            return h, tuple(sts)
+
+        x, pat_state = jax.lax.scan(body, x, params["pattern"])
+        # scan stacks layer-major; decode carries batch-major stacks
+        state["pattern"] = jax.tree.map(
+            lambda a: jnp.swapaxes(a, 0, 1), pat_state)
+    else:
+        state["pattern"] = ()
+    x = L.apply_norm(x, params["final_norm"], cfg)
+    logits = _logits(params, x[:, -1:, :], cfg)[:, 0]
+    return logits, state

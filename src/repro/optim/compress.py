@@ -1,0 +1,73 @@
+"""Top-k gradient compression with Roaring coordinate sets (DESIGN.md sec 2).
+
+Distributed-optimization trick for data-parallel reduction: instead of
+all-reducing the full dense gradient (N * 4 bytes per replica pair), each
+replica sends its top-k magnitudes as (values, coordinate set).  On the
+host/bookkeeping side the coordinate set is exactly a Roaring bitmap (the
+paper's data structure) -- sorted int32 ids, heavily clustered, run-friendly
+after momentum warmup.  On the wire inside jit we all-gather k (value, index)
+pairs per replica and scatter-add, which lowers to an all-gather of
+2 * k * 4 bytes instead of an all-reduce of N * 4 bytes: visible in the
+dry-run's collective table when k << N.
+
+Error feedback (residual accumulation) keeps the compressed SGD unbiased in
+the long run (Stich et al.); the residual lives in optimizer state.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bitmap import RoaringBitmap
+
+
+def topk_sparsify(g: jax.Array, k: int):
+    """Dense gradient -> (values (k,), indices (k,), dense residual)."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    kept = flat[idx]
+    residual = flat.at[idx].set(0.0).reshape(g.shape)
+    return kept, idx.astype(jnp.int32), residual
+
+
+def densify(values: jax.Array, indices: jax.Array, shape) -> jax.Array:
+    n = int(np.prod(shape))
+    return jnp.zeros((n,), jnp.float32).at[indices].add(values).reshape(shape)
+
+
+def sparse_allreduce(g: jax.Array, axis_name: str, k: int,
+                     residual: jax.Array | None = None):
+    """Inside shard_map over `axis_name`: compress, all-gather, scatter-add.
+
+    Returns (reduced dense gradient averaged over the axis, new residual).
+    """
+    if residual is not None:
+        g = g + residual
+    vals, idx, new_res = topk_sparsify(g, k)
+    all_vals = jax.lax.all_gather(vals, axis_name)   # (R, k)
+    all_idx = jax.lax.all_gather(idx, axis_name)     # (R, k)
+    r = all_vals.shape[0]
+    dense = densify(all_vals.reshape(-1), all_idx.reshape(-1), g.shape)
+    return dense / r, new_res
+
+
+def coordinate_bitmap(indices) -> RoaringBitmap:
+    """Host-side: the transmitted coordinate set as a Roaring bitmap.
+    Used for logging compression telemetry (bits/coordinate) and for
+    delta-coding coordinate sets across steps (A xor B)."""
+    return RoaringBitmap.from_values(np.asarray(indices, np.uint32))
+
+
+def wire_bytes_dense(n: int) -> int:
+    return 4 * n
+
+
+def wire_bytes_sparse(indices) -> int:
+    """4 bytes/value + the Roaring-serialized coordinate set."""
+    from repro.core.serde import serialized_size_bytes
+    bm = coordinate_bitmap(indices)
+    return 4 * len(bm) + serialized_size_bytes(bm.run_optimize())

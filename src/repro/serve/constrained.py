@@ -1,0 +1,59 @@
+"""Constrained decoding with Roaring vocabulary masks.
+
+An allowed-token set over a 152 k vocabulary is 3 Roaring chunks; grammar /
+lexicon state transitions are set algebra (union of continuations,
+intersection with hard filters, difference for banned strings) -- all on the
+paper's operations, including the count-only variants for quick feasibility
+checks.  At sampling time the active set renders to a dense additive mask.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import RoaringBitmap, to_dense
+
+
+class VocabConstraint:
+    def __init__(self, vocab: int, allowed: RoaringBitmap | None = None):
+        self.vocab = vocab
+        self.allowed = allowed if allowed is not None \
+            else RoaringBitmap.from_range(0, vocab)
+
+    # set algebra over constraints -----------------------------------
+    def intersect(self, other: "VocabConstraint") -> "VocabConstraint":
+        return VocabConstraint(self.vocab, self.allowed & other.allowed)
+
+    def union(self, other: "VocabConstraint") -> "VocabConstraint":
+        return VocabConstraint(self.vocab, self.allowed | other.allowed)
+
+    def ban(self, token_ids) -> "VocabConstraint":
+        return VocabConstraint(
+            self.vocab,
+            self.allowed - RoaringBitmap.from_values(
+                np.asarray(token_ids, np.uint32)))
+
+    def feasible(self) -> bool:
+        return self.allowed.cardinality > 0   # fast count, never materialize
+
+    def n_allowed(self) -> int:
+        return self.allowed.cardinality
+
+    # rendering --------------------------------------------------------
+    def dense_mask(self) -> np.ndarray:
+        """(V,) float32 additive mask: 0 for allowed, -inf for banned."""
+        dense = to_dense(self.allowed, self.vocab)
+        return np.where(dense, 0.0, -np.inf).astype(np.float32)
+
+    def apply(self, logits):
+        return logits + jnp.asarray(self.dense_mask())
+
+
+def lexicon_constraint(vocab: int, lexicons: dict[str, np.ndarray],
+                       active: list[str]) -> VocabConstraint:
+    """Union of the active lexicons' token sets."""
+    bms = [RoaringBitmap.from_values(lexicons[name].astype(np.uint32))
+           for name in active]
+    return VocabConstraint(vocab, RoaringBitmap.or_many(bms)) if bms \
+        else VocabConstraint(vocab)

@@ -1,0 +1,98 @@
+"""Batched serving engine: prefill -> decode loop with Roaring integrations.
+
+Per-request state carries
+  * a Roaring block-visibility set (sink + sliding local + pinned blocks)
+    rendered to container words for the block-sparse attention kernel,
+  * an optional VocabConstraint (constrained decoding),
+  * paged-KV bookkeeping via PagedKVAllocator.
+Runs on CPU with reduced configs (examples/constrained_serve.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import RoaringBitmap
+from repro.core.tensor import block_mask_words
+from repro.models import transformer as T
+from repro.serve.constrained import VocabConstraint
+from repro.serve.kv_cache import PagedKVAllocator
+
+
+@dataclasses.dataclass
+class BlockPolicy:
+    """Which KV blocks stay visible for long-context decode."""
+    sink_blocks: int = 1          # always keep the first blocks
+    local_blocks: int = 8         # sliding window of recent blocks
+    pinned: RoaringBitmap | None = None   # retrieval-pinned blocks
+
+    def visible_set(self, kv_len: int, block_size: int) -> RoaringBitmap:
+        n_blocks = max(1, -(-kv_len // block_size))
+        sink = RoaringBitmap.from_range(0, min(self.sink_blocks, n_blocks))
+        lo = max(0, n_blocks - self.local_blocks)
+        local = RoaringBitmap.from_range(lo, n_blocks)
+        vis = sink | local
+        if self.pinned is not None:
+            vis = vis | self.pinned
+        return vis
+
+
+class Engine:
+    def __init__(self, cfg, params, max_seq: int,
+                 policy: BlockPolicy | None = None,
+                 constraint: VocabConstraint | None = None,
+                 page_size: int = 128, greedy: bool = True, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.policy = policy or BlockPolicy()
+        self.constraint = constraint
+        self.greedy = greedy
+        self.rng = jax.random.key(seed)
+        self.allocator = PagedKVAllocator(
+            n_pages=max(64, 4 * max_seq // page_size), page_size=page_size)
+        self._decode = jax.jit(
+            lambda p, st, t, m: T.decode_step(p, st, t, cfg, m))
+        self.n_blocks = max(1, max_seq // cfg.attn_block_size)
+
+    def _mask_words(self, kv_lens: list[int]):
+        sets = [self.policy.visible_set(kl, self.cfg.attn_block_size)
+                for kl in kv_lens]
+        return block_mask_words(sets, self.n_blocks)
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int) -> np.ndarray:
+        """prompts: (B, S0) int32 -> (B, max_new_tokens) int32."""
+        b, s0 = prompts.shape
+        for i in range(b):
+            self.allocator.extend(i, s0)
+        logits, state = T.prefill(
+            self.params, {"tokens": jnp.asarray(prompts)}, self.cfg,
+            s_max=self.max_seq)
+        out = np.zeros((b, max_new_tokens), np.int32)
+        tok = self._select(logits)
+        for t in range(max_new_tokens):
+            out[:, t] = np.asarray(tok)
+            kv_lens = [s0 + t + 1] * b
+            for i in range(b):
+                self.allocator.extend(i, kv_lens[i])
+            mask = self._mask_words(kv_lens)
+            logits, state = self._decode(self.params, state,
+                                         jnp.asarray(tok), mask)
+            tok = self._select(logits)
+        return out
+
+    def _select(self, logits):
+        if self.constraint is not None:
+            logits = self.constraint.apply(logits)
+        if self.greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.rng, sub = jax.random.split(self.rng)
+        return jax.random.categorical(sub, logits).astype(jnp.int32)
+
+    def release_all(self):
+        for sid in list(self.allocator.tables):
+            self.allocator.release(sid)

@@ -1,0 +1,58 @@
+"""MoE routing telemetry on Roaring sets (paper section 5.9 fast counts).
+
+Per training/serving step, each expert's routed-token-id set is a Roaring
+bitmap; load balance, expert overlap (Jaccard), and drift between steps
+(symmetric difference) are the paper's count-only operations -- computed
+without materializing intermediate sets.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import RoaringBitmap
+
+
+def routing_sets(expert_idx: np.ndarray, n_experts: int) -> list[RoaringBitmap]:
+    """expert_idx: (tokens, top_k) int -> per-expert token-id bitmaps."""
+    flat_tok = np.repeat(np.arange(expert_idx.shape[0], dtype=np.uint32),
+                         expert_idx.shape[1])
+    flat_e = expert_idx.reshape(-1)
+    out = []
+    for e in range(n_experts):
+        out.append(RoaringBitmap.from_values(flat_tok[flat_e == e]))
+    return out
+
+
+def load_balance_stats(sets: list[RoaringBitmap]) -> dict:
+    loads = np.array([bm.cardinality for bm in sets], np.float64)
+    total = loads.sum()
+    frac = loads / max(total, 1)
+    e = len(sets)
+    return {
+        "max_load_fraction": float(frac.max()),
+        "cv": float(loads.std() / max(loads.mean(), 1e-9)),
+        "entropy_ratio": float(
+            -(frac[frac > 0] * np.log(frac[frac > 0])).sum() / np.log(e)),
+    }
+
+
+def expert_overlap_matrix(sets: list[RoaringBitmap]) -> np.ndarray:
+    """Pairwise Jaccard between experts' token sets (fast counts)."""
+    e = len(sets)
+    out = np.zeros((e, e))
+    for i in range(e):
+        for j in range(i, e):
+            out[i, j] = out[j, i] = sets[i].jaccard(sets[j])
+    return out
+
+
+def routing_drift(prev: list[RoaringBitmap],
+                  cur: list[RoaringBitmap]) -> np.ndarray:
+    """Per-expert symmetric-difference cardinality between steps,
+    normalized by union -- 0 = stable routing, 1 = fully churned."""
+    out = np.zeros(len(cur))
+    for i, (a, b) in enumerate(zip(prev, cur)):
+        union = a.or_card(b)
+        out[i] = a.xor_card(b) / union if union else 0.0
+    return out

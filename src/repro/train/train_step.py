@@ -1,0 +1,47 @@
+"""The jit-compiled training step: loss -> grads -> clip -> AdamW update.
+
+This is the function the multi-pod dry-run lowers for every train_4k cell.
+Signature kept flat so in_shardings/out_shardings line up 1:1:
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.optim import adamw
+
+
+def make_train_step(cfg, opt_cfg: adamw.AdamWConfig):
+    def loss_fn(params, batch):
+        loss, metrics = T.loss_and_metrics(params, batch, cfg)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        params, opt_state, opt_metrics = adamw.apply_updates(
+            params, grads, opt_state, opt_cfg)
+        out_metrics = {
+            "loss": loss.astype(jnp.float32),
+            "ce_loss": metrics["ce_loss"].astype(jnp.float32),
+            "router_aux": metrics["router_aux"].astype(jnp.float32),
+            "grad_norm": opt_metrics["grad_norm"],
+            "lr": opt_metrics["lr"],
+        }
+        return params, opt_state, out_metrics
+
+    return train_step
+
+
+def make_eval_step(cfg):
+    def eval_step(params, batch):
+        loss, metrics = T.loss_and_metrics(params, batch, cfg)
+        return {"loss": loss.astype(jnp.float32),
+                "tokens": metrics["tokens"]}
+    return eval_step

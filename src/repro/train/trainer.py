@@ -1,0 +1,90 @@
+"""The training loop: data -> jit step -> metrics -> checkpoints, with
+fault-tolerance wiring (resume, straggler policy hooks, pipeline state).
+Runs end-to-end on CPU with reduced configs (examples/train_tiny_lm.py)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import RoaringDataPipeline
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.train import train_step as TS
+from repro.train.checkpoint import CheckpointManager
+
+
+class Trainer:
+    def __init__(self, cfg, opt_cfg: adamw.AdamWConfig,
+                 pipeline: RoaringDataPipeline,
+                 ckpt_dir: str, ckpt_every: int = 50,
+                 async_ckpt: bool = True, seed: int = 0):
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.pipeline = pipeline
+        self.ckpt = CheckpointManager(ckpt_dir)
+        self.ckpt_every = ckpt_every
+        self.async_ckpt = async_ckpt
+        self.params = T.init_params(cfg, jax.random.key(seed))
+        self.opt_state = adamw.init_state(self.params)
+        self.step = 0
+        self._jit_step = jax.jit(TS.make_train_step(cfg, opt_cfg))
+        self.history: list[dict] = []
+
+    # ------------------------------------------------------------------
+    def maybe_resume(self) -> bool:
+        """Restore the newest valid checkpoint if present (crash recovery)."""
+        found = self.ckpt.restore_with_retry(
+            {"params": self.params, "opt": self.opt_state})
+        if found is None:
+            return False
+        step, tree, extra = found
+        self.params, self.opt_state = tree["params"], tree["opt"]
+        self.step = step
+        if "pipeline" in extra:
+            import base64
+            st = dict(extra["pipeline"])
+            st["seen"] = base64.b64decode(st["seen"])
+            st["keep"] = base64.b64decode(st["keep"])
+            self.pipeline.load_state_dict(st)
+        return True
+
+    def _save(self):
+        import base64
+        pstate = self.pipeline.state_dict()
+        pstate["seen"] = base64.b64encode(pstate["seen"]).decode()
+        pstate["keep"] = base64.b64encode(pstate["keep"]).decode()
+        self.ckpt.save(self.step,
+                       {"params": self.params, "opt": self.opt_state},
+                       extra={"pipeline": pstate},
+                       async_=self.async_ckpt)
+
+    # ------------------------------------------------------------------
+    def train(self, n_steps: int, log_every: int = 10) -> list[dict]:
+        for _ in range(n_steps):
+            batch_np = self.pipeline.next_batch()
+            batch = {"tokens": jnp.asarray(batch_np["tokens"]),
+                     "labels": jnp.asarray(batch_np["labels"])}
+            t0 = time.monotonic()
+            self.params, self.opt_state, metrics = self._jit_step(
+                self.params, self.opt_state, batch)
+            loss = float(metrics["loss"])
+            if not np.isfinite(loss):
+                raise FloatingPointError(f"non-finite loss at {self.step}")
+            self.step += 1
+            rec = {"step": self.step, "loss": loss,
+                   "grad_norm": float(metrics["grad_norm"]),
+                   "lr": float(metrics["lr"]),
+                   "sec": time.monotonic() - t0}
+            self.history.append(rec)
+            if self.step % log_every == 0:
+                print(f"step {rec['step']:5d} loss {rec['loss']:.4f} "
+                      f"gnorm {rec['grad_norm']:.3f} lr {rec['lr']:.2e} "
+                      f"{rec['sec'] * 1e3:.0f} ms")
+            if self.step % self.ckpt_every == 0:
+                self._save()
+        self.ckpt.wait()
+        return self.history

@@ -1,0 +1,105 @@
+"""RoaringBitmap vs python sets (randomized) + serde + rank/select."""
+
+import numpy as np
+import pytest
+
+from repro.core import (RoaringBitmap, deserialize, serialize,
+                        serialized_size_bytes)
+
+
+def rand_bm(rng, n, hi=1 << 20):
+    vals = rng.integers(0, hi, n).astype(np.uint32)
+    return RoaringBitmap.from_values(vals), set(vals.tolist())
+
+
+@pytest.mark.parametrize("na,nb", [(100, 100), (10_000, 200_000),
+                                   (200_000, 10_000), (150_000, 150_000)])
+def test_algebra_vs_sets(rng, na, nb):
+    a, sa = rand_bm(rng, na)
+    b, sb = rand_bm(rng, nb)
+    assert set((a & b).to_array().tolist()) == sa & sb
+    assert set((a | b).to_array().tolist()) == sa | sb
+    assert set((a ^ b).to_array().tolist()) == sa ^ sb
+    assert set((a - b).to_array().tolist()) == sa - sb
+    assert a.and_card(b) == len(sa & sb)
+    assert a.or_card(b) == len(sa | sb)
+    assert a.xor_card(b) == len(sa ^ sb)
+    assert a.andnot_card(b) == len(sa - sb)
+    if sa | sb:
+        assert abs(a.jaccard(b) - len(sa & sb) / len(sa | sb)) < 1e-12
+
+
+def test_add_remove_contains(rng):
+    bm = RoaringBitmap()
+    ref = set()
+    for v in rng.integers(0, 1 << 18, 3000).tolist():
+        bm.add(v)
+        ref.add(v)
+    assert bm.cardinality == len(ref)
+    for v in list(ref)[:1000]:
+        bm.remove(v)
+        ref.discard(v)
+    assert set(bm.to_array().tolist()) == ref
+    probes = rng.integers(0, 1 << 18, 500).tolist()
+    for p in probes:
+        assert (p in bm) == (p in ref)
+    got = bm.contains_many(np.asarray(probes, np.uint32))
+    assert np.array_equal(got, np.array([p in ref for p in probes]))
+
+
+def test_bitset_to_array_demotion_on_remove(rng):
+    # paper: Roaring tracks cardinality so deleting from a bitset container
+    # can demote it to an array container (BitMagic can't, sec 2.2)
+    vals = rng.choice(1 << 16, 5000, replace=False).astype(np.uint32)
+    bm = RoaringBitmap.from_values(vals)
+    assert bm.containers[0].kind == "bitset"
+    for v in sorted(vals.tolist())[:904]:
+        bm.remove(v)
+    assert bm.containers[0].kind == "array"
+    assert bm.cardinality == 4096
+
+
+def test_rank_select_roundtrip(rng):
+    bm, ref = rand_bm(rng, 50_000)
+    sa = sorted(ref)
+    for i in [0, 1, len(sa) // 3, len(sa) - 1]:
+        assert bm.select(i) == sa[i]
+        assert bm.rank(sa[i]) == i + 1
+    assert bm.min() == sa[0] and bm.max() == sa[-1]
+    with pytest.raises(IndexError):
+        bm.select(len(sa))
+
+
+def test_serde_roundtrip_all_kinds(rng):
+    bm, _ = rand_bm(rng, 100_000)
+    bm = bm | RoaringBitmap.from_range(1 << 21, (1 << 21) + 300_000)
+    bm.run_optimize()
+    kinds = {c.kind for c in bm.containers}
+    assert "run" in kinds
+    assert deserialize(serialize(bm)) == bm
+    # serialized ~= in-memory (paper sec 5.4)
+    assert abs(serialized_size_bytes(bm) - bm.memory_bytes()) \
+        < 0.1 * bm.memory_bytes() + 64
+
+
+def test_wide_union(rng):
+    bms, refs = zip(*[rand_bm(rng, 5000, 1 << 22) for _ in range(30)])
+    wide = RoaringBitmap.or_many(list(bms))
+    want = set().union(*refs)
+    assert set(wide.to_array().tolist()) == want
+    inter = RoaringBitmap.and_many(list(bms))
+    assert set(inter.to_array().tolist()) == set.intersection(*refs)
+
+
+def test_from_range_runs():
+    bm = RoaringBitmap.from_range(10, 200_000)
+    assert all(c.kind == "run" for c in bm.containers)
+    assert bm.cardinality == 199_990
+    assert 9 not in bm and 10 in bm and 199_999 in bm and 200_000 not in bm
+
+
+def test_memory_bytes_ordering(rng):
+    # roaring <= uncompressed bitset for sparse data
+    bm, ref = rand_bm(rng, 1000, 1 << 26)
+    bitset_bytes = (1 << 26) // 8
+    assert bm.memory_bytes() < bitset_bytes / 100

@@ -1,0 +1,109 @@
+"""Container-level algorithms vs python-set ground truth (paper secs 3-4)."""
+
+import numpy as np
+import pytest
+
+from repro.core import containers as C
+
+
+def mk_array(rng, n):
+    n = min(n, C.ARRAY_MAX)  # array-container invariant (paper sec 1)
+    return C.ArrayContainer(np.sort(rng.choice(65536, n, replace=False))
+                            .astype(np.uint16))
+
+
+def mk_bitset(rng, n):
+    vals = np.sort(rng.choice(65536, n, replace=False)).astype(np.uint16)
+    return C.BitsetContainer(C.positions_to_bitset(vals), n)
+
+
+def mk_run(rng, n):
+    vals = np.sort(rng.choice(65536, n, replace=False)).astype(np.uint16)
+    return C.RunContainer(C.runs_from_sorted_values(vals))
+
+
+@pytest.mark.parametrize("op", ["and", "or", "xor", "andnot"])
+@pytest.mark.parametrize("mk_x", [mk_array, mk_bitset, mk_run])
+@pytest.mark.parametrize("mk_y", [mk_array, mk_bitset, mk_run])
+def test_ops_all_kind_pairs(rng, op, mk_x, mk_y):
+    for nx, ny in [(50, 5000), (3000, 3000), (6000, 100), (6000, 8000)]:
+        x, y = mk_x(rng, nx), mk_y(rng, ny)
+        sx = set(x.to_array_values().tolist())
+        sy = set(y.to_array_values().tolist())
+        want = {"and": sx & sy, "or": sx | sy, "xor": sx ^ sy,
+                "andnot": sx - sy}[op]
+        fn, card_fn = C.OPS[op]
+        got = fn(x, y)
+        assert set(got.to_array_values().tolist()) == want
+        assert got.card == len(want)
+        assert card_fn(x, y) == len(want)
+        # result-kind policy: array <= 4096 < bitset
+        if got.card and got.card <= C.ARRAY_MAX:
+            assert got.kind in ("array",)
+        elif got.card:
+            assert got.kind == "bitset"
+
+
+def test_conversions_roundtrip(rng):
+    for n in [0, 1, 100, 4096, 4097, 30000, 65536]:
+        vals = np.sort(rng.choice(65536, n, replace=False)).astype(np.uint16)
+        bs = C.positions_to_bitset(vals)
+        assert np.array_equal(C.bitset_to_positions(bs), vals)
+        runs = C.runs_from_sorted_values(vals)
+        rc = C.RunContainer(runs)
+        assert np.array_equal(rc.to_array_values(), vals)
+        assert np.array_equal(rc.to_bitset().words, bs)
+        assert rc.card == n
+
+
+def test_bitset_set_clear_flip_cardinality(rng):
+    words = np.zeros(C.BITSET_WORDS, np.uint64)
+    a = np.sort(rng.choice(65536, 5000, replace=False)).astype(np.uint16)
+    b = np.sort(rng.choice(65536, 5000, replace=False)).astype(np.uint16)
+    assert C.bitset_set_many(words, a) == 5000
+    # setting the same bits again changes nothing (paper XOR trick)
+    assert C.bitset_set_many(words, a) == 0
+    delta = C.bitset_set_many(words, b)
+    assert delta == len(set(b.tolist()) - set(a.tolist()))
+    cleared = C.bitset_clear_many(words, a)
+    assert cleared == 5000
+    # words now hold exactly b \ a
+    assert C.popcount_words(words) == len(set(b.tolist())
+                                          - set(a.tolist()))
+    # flipping b clears b\a and sets b&a
+    C.bitset_flip_many(words, b)
+    assert C.popcount_words(words) == len(set(b.tolist())
+                                          & set(a.tolist()))
+
+
+def test_num_runs(rng):
+    vals = np.array([1, 2, 3, 10, 11, 40, 65535], np.uint16)
+    assert C.ArrayContainer(vals).num_runs() == 4
+    assert C.BitsetContainer(C.positions_to_bitset(vals)).num_runs() == 4
+    # cross-word run: 63,64,65 is ONE run
+    vals = np.array([63, 64, 65], np.uint16)
+    assert C.BitsetContainer(C.positions_to_bitset(vals)).num_runs() == 1
+
+
+def test_optimize_picks_smallest(rng):
+    # a full range is cheapest as one run
+    full = C.RunContainer(np.array([[0, 65535]], np.int32))
+    opt = C.optimize(full.to_bitset())
+    assert isinstance(opt, C.RunContainer)
+    assert opt.memory_bytes() < 16
+    # scattered values stay array
+    sparse = mk_array(rng, 100)
+    assert isinstance(C.optimize(sparse), C.ArrayContainer)
+    # dense random stays bitset
+    dense = mk_bitset(rng, 30000)
+    assert isinstance(C.optimize(dense), C.BitsetContainer)
+
+
+def test_galloping_matches_merge(rng):
+    small = np.sort(rng.choice(65536, 10, replace=False)).astype(np.uint16)
+    big = np.sort(rng.choice(65536, 30000, replace=False)).astype(np.uint16)
+    want = np.intersect1d(small, big)
+    assert np.array_equal(C.array_intersect(small, big), want)
+    assert np.array_equal(C.array_intersect(big, small), want)
+    wantd = np.setdiff1d(small, big)
+    assert np.array_equal(C.array_difference(small, big), wantd)

@@ -1,0 +1,107 @@
+"""Hypothesis property tests: the system's set-algebra invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (RoaringBitmap, complement, deserialize, flip_range,
+                        serialize)
+
+value_sets = st.lists(st.integers(0, 1 << 20), min_size=0, max_size=2000)
+small_sets = st.lists(st.integers(0, 1 << 18), min_size=0, max_size=500)
+
+
+def bm(values):
+    return RoaringBitmap.from_values(np.asarray(values, np.uint32)) \
+        if values else RoaringBitmap()
+
+
+@settings(max_examples=60, deadline=None)
+@given(value_sets, value_sets)
+def test_union_commutative(a, b):
+    assert bm(a) | bm(b) == bm(b) | bm(a)
+
+
+@settings(max_examples=60, deadline=None)
+@given(value_sets, value_sets, value_sets)
+def test_intersection_associative(a, b, c):
+    assert (bm(a) & bm(b)) & bm(c) == bm(a) & (bm(b) & bm(c))
+
+
+@settings(max_examples=60, deadline=None)
+@given(value_sets, value_sets, value_sets)
+def test_distributive(a, b, c):
+    assert bm(a) & (bm(b) | bm(c)) == (bm(a) & bm(b)) | (bm(a) & bm(c))
+
+
+@settings(max_examples=60, deadline=None)
+@given(small_sets, small_sets)
+def test_de_morgan(a, b):
+    n = 1 << 18
+    lhs = complement(bm(a) | bm(b), n)
+    rhs = complement(bm(a), n) & complement(bm(b), n)
+    assert lhs == rhs
+
+
+@settings(max_examples=60, deadline=None)
+@given(value_sets, value_sets)
+def test_inclusion_exclusion(a, b):
+    x, y = bm(a), bm(b)
+    assert (x | y).cardinality == \
+        x.cardinality + y.cardinality - x.and_card(y)
+    assert (x ^ y).cardinality == \
+        x.cardinality + y.cardinality - 2 * x.and_card(y)
+    assert (x - y).cardinality == x.cardinality - x.and_card(y)
+
+
+@settings(max_examples=60, deadline=None)
+@given(value_sets)
+def test_serde_roundtrip(a):
+    x = bm(a).run_optimize()
+    assert deserialize(serialize(x)) == x
+
+
+@settings(max_examples=60, deadline=None)
+@given(value_sets)
+def test_container_invariants(a):
+    x = bm(a)
+    for c in x.containers:
+        assert c.card > 0, "no empty containers stored (paper sec 2.2)"
+        if c.kind == "array":
+            assert c.card <= 4096
+            v = c.values
+            assert np.all(v[1:] > v[:-1]), "sorted distinct"
+        elif c.kind == "bitset":
+            assert c.card > 4096
+    assert x.keys == sorted(x.keys)
+
+
+@settings(max_examples=40, deadline=None)
+@given(value_sets)
+def test_run_optimize_preserves_and_bounds(a):
+    x = bm(a)
+    y = x.copy().run_optimize()
+    assert x == y
+    for c in y.containers:
+        if c.kind == "run":
+            assert c.num_runs() <= 2047
+            # run must beat both alternatives (paper's size rule)
+            assert c.memory_bytes() <= min(2 * c.card, 8192)
+    assert y.memory_bytes() <= x.memory_bytes()
+
+
+@settings(max_examples=40, deadline=None)
+@given(small_sets, st.integers(0, 1 << 18), st.integers(0, 1 << 18))
+def test_flip_range_involution(a, lo, hi):
+    lo, hi = min(lo, hi), max(lo, hi)
+    x = bm(a)
+    assert flip_range(flip_range(x, lo, hi), lo, hi) == x
+
+
+@settings(max_examples=40, deadline=None)
+@given(value_sets)
+def test_rank_select_inverse(a):
+    x = bm(a)
+    n = x.cardinality
+    for i in {0, n // 2, n - 1} - {-1}:
+        if 0 <= i < n:
+            assert x.rank(x.select(i)) == i + 1

@@ -1,0 +1,41 @@
+"""Scalar twins == vectorized implementations (the sec 5.10 ablation's
+correctness precondition)."""
+
+import numpy as np
+
+from repro.core import containers as C
+from repro.core import scalar as S
+
+
+def test_popcount(rng):
+    words = rng.integers(0, 1 << 64, 128, dtype=np.uint64)
+    assert S.bitset_popcount(words) == int(np.bitwise_count(words).sum())
+
+
+def test_bitset_ops(rng):
+    a = rng.integers(0, 1 << 64, C.BITSET_WORDS, dtype=np.uint64)
+    b = rng.integers(0, 1 << 64, C.BITSET_WORDS, dtype=np.uint64)
+    for op, f in [("and", np.bitwise_and), ("or", np.bitwise_or),
+                  ("xor", np.bitwise_xor), ("andnot", lambda x, y: x & ~y)]:
+        words, card = S.bitset_op(a, b, op)
+        assert np.array_equal(words, f(a, b))
+        assert card == int(np.bitwise_count(f(a, b)).sum())
+
+
+def test_array_ops(rng):
+    a = np.sort(rng.choice(65536, 800, replace=False)).astype(np.uint16)
+    b = np.sort(rng.choice(65536, 1200, replace=False)).astype(np.uint16)
+    assert np.array_equal(S.intersect(a, b), np.intersect1d(a, b))
+    assert np.array_equal(S.union(a, b), np.union1d(a, b))
+    assert np.array_equal(S.difference(a, b), np.setdiff1d(a, b))
+    assert np.array_equal(S.symmetric_difference(a, b), np.setxor1d(a, b))
+
+
+def test_extraction_and_set_many(rng):
+    vals = np.sort(rng.choice(65536, 2000, replace=False)).astype(np.uint16)
+    words = C.positions_to_bitset(vals)
+    assert np.array_equal(S.bitset_to_positions(words), vals)
+    w2 = np.zeros(C.BITSET_WORDS, np.uint64)
+    assert S.bitset_set_many(w2, vals) == 2000
+    assert S.bitset_set_many(w2, vals) == 0
+    assert np.array_equal(w2, words)

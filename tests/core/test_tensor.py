@@ -1,0 +1,99 @@
+"""RoaringTensor (device layout) vs the host RoaringBitmap oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import RoaringBitmap
+from repro.core.tensor import RoaringTensor, block_mask_words
+
+
+@pytest.fixture
+def pairs(rng):
+    def rand(n, hi):
+        return RoaringBitmap.from_values(
+            rng.integers(0, hi, n).astype(np.uint32))
+    a = [rand(30000, 1 << 19), rand(400, 1 << 18),
+         RoaringBitmap.from_range(5000, 180_000).run_optimize(),
+         RoaringBitmap()]
+    b = [rand(15000, 1 << 19), RoaringBitmap.from_range(0, 90_000),
+         rand(70000, 1 << 18), rand(100, 1 << 16)]
+    return a, b
+
+
+def test_roundtrip(pairs):
+    a, _ = pairs
+    t = RoaringTensor.from_bitmaps(a, capacity=8)
+    assert t.to_bitmaps() == a
+    assert np.array_equal(np.asarray(t.cardinality()),
+                          [x.cardinality for x in a])
+
+
+@pytest.mark.parametrize("op,hop", [("__and__", "__and__"),
+                                    ("__or__", "__or__"),
+                                    ("__xor__", "__xor__"),
+                                    ("andnot", "andnot")])
+def test_binary_ops(pairs, op, hop):
+    a, b = pairs
+    ta = RoaringTensor.from_bitmaps(a, capacity=8)
+    tb = RoaringTensor.from_bitmaps(b, capacity=8)
+    got = getattr(ta, op)(tb).to_bitmaps()
+    want = [getattr(x, hop)(y) for x, y in zip(a, b)]
+    assert got == want
+
+
+def test_count_only(pairs):
+    a, b = pairs
+    ta = RoaringTensor.from_bitmaps(a, capacity=8)
+    tb = RoaringTensor.from_bitmaps(b, capacity=8)
+    assert np.array_equal(np.asarray(ta.and_card(tb)),
+                          [x.and_card(y) for x, y in zip(a, b)])
+    assert np.array_equal(np.asarray(ta.xor_card(tb)),
+                          [x.xor_card(y) for x, y in zip(a, b)])
+    np.testing.assert_allclose(
+        np.asarray(ta.jaccard(tb)),
+        [x.jaccard(y) for x, y in zip(a, b)], rtol=1e-6)
+
+
+def test_contains(pairs, rng):
+    a, _ = pairs
+    ta = RoaringTensor.from_bitmaps(a, capacity=8)
+    q = rng.integers(0, 1 << 19, (len(a), 200)).astype(np.uint32)
+    got = np.asarray(ta.contains(jnp.asarray(q)))
+    for i, bmx in enumerate(a):
+        assert np.array_equal(got[i], bmx.contains_many(q[i])), i
+
+
+def test_run_optimize_device(pairs):
+    a, _ = pairs
+    ta = RoaringTensor.from_bitmaps(a, capacity=8).run_optimize()
+    assert ta.to_bitmaps() == a
+    # the dense range must become a run container on device too
+    kinds = np.asarray(ta.kinds)
+    assert (kinds == 3).any()
+    # packed bytes parity with host run_optimize
+    host = [x.copy().run_optimize().memory_bytes() for x in a]
+    assert np.asarray(ta.packed_nbytes()).tolist() == host
+
+
+def test_jit_composition(pairs):
+    a, b = pairs
+    ta = RoaringTensor.from_bitmaps(a, capacity=8)
+    tb = RoaringTensor.from_bitmaps(b, capacity=8)
+
+    @jax.jit
+    def f(x, y):
+        return ((x & y) | (x ^ y)).cardinality()   # == |x ∪ y|
+
+    want = [(x | y).cardinality for x, y in zip(a, b)]
+    assert np.asarray(f(ta, tb)).tolist() == want
+
+
+def test_block_mask_words():
+    bm = RoaringBitmap.from_values([0, 5, 31, 32, 100])
+    w = np.asarray(block_mask_words([bm], 128))
+    assert w.shape == (1, 4)
+    assert int(w[0, 0]) == (1 | (1 << 5) | (1 << 31))
+    assert int(w[0, 1]) == 1
+    assert int(w[0, 3]) == (1 << 4)

@@ -1,0 +1,91 @@
+"""Data pipeline: roaring filters, resume-without-replay, generators."""
+
+import numpy as np
+import pytest
+
+from repro.core import RoaringBitmap
+from repro.data.pipeline import (RoaringDataPipeline, dedup_filter,
+                                 quality_filter)
+from repro.data.synth import (TABLE3, cluster_data, generate_dataset)
+
+
+def test_filters_compose(rng):
+    n = 1000
+    hashes = rng.integers(0, 400, n)           # many duplicates
+    scores = rng.random(n)
+    dd = dedup_filter(hashes)
+    qf = quality_filter(scores, 0.5)
+    pipe = RoaringDataPipeline(n, 16, 8, 100, seed=1,
+                               filters={"dedup": dd, "quality": qf})
+    keep = set(pipe.keep.to_array().tolist())
+    want = set(dd.to_array().tolist()) & set(qf.to_array().tolist())
+    assert keep == want
+
+
+def test_no_replay_within_epoch():
+    pipe = RoaringDataPipeline(n_docs=64, seq_len=8, batch_size=8,
+                               vocab=50, seed=3)
+    seen = []
+    for _ in range(8):                          # exactly one epoch
+        seen.extend(pipe.next_batch()["doc_ids"].tolist())
+    assert len(seen) == len(set(seen)) == 64
+
+
+def test_state_resume_no_replay():
+    p1 = RoaringDataPipeline(256, 8, 8, 50, seed=3)
+    ids_a = [p1.next_batch()["doc_ids"] for _ in range(4)]
+    state = p1.state_dict()
+    more_1 = [p1.next_batch()["doc_ids"] for _ in range(4)]
+
+    p2 = RoaringDataPipeline(256, 8, 8, 50, seed=999)  # different seed
+    p2.load_state_dict(state)
+    more_2 = [p2.next_batch()["doc_ids"] for _ in range(4)]
+    for a, b in zip(more_1, more_2):
+        assert np.array_equal(a, b)
+    # and the resumed run never re-serves already-seen docs
+    already = {int(x) for arr in ids_a for x in arr}
+    for arr in more_2:
+        assert not ({int(x) for x in arr} & already)
+
+
+def test_batch_determinism_given_ids():
+    p = RoaringDataPipeline(64, 16, 4, 50, seed=5)
+    t1 = p._tokens_for(11)
+    t2 = p._tokens_for(11)
+    assert np.array_equal(t1, t2)
+    assert t1.shape == (17,)
+
+
+def test_table3_twins_match_stats():
+    for spec in TABLE3[:4]:
+        sets = generate_dataset(spec, seed=1)[:50]
+        cards = np.array([len(s) for s in sets], float)
+        # mean cardinality within 3x of the paper's value (lognormal spread)
+        assert 0.3 < cards.mean() / spec.avg_cardinality < 3.0, spec.name
+        for s in sets[:5]:
+            assert s.max() < spec.universe
+            assert np.all(np.diff(s.astype(np.int64)) > 0)
+
+
+def test_sorted_variants_have_runs():
+    from repro.data.synth import DatasetSpec, generate_set
+    rng = np.random.default_rng(0)
+    spec_s = DatasetSpec("x_sort", 1 << 20, 20_000, sorted_runs=True)
+    spec_u = DatasetSpec("x", 1 << 20, 20_000)
+    s = generate_set(spec_s, rng)
+    u = generate_set(spec_u, rng)
+    runs_s = np.count_nonzero(np.diff(s.astype(np.int64)) > 1) + 1
+    runs_u = np.count_nonzero(np.diff(u.astype(np.int64)) > 1) + 1
+    assert runs_s / len(s) < runs_u / len(u), "sorted twin should be runnier"
+    bm = RoaringBitmap.from_values(s).run_optimize()
+    assert any(c.kind == "run" for c in bm.containers)
+
+
+def test_cluster_data_properties():
+    arr = cluster_data(50_000, 5_000_000, seed=2)
+    assert len(arr) == len(np.unique(arr))
+    assert arr.max() < 5_000_000
+    gaps = np.diff(arr.astype(np.int64))
+    # clustered: median gap small, tail gaps large
+    assert np.median(gaps) <= 3
+    assert np.percentile(gaps, 99.9) > 20

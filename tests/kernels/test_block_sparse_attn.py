@@ -1,0 +1,87 @@
+"""Roaring block-sparse decode attention kernel vs oracle: shape/dtype sweep."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.block_sparse_attn import decode_attention
+
+
+def make_case(rng, b, h, hkv, d, s, bs, density, dtype):
+    nblk = s // bs
+    q = rng.standard_normal((b, h, d)).astype(dtype)
+    k = (rng.standard_normal((b, hkv, s, d)) * 0.3).astype(dtype)
+    v = rng.standard_normal((b, hkv, s, d)).astype(dtype)
+    words = max(1, (nblk + 31) // 32)
+    mask = np.zeros((b, words), np.uint32)
+    for i in range(b):
+        nsel = int(round(density * nblk))
+        sel = rng.choice(nblk, nsel, replace=False)
+        for s_ in sel:
+            mask[i, s_ >> 5] |= np.uint32(1) << np.uint32(s_ & 31)
+    kvl = rng.integers(1, s + 1, b).astype(np.int32)
+    return q, k, v, mask, kvl
+
+
+@pytest.mark.parametrize("b,h,hkv,d,s,bs", [
+    (2, 8, 2, 64, 1024, 128),
+    (1, 4, 4, 128, 512, 128),
+    (3, 16, 8, 64, 1024, 256),
+])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_vs_oracle(rng, b, h, hkv, d, s, bs, dtype):
+    np_dtype = np.float32 if dtype == np.float32 else np.float32
+    q, k, v, mask, kvl = make_case(rng, b, h, hkv, d, s, bs, 0.5, np_dtype)
+    args = [jnp.asarray(q, dtype), jnp.asarray(k, dtype),
+            jnp.asarray(v, dtype), jnp.asarray(mask), jnp.asarray(kvl)]
+    got = np.asarray(decode_attention(*args, block_size=bs,
+                                      interpret=True), np.float32)
+    want = np.asarray(ref.block_sparse_attention_decode(
+        *args, block_size=bs), np.float32)
+    tol = 2e-5 if dtype == np.float32 else 3e-2
+    np.testing.assert_allclose(got, want, atol=tol, rtol=tol)
+
+
+def test_empty_mask_returns_zeros(rng):
+    q, k, v, mask, kvl = make_case(rng, 2, 4, 2, 64, 512, 128, 0.5,
+                                   np.float32)
+    mask[:] = 0
+    got = np.asarray(decode_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(mask),
+        jnp.asarray(kvl), block_size=128, interpret=True))
+    assert np.allclose(got, 0.0)
+
+
+def test_full_mask_equals_dense(rng):
+    q, k, v, mask, kvl = make_case(rng, 2, 8, 4, 64, 512, 128, 1.0,
+                                   np.float32)
+    mask[:] = 0xFFFFFFFF
+    got = np.asarray(decode_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(mask),
+        jnp.asarray(kvl), block_size=128, interpret=True))
+    # dense reference softmax over valid positions
+    scale = 64 ** -0.5
+    for i in range(2):
+        L = int(kvl[i])
+        qg = q[i].reshape(4, 2, 64)
+        sc = np.einsum("kgd,ksd->kgs", qg, k[i][:, :L]) * scale
+        w = np.exp(sc - sc.max(-1, keepdims=True))
+        w /= w.sum(-1, keepdims=True)
+        want = np.einsum("kgs,ksd->kgd", w, v[i][:, :L]).reshape(8, 64)
+        np.testing.assert_allclose(got[i], want, atol=2e-5, rtol=2e-5)
+
+
+def test_softcap(rng):
+    q, k, v, mask, kvl = make_case(rng, 1, 4, 4, 32, 256, 128, 1.0,
+                                   np.float32)
+    mask[:] = 0xFFFFFFFF
+    a = [jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(mask),
+         jnp.asarray(kvl)]
+    got = np.asarray(decode_attention(*a, block_size=128, softcap=5.0,
+                                      interpret=True))
+    want = np.asarray(ref.block_sparse_attention_decode(
+        *a, block_size=128, softcap=5.0))
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+    plain = np.asarray(decode_attention(*a, block_size=128, interpret=True))
+    assert np.abs(plain - got).max() > 1e-5

@@ -1,0 +1,64 @@
+"""Decode-vs-forward and prefill-vs-decode logit consistency (fp32)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.models import transformer as T
+
+ARCHS = ["gemma2_27b", "deepseek_v2_236b", "jamba_v01_52b", "xlstm_350m"]
+
+
+def full_logits(params, tokens, cfg):
+    x, positions = T._embed_inputs(params, {"tokens": tokens}, cfg)
+    x, _ = T.backbone(params, x, positions, cfg)
+    return T._logits(params, x, cfg)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch, rng):
+    cfg = C.get_config(arch, reduced=True)
+    cfg = dataclasses.replace(cfg, compute_dtype="float32",
+                              capacity_factor=1000.0)
+    params = T.init_params(cfg, jax.random.key(1))
+    B, S = 2, 16
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    ref = np.asarray(full_logits(params, toks, cfg))
+    mask = jnp.full((B, 1), 0xFFFFFFFF, jnp.uint32)
+
+    state = T.init_decode_state(cfg, B, S)
+    step = jax.jit(lambda p, st, t: T.decode_step(p, st, t, cfg, mask))
+    outs = []
+    for t in range(S):
+        logits, state = step(params, state, toks[:, t])
+        outs.append(np.asarray(logits))
+    dec = np.stack(outs, axis=1)
+    np.testing.assert_allclose(dec, ref, atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_then_decode(arch, rng):
+    cfg = C.get_config(arch, reduced=True)
+    cfg = dataclasses.replace(cfg, compute_dtype="float32",
+                              capacity_factor=1000.0)
+    params = T.init_params(cfg, jax.random.key(1))
+    B, S = 2, 16
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    ref = np.asarray(full_logits(params, toks, cfg))
+    mask = jnp.full((B, 1), 0xFFFFFFFF, jnp.uint32)
+    half = S // 2
+    pl, state = T.prefill(params, {"tokens": toks[:, :half]}, cfg, s_max=S)
+    np.testing.assert_allclose(np.asarray(pl), ref[:, half - 1],
+                               atol=2e-3, rtol=2e-3)
+    step = jax.jit(lambda p, st, t: T.decode_step(p, st, t, cfg, mask))
+    cur = [np.asarray(pl)]
+    for t in range(half, S - 1):
+        logits, state = step(params, state, toks[:, t])
+        cur.append(np.asarray(logits))
+    dec = np.stack(cur, axis=1)
+    np.testing.assert_allclose(dec, ref[:, half - 1:S - 1],
+                               atol=2e-3, rtol=2e-3)

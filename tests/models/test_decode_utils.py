@@ -1,0 +1,75 @@
+"""Unit tests for the decode-restructure utilities (EXPERIMENTS.md sec Perf):
+token-column scatter insert, roaring block-id extraction, stacked block
+gather."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import (gather_blocks_stacked, insert_token_stacked,
+                                 visible_block_ids)
+
+
+def test_insert_token_stacked_5d(rng):
+    b, r, h, s, d = 3, 4, 2, 16, 8
+    stack = jnp.asarray(rng.standard_normal((b, r, h, s, d)), jnp.float32)
+    new = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+    pos = jnp.asarray([0, 5, 15], jnp.int32)
+    out = np.asarray(insert_token_stacked(stack, new, 2, pos))
+    want = np.asarray(stack).copy()
+    for bi in range(b):
+        want[bi, 2, :, int(pos[bi]), :] = np.asarray(new)[bi]
+    assert np.array_equal(out, want)
+
+
+def test_insert_token_stacked_4d(rng):
+    b, r, s, d = 2, 3, 8, 4
+    stack = jnp.zeros((b, r, s, d), jnp.float32)
+    new = jnp.ones((b, d), jnp.float32)
+    out = np.asarray(insert_token_stacked(stack, new, 1, jnp.asarray([2, 7])))
+    assert out[0, 1, 2].sum() == 4 and out[1, 1, 7].sum() == 4
+    assert out.sum() == 8  # nothing else touched
+
+
+def test_visible_block_ids(rng):
+    n_blocks, bs, topk = 64, 16, 8
+    words = np.zeros((2, 2), np.uint32)
+    sel0 = [0, 3, 40, 63]
+    sel1 = list(range(20))           # more than topk
+    for s_ in sel0:
+        words[0, s_ >> 5] |= np.uint32(1) << np.uint32(s_ & 31)
+    for s_ in sel1:
+        words[1, s_ >> 5] |= np.uint32(1) << np.uint32(s_ & 31)
+    kvl = jnp.asarray([n_blocks * bs, 5 * bs], jnp.int32)
+    idx, n = visible_block_ids(jnp.asarray(words), kvl, n_blocks, bs, topk)
+    idx, n = np.asarray(idx), np.asarray(n)
+    assert n[0] == 4 and idx[0, :4].tolist() == sel0
+    # row 1 is truncated by kv_len (blocks 0..4) then by topk
+    assert n[1] == 5 and idx[1, :5].tolist() == [0, 1, 2, 3, 4]
+
+
+def test_gather_blocks_stacked_matches_take(rng):
+    b, r, hkv, s, d, bs = 2, 3, 2, 64, 4, 16
+    stack = jnp.asarray(rng.standard_normal((b, r, hkv, s, d)), jnp.float32)
+    ids = jnp.asarray([[0, 2, 3], [1, 1, 0]], jnp.int32)
+    got = np.asarray(gather_blocks_stacked(stack, 1, ids, bs))
+    st = np.asarray(stack)
+    for bi in range(b):
+        for t in range(3):
+            blk = int(ids[bi, t])
+            want = st[bi, 1, :, blk * bs:(blk + 1) * bs, :]
+            assert np.array_equal(got[bi, t], want), (bi, t)
+
+
+def test_pure_dp_specs():
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.sharding import spec_for_param
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.empty((16, 16), object)
+    m = FakeMesh()
+    assert spec_for_param("prefix_0.mixer.wq", (4096, 32, 128), m) == \
+        P("data", "model", None)
+    assert spec_for_param("prefix_0.mixer.wq", (4096, 32, 128), m,
+                          pure_dp=True) == P("data", None, None)

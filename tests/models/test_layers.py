@@ -1,0 +1,129 @@
+"""Layer-level unit tests: flash attention vs naive, RoPE, MoE dispatch."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.models import layers as L
+from repro.models import mlp as M
+
+
+def naive_attention(q, k, v, causal=True, window=0, softcap=0.0, scale=None):
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    qr = q.reshape(b, s, hkv, g, d).astype(np.float32)
+    sc = np.einsum("bqhgd,bkhd->bhgqk", qr, k.astype(np.float32)) * scale
+    if softcap:
+        sc = softcap * np.tanh(sc / softcap)
+    mask = np.ones((s, s), bool)
+    if causal:
+        mask &= np.tril(np.ones((s, s), bool))
+    if window:
+        qpos = np.arange(s)
+        mask &= (qpos[:, None] - qpos[None, :]) < window
+    sc = np.where(mask, sc, -1e30)
+    w = np.exp(sc - sc.max(-1, keepdims=True))
+    w = w / w.sum(-1, keepdims=True)
+    out = np.einsum("bhgqk,bkhd->bhgqd", w, v.astype(np.float32))
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, d)
+
+
+@pytest.mark.parametrize("causal,window,softcap,block_skip", [
+    (True, 0, 0.0, False), (True, 0, 0.0, True),
+    (True, 32, 0.0, True), (False, 0, 0.0, False),
+    (True, 0, 20.0, False), (True, 16, 0.0, False),
+])
+def test_flash_vs_naive(rng, causal, window, softcap, block_skip):
+    b, s, h, hkv, d = 2, 128, 4, 2, 32
+    q = rng.standard_normal((b, s, h, d)).astype(np.float32)
+    k = rng.standard_normal((b, s, hkv, d)).astype(np.float32)
+    v = rng.standard_normal((b, s, hkv, d)).astype(np.float32)
+    got = np.asarray(L.flash_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), causal=causal,
+        window=window, softcap=softcap, q_chunk=32, k_chunk=64,
+        block_skip=block_skip))
+    want = naive_attention(q, k, v, causal, window, softcap)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_block_skip_same_result(rng):
+    """The beyond-paper causal block-skip is a pure FLOP optimization."""
+    b, s, h, d = 1, 256, 2, 16
+    q = rng.standard_normal((b, s, h, d)).astype(np.float32)
+    k = rng.standard_normal((b, s, h, d)).astype(np.float32)
+    v = rng.standard_normal((b, s, h, d)).astype(np.float32)
+    a1 = L.flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                           causal=True, q_chunk=32, k_chunk=32,
+                           block_skip=False)
+    a2 = L.flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                           causal=True, q_chunk=32, k_chunk=32,
+                           block_skip=True)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2),
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_block_pairs_counts():
+    qi, kj = L._block_pairs(8, 64, 8, 64, causal=True, window=0, skip=True)
+    assert len(qi) == 8 * 9 // 2          # lower triangle of blocks
+    qi, kj = L._block_pairs(8, 64, 8, 64, causal=True, window=0, skip=False)
+    assert len(qi) == 64
+    qi, kj = L._block_pairs(8, 64, 8, 64, causal=True, window=64, skip=True)
+    assert len(qi) == 8 + 7               # diagonal band
+
+
+def test_rope_relative_shift(rng):
+    """RoPE: scores depend only on relative positions."""
+    d = 32
+    x = rng.standard_normal((1, 2, 1, d)).astype(np.float32)
+    r1 = L.apply_rope(jnp.asarray(x), jnp.asarray([[3, 7]]), 10000.0)
+    r2 = L.apply_rope(jnp.asarray(x), jnp.asarray([[103, 107]]), 10000.0)
+    s1 = float(jnp.einsum("d,d->", r1[0, 0, 0], r1[0, 1, 0]))
+    s2 = float(jnp.einsum("d,d->", r2[0, 0, 0], r2[0, 1, 0]))
+    assert abs(s1 - s2) < 1e-4
+    # M-RoPE with equal position streams == 1-D RoPE (text stub contract)
+    r3 = L.apply_rope(jnp.asarray(x), jnp.asarray([[3, 7]]), 10000.0,
+                      sections=(4, 6, 6))
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(r3), atol=1e-6)
+
+
+def test_moe_scatter_matches_dense(rng):
+    cfg = C.get_config("mixtral_8x7b", reduced=True)
+    cfg = dataclasses.replace(cfg, compute_dtype="float32",
+                              capacity_factor=1000.0)
+    p = M.moe_params(cfg, jax.random.key(0))
+    x = jnp.asarray(rng.standard_normal((2, 32, cfg.d_model)) * 0.3,
+                    jnp.float32)
+    y_scatter, m1 = M.moe(x, p, cfg)
+    y_dense, m2 = M.moe(x, p, dataclasses.replace(cfg,
+                                                  moe_dispatch="dense"))
+    np.testing.assert_allclose(np.asarray(y_scatter), np.asarray(y_dense),
+                               atol=1e-4, rtol=1e-4)
+    assert float(m1["dropped_fraction"]) == 0.0
+
+
+def test_moe_capacity_drops(rng):
+    cfg = C.get_config("mixtral_8x7b", reduced=True)
+    cfg = dataclasses.replace(cfg, capacity_factor=0.25)
+    p = M.moe_params(cfg, jax.random.key(0))
+    x = jnp.asarray(rng.standard_normal((2, 64, cfg.d_model)), jnp.bfloat16)
+    y, m = M.moe(x, p, cfg)
+    assert float(m["dropped_fraction"]) > 0.0
+    assert np.isfinite(np.asarray(y, np.float32)).all()
+
+
+def test_mla_cache_is_compressed():
+    cfg = C.get_config("deepseek_v2_236b")
+    from repro.models import transformer as T
+    state = jax.eval_shape(lambda: T.init_decode_state(cfg, 1, 1024))
+    mla = state["pattern"][0]
+    # compressed cache: kv_lora + rope dims, NOT n_heads * head_dim * 2
+    ckv_bytes = np.prod(mla["ckv"].shape) * 2
+    full_bytes = 1024 * cfg.n_heads * (cfg.qk_nope_dim + cfg.qk_rope_dim
+                                       + cfg.v_head_dim) * 2 * 59
+    assert ckv_bytes < full_bytes / 20

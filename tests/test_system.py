@@ -1,0 +1,58 @@
+"""End-to-end system behaviour: the paper's data structure doing real work
+inside the framework (train + index + serve in one scenario)."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.core import RoaringBitmap
+from repro.data.index import InvertedIndex
+from repro.data.pipeline import RoaringDataPipeline, quality_filter
+from repro.models import transformer as T
+from repro.optim.adamw import AdamWConfig
+from repro.train.trainer import Trainer
+
+
+@pytest.mark.slow
+def test_end_to_end_scenario(tmp_path, rng):
+    # 1. corpus + inverted index (the paper's motivating application)
+    vocab_terms = [f"t{i}" for i in range(50)]
+    docs = [[vocab_terms[i] for i in rng.choice(50, rng.integers(3, 12),
+                                                replace=False)]
+            for _ in range(300)]
+    idx = InvertedIndex().build(docs).optimize()
+    hits = idx.query_and("t1", "t2")
+    want = {i for i, d in enumerate(docs) if "t1" in d and "t2" in d}
+    assert set(hits.to_array().tolist()) == want
+
+    # 2. the index drives the training-data filter
+    keep = idx.query_or("t1", "t2", "t3")
+    cfg = C.get_config("qwen2_5_3b", reduced=True)
+    cfg = dataclasses.replace(cfg, remat="none")
+    pipe = RoaringDataPipeline(
+        n_docs=300, seq_len=16, batch_size=4, vocab=cfg.vocab, seed=0,
+        filters={"terms": keep})
+    assert pipe.keep.cardinality == keep.cardinality
+    tr = Trainer(cfg, AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=50),
+                 pipe, str(tmp_path / "ck"), ckpt_every=100,
+                 async_ckpt=False)
+    hist = tr.train(6, log_every=100)
+    assert all(np.isfinite(h["loss"]) for h in hist)
+    served_ids = set()
+    for _ in range(3):
+        served_ids |= set(pipe.next_batch()["doc_ids"].tolist())
+    assert served_ids <= set(keep.to_array().tolist())
+
+    # 3. serve with a roaring vocab constraint from the same machinery
+    from repro.serve.constrained import VocabConstraint
+    from repro.serve.engine import BlockPolicy, Engine
+    allowed = RoaringBitmap.from_values(np.arange(16, dtype=np.uint32))
+    eng = Engine(cfg, tr.params, max_seq=64,
+                 policy=BlockPolicy(sink_blocks=1, local_blocks=2),
+                 constraint=VocabConstraint(cfg.vocab, allowed))
+    out = eng.generate(rng.integers(0, cfg.vocab, (2, 4)).astype(np.int32),
+                       max_new_tokens=4)
+    assert (out < 16).all()

@@ -1,0 +1,69 @@
+"""Checkpointing: atomicity, checksums, async, corrupt-fallback."""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.checkpoint import CheckpointManager
+
+
+def tree(seed=0):
+    r = np.random.default_rng(seed)
+    return {"a": jnp.asarray(r.standard_normal((8, 16)), jnp.float32),
+            "nested": {"b": jnp.asarray(r.integers(0, 9, (4,)), jnp.int32),
+                       "c": (jnp.ones((3,)), jnp.zeros((2, 2)))}}
+
+
+def test_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    t = tree(1)
+    mgr.save(7, t, extra={"foo": 1})
+    got, extra = mgr.restore(7, t)
+    assert extra == {"foo": 1}
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+import jax  # noqa: E402
+
+
+def test_async_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in [1, 2, 3, 4]:
+        mgr.save(s, tree(s), async_=True)
+    mgr.wait()
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_corrupt_fallback(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    t = tree(1)
+    mgr.save(1, t)
+    mgr.save(2, t)
+    # corrupt the newest checkpoint's arrays
+    path = os.path.join(str(tmp_path), "step_0000000002", "arrays.npz")
+    with open(path, "r+b") as f:
+        f.seek(200)
+        f.write(b"\xde\xad\xbe\xef" * 8)
+    found = mgr.restore_with_retry(t)
+    assert found is not None
+    step, got, _ = found
+    assert step == 1  # fell back past the corrupt one
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, tree(1))
+    bad = {"a": jnp.zeros((9, 16)),
+           "nested": {"b": jnp.zeros((4,), jnp.int32),
+                      "c": (jnp.ones((3,)), jnp.zeros((2, 2)))}}
+    with pytest.raises(ValueError):
+        mgr.restore(1, bad)
+
+
+def test_no_tmp_dirs_after_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(5, tree(0))
+    assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]

@@ -1,0 +1,73 @@
+"""Failure detection, straggler policy, elastic replanning."""
+
+import numpy as np
+import pytest
+
+from repro.train.elastic import MeshPlan, plan_mesh, rebatch_plan
+from repro.train.ft import HeartbeatMonitor, StragglerPolicy
+
+
+def test_heartbeat():
+    hb = HeartbeatMonitor(timeout_s=10)
+    hb.beat("h0", 0.0)
+    hb.beat("h1", 0.0)
+    hb.beat("h0", 8.0)
+    assert hb.failed_hosts(now=12.0) == ["h1"]
+    assert hb.alive_hosts(now=12.0) == ["h0"]
+
+
+def test_straggler_flagging():
+    sp = StragglerPolicy(ratio=1.5, patience=2)
+    for step in range(4):
+        for h in ["h0", "h1", "h2", "h3"]:
+            sp.observe(h, 1.0 if h != "h3" else 5.0)
+        flagged = sp.stragglers()
+    assert flagged == ["h3"]
+    # recovery clears strikes
+    for _ in range(3):
+        for h in ["h0", "h1", "h2", "h3"]:
+            sp.observe(h, 1.0)
+        flagged = sp.stragglers()
+    assert flagged == []
+
+
+def test_skip_rescale_unbiased():
+    s = StragglerPolicy.scale_for_skipped(16, 2)
+    assert abs(s * 14 - 16) < 1e-9
+
+
+def test_plan_mesh_shapes():
+    p = plan_mesh(512, model_parallel=16, chips_per_pod=256)
+    assert p.shape == (2, 16, 16) and p.axis_names == ("pod", "data", "model")
+    p = plan_mesh(256, 16, 256)
+    assert p.shape == (16, 16)
+    # lose 3 chips from a pod: mesh shrinks, some chips idle
+    p = plan_mesh(253, 16, 256)
+    assert p.shape == (15, 16)
+    assert p.idle_chips == 13
+    with pytest.raises(ValueError):
+        plan_mesh(8, 16)
+
+
+def test_rebatch_keeps_global_batch():
+    r = rebatch_plan(global_batch=256, old_dp=16, new_dp=15)
+    assert r["effective_batch"] >= 256
+    assert r["per_replica_batch"] <= 16       # memory-safe
+    r = rebatch_plan(256, 16, 8)
+    assert r == {"per_replica_batch": 16, "grad_accum": 2,
+                 "effective_batch": 256}
+    r = rebatch_plan(256, 16, 16)
+    assert r == {"per_replica_batch": 16, "grad_accum": 1,
+                 "effective_batch": 256}
+
+
+def test_reshard_roundtrip():
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.train.elastic import make_mesh_from_plan, reshard
+    plan = plan_mesh(len(jax.devices()), model_parallel=1, chips_per_pod=1024)
+    mesh = make_mesh_from_plan(plan)
+    tree = {"w": np.arange(32.0).reshape(8, 4)}
+    shardings = {"w": NamedSharding(mesh, P(None, None))}
+    placed = reshard(tree, shardings)
+    assert np.array_equal(np.asarray(placed["w"]), tree["w"])
