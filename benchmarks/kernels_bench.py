@@ -5,12 +5,18 @@ per the dry-run methodology)."""
 
 from __future__ import annotations
 
+import functools
+import operator
 import time
 
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
+from repro.core import RoaringBitmap
+from repro.core import aggregate
+from repro.core import containers as C
+from repro.core.containers import ArrayContainer, BitsetContainer
 from repro.kernels import ref
 from repro.kernels.bitset_ops import bitset_op
 from repro.kernels.harley_seal import popcount
@@ -47,3 +53,126 @@ def kernel_sweeps(rows):
         common.emit(rows, "kernels", f"bitset_{op}_card", "n=256", "sweep",
                     bytes_moved / HBM_BW * 1e6,
                     f"correct={ok};hbm_bytes={bytes_moved}")
+
+
+# ---------------------------------------------------------------------------
+# wide_ops suite: K-way aggregates, planner + segmented kernel vs the seed
+# container-at-a-time implementation (frozen copy below), K in {4, 16, 64}
+# over uniform / clustered / run-heavy distributions.
+# ---------------------------------------------------------------------------
+
+def _seed_or_many(bitmaps):
+    """Frozen copy of the pre-planner RoaringBitmap.or_many (container-at-a-
+    time accumulation) -- the benchmark baseline this PR replaces."""
+    if not bitmaps:
+        return RoaringBitmap()
+    acc = {}
+    for bm in bitmaps:
+        for k, c in zip(bm.keys, bm.containers):
+            cur = acc.get(k)
+            if cur is None:
+                acc[k] = c
+                continue
+            if not isinstance(cur, np.ndarray):
+                cur = cur.to_bitset().words.copy()
+                acc[k] = cur
+            if isinstance(c, ArrayContainer):
+                idx = (c.values >> np.uint16(6)).astype(np.int64)
+                bit = np.left_shift(
+                    np.uint64(1), c.values.astype(np.uint64) & np.uint64(63))
+                np.bitwise_or.at(cur, idx, bit)
+            elif isinstance(c, BitsetContainer):
+                np.bitwise_or(cur, c.words, out=cur)
+            else:
+                np.bitwise_or(cur, c.to_bitset().words, out=cur)
+    keys = sorted(acc)
+    conts = []
+    for k in keys:
+        v = acc[k]
+        conts.append(C._result_from_bitset(v) if isinstance(v, np.ndarray)
+                     else v)
+    return RoaringBitmap(keys, conts)
+
+
+def _seed_and_many(bitmaps):
+    """Frozen copy of the pre-planner RoaringBitmap.and_many (pairwise)."""
+    if not bitmaps:
+        return RoaringBitmap()
+    out = bitmaps[0]
+    for bm in sorted(bitmaps[1:], key=lambda b: b.cardinality):
+        out = out & bm
+        if not out:
+            break
+    return out
+
+
+def _wide_dataset(dist: str, k: int, seed: int = 11):
+    """K bitmaps over a 2^20 universe in the named distribution."""
+    rng = np.random.default_rng(seed)
+    universe = 1 << 20
+    out = []
+    for _ in range(k):
+        if dist == "uniform":
+            vals = rng.integers(0, universe, 20_000, dtype=np.uint32)
+        elif dist == "clustered":
+            centers = rng.integers(0, universe, 6)
+            vals = np.concatenate([
+                c + rng.integers(0, 1 << 14, 4_000).astype(np.uint32)
+                for c in centers]) % universe
+        elif dist == "run_heavy":
+            spans = []
+            for _ in range(int(rng.integers(2, 6))):
+                lo = int(rng.integers(0, universe - (1 << 16)))
+                spans.append(np.arange(lo, lo + int(rng.integers(1 << 12,
+                                                                 1 << 16)),
+                                       dtype=np.uint32))
+            vals = np.concatenate(spans)
+        else:
+            raise ValueError(dist)
+        out.append(RoaringBitmap.from_values(vals).run_optimize())
+    return out
+
+
+def wide_ops(rows) -> list[dict]:
+    """K-way aggregate timings; returns JSON-able records (BENCH_wide_ops)."""
+    records = []
+    for dist in ("uniform", "clustered", "run_heavy"):
+        for k in (4, 16, 64):
+            bms = _wide_dataset(dist, k)
+            benches = [
+                ("or_many", functools.partial(_seed_or_many, bms),
+                 functools.partial(RoaringBitmap.or_many, bms)),
+                # the slab/kernel path forced on (what a TPU backend runs);
+                # the default row above may resolve dense groups on host
+                ("or_many_kernel", functools.partial(_seed_or_many, bms),
+                 functools.partial(aggregate.or_many, bms, backend="ref")),
+                ("and_many", functools.partial(_seed_and_many, bms),
+                 functools.partial(RoaringBitmap.and_many, bms)),
+                ("xor_many",
+                 functools.partial(functools.reduce, operator.xor, bms),
+                 functools.partial(RoaringBitmap.xor_many, bms)),
+                ("threshold_many", None,
+                 functools.partial(RoaringBitmap.threshold_many, bms,
+                                   max(2, k // 2))),
+            ]
+            for name, seed_fn, new_fn in benches:
+                got = new_fn()           # warm-up: jit/kernel compilation
+                t_new = common.best_of(new_fn, repeats=5) * 1e6
+                if seed_fn is not None:
+                    want = seed_fn()
+                    ok = bool(want == got)
+                    t_seed = common.best_of(seed_fn, repeats=5) * 1e6
+                    speedup = t_seed / t_new if t_new else float("inf")
+                else:
+                    ok, t_seed, speedup = True, None, None
+                rec = {"bench": name, "dist": dist, "k": k,
+                       "seed_us": t_seed, "wide_us": t_new,
+                       "speedup": speedup, "correct": ok}
+                records.append(rec)
+                common.emit(
+                    rows, "wide_ops", name, f"k={k}", dist, t_new,
+                    f"correct={ok};seed_us="
+                    f"{'-' if t_seed is None else round(t_seed, 1)};"
+                    f"speedup="
+                    f"{'-' if speedup is None else round(speedup, 2)}")
+    return records

@@ -9,6 +9,7 @@ Appendices B/C) on the synthetic Table-3 twin datasets.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 
@@ -45,6 +46,11 @@ def main() -> None:
         rows, scale=cluster_scale))
     go("table14", lambda: ablation.table14_host_vs_device(rows))
     go("kernels", lambda: kernels_bench.kernel_sweeps(rows))
+    if want is None or "wide_ops" in want:
+        records = kernels_bench.wide_ops(rows)
+        with open("BENCH_wide_ops.json", "w") as f:
+            json.dump(records, f, indent=2)
+        print("# wrote BENCH_wide_ops.json", file=sys.stderr)
 
     print(f"# {len(rows)} rows", file=sys.stderr)
 

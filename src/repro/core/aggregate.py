@@ -1,0 +1,456 @@
+"""Wide-aggregation planner: K-bitmap OR/AND/XOR/threshold, one dispatch.
+
+The paper's wide union (section 5.8, ``roaring_bitmap_or_many``) streams
+containers through an in-register accumulator; sections 4.1.2 and 5.9 insist
+the logical op and the population count happen in the same pass.  "Compressed
+bitmap indexes: beyond unions and intersections" (Kaser & Lemire) extends
+wide aggregation past OR/AND, and "Threshold and Symmetric Functions over
+Bitmaps" (Kaser & Lemire) motivates the T-occurrence query implemented here.
+
+The planner walks the K input bitmaps' key lists once and groups containers
+by 16-bit chunk key.  Each key is then either
+
+  * a **pass-through** -- singleton keys (OR/XOR) are shared zero-copy;
+    full-chunk runs short-circuit OR; groups a host fast path can finish
+    cheaply stay on the host: run-only groups reduce with a vectorized
+    boundary sweep at interval granularity (never touching 2^16 bits),
+    array-only XOR/threshold groups count occurrences with bincount,
+    small all-array unions concatenate, and AND anchors on the smallest
+    member with vectorized membership filtering in cardinality-ascending
+    order;
+  * or a **slab segment** -- every remaining container is promoted to the
+    device bitset layout (array containers of one OR/XOR group collapse into
+    a single indicator row first), the rows are stacked segment-major into
+    one ``(N, WORDS)`` uint32 slab, and a single
+    ``kernels.ops.segment_reduce`` dispatch produces each segment's reduced
+    words fused with its Harley-Seal cardinality -- O(1) dispatches
+    regardless of K or container count, with the cardinality computed
+    lazily once per segment (never per accumulation step).
+
+Kernel results are repacked via ``optimize`` (run_optimize semantics), so
+the output uses the memory-optimal container kind per chunk.
+
+AND runs the paper's cardinality-ascending planning at the top level too:
+key sets intersect cheapest-bitmap-first and the whole query exits early the
+moment the candidate key set goes empty.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import containers as C
+from repro.core.containers import (
+    ARRAY_MAX, CHUNK, ArrayContainer, BitsetContainer, Container,
+    RunContainer, optimize,
+)
+from repro.kernels import ops as kops
+from repro.kernels.ref import WORDS
+
+__all__ = ["or_many", "and_many", "xor_many", "threshold_many"]
+
+
+def _bitmap_cls():
+    from repro.core.bitmap import RoaringBitmap  # deferred: bitmap imports us
+    return RoaringBitmap
+
+
+def _pow2(x: int) -> int:
+    return 1 if x <= 1 else 1 << (x - 1).bit_length()
+
+
+def _group(bitmaps) -> dict[int, list[Container]]:
+    groups: dict[int, list[Container]] = {}
+    for bm in bitmaps:
+        for k, c in zip(bm.keys, bm.containers):
+            groups.setdefault(k, []).append(c)
+    return groups
+
+
+def _shallow(bm):
+    RB = _bitmap_cls()
+    return RB(list(bm.keys), list(bm.containers))
+
+
+def _build(merged: dict[int, Container]):
+    RB = _bitmap_cls()
+    keys = sorted(merged)
+    return RB(keys, [merged[k] for k in keys])
+
+
+def _full_run() -> RunContainer:
+    return RunContainer(np.array([[0, CHUNK - 1]], np.int32))
+
+
+def _is_full(c: Container) -> bool:
+    """card == 2^16 without touching the O(runs) card property."""
+    if isinstance(c, RunContainer):
+        return (c.runs.shape[0] == 1 and int(c.runs[0, 0]) == 0
+                and int(c.runs[0, 1]) == CHUNK - 1)
+    return c.card == CHUNK
+
+
+def _prefer_kernel(backend: str | None) -> bool:
+    """Whether dense array-only groups should ride the slab kernel.
+
+    On TPU (or when a backend is forced, e.g. in tests) the fused segmented
+    kernel wins; on CPU the host indicator path avoids a device round-trip
+    that the jnp reference backend cannot amortize.  Run-only groups always
+    use the interval sweep: it is strictly cheaper than bit-level promotion
+    on every backend."""
+    if backend in ("pallas", "ref"):
+        return True
+    import jax
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# promotion helpers (host side of the slab)
+# ---------------------------------------------------------------------------
+
+def _words_row(c: Container) -> np.ndarray:
+    """Container -> (1024,) uint64 bitset words."""
+    if isinstance(c, BitsetContainer):
+        return c.words
+    return c.to_bitset().words
+
+
+def _array_indicator(arrays: list[ArrayContainer], op: str) -> np.ndarray:
+    """(CHUNK,) 0/1 indicator of the OR / XOR of the group's arrays.
+
+    OR: duplicate values across members are harmless, so plain indicator
+    stores suffice.  XOR: the parity of the occurrence counts (bincount is
+    a counting sort: O(values), no comparison sort)."""
+    vals = arrays[0].values if len(arrays) == 1 else \
+        np.concatenate([a.values for a in arrays])
+    if op == "or" or len(arrays) == 1:
+        ind = np.zeros(CHUNK, np.uint8)
+        ind[vals] = 1
+        return ind
+    return (np.bincount(vals, minlength=CHUNK) & 1).astype(np.uint8)
+
+
+def _indicator_row(arrays: list[ArrayContainer], op: str) -> np.ndarray:
+    """Collapse every array container of one group into a single bitset
+    row of the slab."""
+    return np.packbits(_array_indicator(arrays, op),
+                       bitorder="little").view(np.uint64)
+
+
+def _from_indicator(ind: np.ndarray) -> Container | None:
+    """(CHUNK,) 0/1 indicator -> optimal container (None when empty)."""
+    card = int(ind.sum())
+    if card == 0:
+        return None
+    if card <= ARRAY_MAX:
+        return optimize(ArrayContainer(np.flatnonzero(ind).astype(np.uint16)))
+    words = np.packbits(ind.astype(np.uint8),
+                        bitorder="little").view(np.uint64)
+    return optimize(BitsetContainer(words, card))
+
+
+def _count_arrays(arrays: list[ArrayContainer], op: str,
+                  t: int) -> Container | None:
+    """All-array group fast path: occurrence counting via bincount, entirely
+    on the host.  op "xor" keeps odd counts, "threshold" counts >= t."""
+    vals = arrays[0].values if len(arrays) == 1 else \
+        np.concatenate([a.values for a in arrays])
+    cnt = np.bincount(vals, minlength=CHUNK)
+    ind = (cnt & 1) if op == "xor" else (cnt >= t)
+    return _from_indicator(ind.astype(np.uint8))
+
+
+def _sweep_run_groups(run_groups: list[tuple[int, list[RunContainer]]],
+                      op: str, t: int) -> dict[int, Container]:
+    """Run-only groups, ALL reduced in one vectorized boundary sweep at
+    *interval* granularity (never expanding to 2^16 bits) -- the host twin
+    of the slab's single dispatch.
+
+    Each group's runs are lifted into a global coordinate space
+    (``key << 16 | start``); chunks never overlap, so one sweep serves every
+    group.  Each member's runs are disjoint, hence the coverage count over
+    an elementary interval equals the number of members containing it:
+    OR is count >= 1, AND count == K (per group), XOR odd count, threshold
+    count >= t.  ``run_groups`` must be key-sorted."""
+    out: dict[int, Container] = {}
+    if not run_groups:
+        return out
+    starts_l, ends_l = [], []
+    for k, conts in run_groups:
+        r = conts[0].runs if len(conts) == 1 else \
+            np.concatenate([c.runs for c in conts])
+        s = r[:, 0].astype(np.int64) + (np.int64(k) << 16)
+        starts_l.append(s)
+        ends_l.append(s + r[:, 1] + 1)                  # exclusive
+    starts = np.concatenate(starts_l)
+    ends = np.concatenate(ends_l)
+    pts = np.concatenate((starts, ends))
+    delta = np.concatenate((np.ones(starts.size, np.int32),
+                            np.full(ends.size, -1, np.int32)))
+    order = np.argsort(pts, kind="stable")
+    upts, first = np.unique(pts[order], return_index=True)
+    cov = np.cumsum(np.add.reduceat(delta[order], first))[:-1]  # / interval
+    if op == "or":
+        keep = cov >= 1
+    elif op == "xor":
+        keep = (cov & 1) == 1
+    elif op == "and":
+        gk = np.array([k for k, _ in run_groups], np.int64)
+        gn = np.array([len(c) for _, c in run_groups], np.int64)
+        need = gn[np.searchsorted(gk, upts[:-1] >> 16)]
+        keep = cov >= need                 # gap intervals have cov 0 < need
+    else:
+        keep = cov >= t
+    lo, hi = upts[:-1][keep], upts[1:][keep]
+    if lo.size == 0:
+        return out
+    # merge contiguous intervals, but never across a chunk-key border
+    same_key = (lo[1:] >> 16) == ((hi[:-1] - 1) >> 16)
+    brk = np.concatenate(([True], (lo[1:] > hi[:-1]) | ~same_key))
+    si = np.flatnonzero(brk)
+    ei = np.concatenate((si[1:] - 1, [lo.size - 1]))
+    rlo, rhi = lo[si], hi[ei]
+    rkey = rlo >> 16
+    runs_all = np.stack([rlo - (rkey << 16), rhi - 1 - rlo],
+                        axis=1).astype(np.int32)
+    uk, kfirst = np.unique(rkey, return_index=True)
+    bounds = np.concatenate((kfirst, [rkey.size]))
+    for i, k in enumerate(uk.tolist()):
+        out[int(k)] = optimize(RunContainer(runs_all[bounds[i]:bounds[i + 1]]))
+    return out
+
+
+def _filter_values(vals: np.ndarray, c: Container) -> np.ndarray:
+    """Keep the sorted uint16 ``vals`` that are members of container ``c``
+    (the AND fast path's vectorized membership probe)."""
+    if vals.size == 0:
+        return vals
+    if isinstance(c, BitsetContainer):
+        return vals[C.bitset_test_many(c.words, vals)]
+    if isinstance(c, ArrayContainer):
+        if c.values.size == 0:
+            return vals[:0]
+        idx = np.searchsorted(c.values, vals)
+        idx[idx == c.values.size] = c.values.size - 1
+        return vals[c.values[idx] == vals]
+    starts = c.runs[:, 0]
+    v = vals.astype(np.int32)
+    i = np.searchsorted(starts, v, side="right") - 1
+    i_c = np.maximum(i, 0)
+    ok = (i >= 0) & (v <= starts[i_c] + c.runs[i_c, 1])
+    return vals[ok]
+
+
+# ---------------------------------------------------------------------------
+# the single kernel dispatch
+# ---------------------------------------------------------------------------
+
+def _dispatch(seg_keys: list[int], seg_rows: list[list[np.ndarray]],
+              op: str, threshold: int, backend) -> dict[int, Container]:
+    """Stack per-segment rows into one slab, reduce in one kernel call,
+    repack each segment's (words, card) into the optimal container kind."""
+    if not seg_keys:
+        return {}
+    lens = [len(r) for r in seg_rows]
+    starts = np.zeros(len(lens) + 1, np.int32)
+    starts[1:] = np.cumsum(lens)
+    slab64 = np.stack([w for rows in seg_rows for w in rows])
+    n = slab64.shape[0]
+    slab32 = slab64.view(np.uint32).reshape(n, WORDS)
+    # pad rows / segments / depth to powers of two so jit and kernel
+    # specializations are reused across calls
+    n_pad = _pow2(n)
+    if n_pad != n:
+        slab32 = np.concatenate(
+            [slab32, np.zeros((n_pad - n, WORDS), np.uint32)])
+    s = len(lens)
+    s_pad = _pow2(s)
+    if s_pad != s:
+        starts = np.concatenate(
+            [starts, np.full(s_pad - s, starts[-1], np.int32)])
+    jmax = _pow2(max(lens))
+    words, cards = kops.segment_reduce(
+        jnp.asarray(slab32), jnp.asarray(starts), op, jmax=jmax,
+        threshold=threshold, backend=backend)
+    words = np.asarray(words[:s])
+    cards = np.asarray(cards[:s])
+    out: dict[int, Container] = {}
+    for key, w32, card in zip(seg_keys, words, cards):
+        card = int(card)
+        if card == 0:
+            continue
+        w64 = np.ascontiguousarray(w32).view(np.uint64).copy()
+        out[key] = optimize(C._result_from_bitset(w64, card))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# public wide aggregates
+# ---------------------------------------------------------------------------
+
+def or_many(bitmaps, *, backend: str | None = None):
+    """Union of K bitmaps in one kernel dispatch (paper section 5.8)."""
+    bitmaps = list(bitmaps)
+    if not bitmaps:
+        return _bitmap_cls()()
+    if len(bitmaps) == 1:
+        return _shallow(bitmaps[0])
+    prefer_kernel = _prefer_kernel(backend)
+    groups = _group(bitmaps)
+    merged: dict[int, Container] = {}
+    seg_keys: list[int] = []
+    seg_rows: list[list[np.ndarray]] = []
+    run_groups: list[tuple[int, list[RunContainer]]] = []
+    for k in sorted(groups):
+        g = groups[k]
+        if len(g) == 1:
+            merged[k] = g[0]                       # zero-copy pass-through
+            continue
+        if all(isinstance(c, RunContainer) for c in g):
+            run_groups.append((k, g))              # interval-level union
+            continue
+        if any(_is_full(c) for c in g):
+            merged[k] = _full_run()                # full-chunk short-circuit
+            continue
+        arrays = [c for c in g if isinstance(c, ArrayContainer)]
+        others = [c for c in g if not isinstance(c, ArrayContainer)]
+        if not others:
+            if sum(a.card for a in arrays) <= ARRAY_MAX:
+                merged[k] = ArrayContainer(
+                    np.unique(np.concatenate([a.values for a in arrays])))
+                continue
+            if not prefer_kernel:
+                c = _from_indicator(_array_indicator(arrays, "or"))
+                if c is not None:
+                    merged[k] = c
+                continue
+        rows = [_indicator_row(arrays, "or")] if arrays else []
+        rows.extend(_words_row(c) for c in others)
+        seg_keys.append(k)
+        seg_rows.append(rows)
+    merged.update(_sweep_run_groups(run_groups, "or", 0))
+    merged.update(_dispatch(seg_keys, seg_rows, "or", 0, backend))
+    return _build(merged)
+
+
+def xor_many(bitmaps, *, backend: str | None = None):
+    """Wide symmetric difference: a value survives iff it occurs in an odd
+    number of inputs (K-ary XOR)."""
+    bitmaps = list(bitmaps)
+    if not bitmaps:
+        return _bitmap_cls()()
+    if len(bitmaps) == 1:
+        return _shallow(bitmaps[0])
+    groups = _group(bitmaps)
+    merged: dict[int, Container] = {}
+    seg_keys: list[int] = []
+    seg_rows: list[list[np.ndarray]] = []
+    run_groups: list[tuple[int, list[RunContainer]]] = []
+    for k in sorted(groups):
+        g = groups[k]
+        if len(g) == 1:
+            merged[k] = g[0]
+            continue
+        if all(isinstance(c, RunContainer) for c in g):
+            run_groups.append((k, g))              # interval-level parity
+            continue
+        arrays = [c for c in g if isinstance(c, ArrayContainer)]
+        others = [c for c in g if not isinstance(c, ArrayContainer)]
+        if not others:
+            c = _count_arrays(arrays, "xor", 0)    # host occurrence parity
+            if c is not None:
+                merged[k] = c
+            continue
+        rows = [_indicator_row(arrays, "xor")] if arrays else []
+        rows.extend(_words_row(c) for c in others)
+        seg_keys.append(k)
+        seg_rows.append(rows)
+    merged.update(_sweep_run_groups(run_groups, "xor", 0))
+    merged.update(_dispatch(seg_keys, seg_rows, "xor", 0, backend))
+    return _build(merged)
+
+
+def and_many(bitmaps, *, backend: str | None = None):
+    """Intersection of K bitmaps: cardinality-ascending key pruning with
+    empty-key early exit, array-anchored host filtering for sparse groups,
+    one kernel dispatch for the dense remainder."""
+    bitmaps = list(bitmaps)
+    if not bitmaps:
+        return _bitmap_cls()()
+    if len(bitmaps) == 1:
+        return _shallow(bitmaps[0])
+    order = sorted(bitmaps, key=lambda b: b.cardinality)
+    common = set(order[0].keys)
+    for bm in order[1:]:
+        common &= set(bm.keys)
+        if not common:
+            return _bitmap_cls()()                 # empty-key early exit
+    lookup = [dict(zip(bm.keys, bm.containers)) for bm in bitmaps]
+    merged: dict[int, Container] = {}
+    seg_keys: list[int] = []
+    seg_rows: list[list[np.ndarray]] = []
+    run_groups: list[tuple[int, list[RunContainer]]] = []
+    for k in sorted(common):
+        g = sorted((lk[k] for lk in lookup), key=lambda c: c.card)
+        if all(isinstance(c, RunContainer) for c in g):
+            run_groups.append((k, g))              # interval intersection
+            continue
+        smallest = g[0]
+        if isinstance(smallest, RunContainer) and smallest.card <= ARRAY_MAX:
+            smallest = ArrayContainer(smallest.to_array_values())
+        if isinstance(smallest, ArrayContainer):
+            # array-anchored: the result is a subset of the smallest member,
+            # so vectorized membership probes beat promoting the group
+            vals = smallest.values
+            for c in g[1:]:
+                vals = _filter_values(vals, c)
+                if vals.size == 0:
+                    break
+            if vals.size:
+                merged[k] = ArrayContainer(vals)
+            continue
+        seg_keys.append(k)
+        seg_rows.append([_words_row(c) for c in g])
+    merged.update(_sweep_run_groups(run_groups, "and", 0))
+    merged.update(_dispatch(seg_keys, seg_rows, "and", 0, backend))
+    return _build(merged)
+
+
+def threshold_many(bitmaps, t: int, *, backend: str | None = None):
+    """T-occurrence query: values present in at least ``t`` of the K inputs
+    (Kaser & Lemire's threshold function; T=1 is union, T=K intersection).
+
+    Keys appearing in fewer than ``t`` inputs are pruned on the host; the
+    rest run through the kernel's bit-sliced counter circuit."""
+    bitmaps = list(bitmaps)
+    t = int(t)
+    if t < 1:
+        raise ValueError(f"threshold must be >= 1, got {t}")
+    if not bitmaps or t > len(bitmaps):
+        return _bitmap_cls()()
+    if t == 1:
+        return or_many(bitmaps, backend=backend)
+    groups = _group(bitmaps)
+    merged: dict[int, Container] = {}
+    seg_keys: list[int] = []
+    seg_rows: list[list[np.ndarray]] = []
+    run_groups: list[tuple[int, list[RunContainer]]] = []
+    for k in sorted(groups):
+        g = groups[k]
+        if len(g) < t:
+            continue                               # can never reach T
+        if all(isinstance(c, RunContainer) for c in g):
+            run_groups.append((k, g))              # interval-level counting
+            continue
+        if all(isinstance(c, ArrayContainer) for c in g):
+            c = _count_arrays(g, "threshold", t)   # host occurrence counts
+            if c is not None:
+                merged[k] = c
+            continue
+        seg_keys.append(k)
+        seg_rows.append([_words_row(c) for c in g])
+    merged.update(_sweep_run_groups(run_groups, "threshold", t))
+    merged.update(_dispatch(seg_keys, seg_rows, "threshold", t, backend))
+    return _build(merged)

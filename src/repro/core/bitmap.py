@@ -155,9 +155,13 @@ class RoaringBitmap:
         if i < len(self.keys) and self.keys[i] == hi:
             cont = self.containers[i]
             if isinstance(cont, BitsetContainer):
+                # copy-on-write: wide aggregates pass containers through
+                # zero-copy, so point updates must never mutate in place
+                words = cont.words.copy()
                 delta = C.bitset_set_many(
-                    cont.words, np.array([lo], dtype=np.uint16))
-                cont.card += delta
+                    words, np.array([lo], dtype=np.uint16))
+                self.containers[i] = BitsetContainer(words,
+                                                     cont.card + delta)
             else:
                 vals = cont.to_array_values()
                 j = int(np.searchsorted(vals, np.uint16(lo)))
@@ -177,9 +181,11 @@ class RoaringBitmap:
             return
         cont = self.containers[i]
         if isinstance(cont, BitsetContainer):
+            words = cont.words.copy()              # copy-on-write, as in add
             delta = C.bitset_clear_many(
-                cont.words, np.array([lo], dtype=np.uint16))
-            cont.card -= delta
+                words, np.array([lo], dtype=np.uint16))
+            cont = BitsetContainer(words, cont.card - delta)
+            self.containers[i] = cont
             # paper: deleting from a bitset container may force an array
             # conversion (Roaring tracks cardinality; BitMagic cannot)
             if cont.card <= C.ARRAY_MAX:
@@ -295,56 +301,38 @@ class RoaringBitmap:
         return self.and_card(other) > 0
 
     # ------------------------------------------------------------------
-    # wide aggregates (paper section 5.8: roaring_bitmap_or_many).
-    # Lazy accumulation in bitset domain per key; repack once at the end.
+    # wide aggregates (paper section 5.8: roaring_bitmap_or_many), routed
+    # through the segmented-aggregation planner (repro.core.aggregate):
+    # containers sharing a chunk key are stacked into one slab and reduced
+    # with a single fused kernel dispatch, regardless of K.
     # ------------------------------------------------------------------
 
     @staticmethod
     def or_many(bitmaps: list["RoaringBitmap"]) -> "RoaringBitmap":
-        if not bitmaps:
-            return RoaringBitmap()
-        acc: dict[int, np.ndarray | Container] = {}
-        for bm in bitmaps:
-            for k, c in zip(bm.keys, bm.containers):
-                cur = acc.get(k)
-                if cur is None:
-                    acc[k] = c
-                    continue
-                if not isinstance(cur, np.ndarray):
-                    # promote lazily to a bitset accumulator (cardinality
-                    # deliberately NOT tracked until finalization: the
-                    # paper's "lazy" operations)
-                    cur = cur.to_bitset().words.copy()
-                    acc[k] = cur
-                if isinstance(c, ArrayContainer):
-                    idx = (c.values >> np.uint16(6)).astype(np.int64)
-                    bit = np.left_shift(
-                        np.uint64(1), c.values.astype(np.uint64) & np.uint64(63))
-                    np.bitwise_or.at(cur, idx, bit)
-                elif isinstance(c, BitsetContainer):
-                    np.bitwise_or(cur, c.words, out=cur)
-                else:
-                    np.bitwise_or(cur, c.to_bitset().words, out=cur)
-        keys = sorted(acc)
-        conts: list[Container] = []
-        for k in keys:
-            v = acc[k]
-            if isinstance(v, np.ndarray):
-                conts.append(C._result_from_bitset(v))
-            else:
-                conts.append(v)
-        return RoaringBitmap(keys, conts)
+        """Wide union: one segmented-kernel dispatch for any K."""
+        from repro.core import aggregate
+        return aggregate.or_many(bitmaps)
 
     @staticmethod
     def and_many(bitmaps: list["RoaringBitmap"]) -> "RoaringBitmap":
-        if not bitmaps:
-            return RoaringBitmap()
-        out = bitmaps[0]
-        for bm in sorted(bitmaps[1:], key=lambda b: b.cardinality):
-            out = out & bm
-            if not out:
-                break
-        return out
+        """Wide intersection with cardinality-ascending key pruning and
+        empty-key early exit."""
+        from repro.core import aggregate
+        return aggregate.and_many(bitmaps)
+
+    @staticmethod
+    def xor_many(bitmaps: list["RoaringBitmap"]) -> "RoaringBitmap":
+        """Wide symmetric difference: values present in an odd number of
+        inputs."""
+        from repro.core import aggregate
+        return aggregate.xor_many(bitmaps)
+
+    @staticmethod
+    def threshold_many(bitmaps: list["RoaringBitmap"],
+                       t: int) -> "RoaringBitmap":
+        """T-occurrence query: values present in >= t of the K inputs."""
+        from repro.core import aggregate
+        return aggregate.threshold_many(bitmaps, t)
 
     # ------------------------------------------------------------------
     # maintenance (paper: run_optimize / shrink_to_fit)

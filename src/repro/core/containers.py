@@ -100,10 +100,14 @@ def bitset_to_positions(words: np.ndarray) -> np.ndarray:
 
 
 def positions_to_bitset(values: np.ndarray) -> np.ndarray:
-    """Sorted distinct uint16 values -> 1024 x uint64 bitset words."""
-    words = np.zeros(BITSET_WORDS, dtype=np.uint64)
-    bitset_set_many(words, values)
-    return words
+    """Sorted distinct uint16 values -> 1024 x uint64 bitset words.
+
+    Indicator stores + packbits: a fresh bitset needs no read-modify-write
+    scatter (np.bitwise_or.at) and no cardinality delta, so plain vector
+    stores into a byte indicator beat bitset_set_many by a wide margin."""
+    ind = np.zeros(CHUNK, dtype=np.uint8)
+    ind[values] = 1
+    return np.packbits(ind, bitorder="little").view(np.uint64)
 
 
 def bitset_num_runs(words: np.ndarray) -> int:
@@ -230,6 +234,25 @@ class RunContainer:
         return np.cumsum(out).astype(np.uint16)
 
     def to_bitset(self) -> BitsetContainer:
+        n = self.runs.shape[0]
+        if n == 0:
+            return BitsetContainer(np.zeros(BITSET_WORDS, np.uint64), 0)
+        if n < 8:
+            # a handful of runs: per-run word masking beats the 2^16 sweep
+            return self._to_bitset_scalar()
+        # vectorized: +1/-1 deltas at run bounds, occupancy = prefix sum > 0
+        starts = self.runs[:, 0].astype(np.int64)
+        ends = starts + self.runs[:, 1].astype(np.int64)   # inclusive
+        # runs are non-overlapping and non-adjacent, so the delta indices
+        # are distinct within each statement: plain fancy stores suffice
+        delta = np.zeros(CHUNK + 1, dtype=np.int32)
+        delta[starts] = 1
+        delta[ends + 1] = -1
+        occ = np.cumsum(delta[:CHUNK]) > 0
+        words = np.packbits(occ, bitorder="little").view(np.uint64)
+        return BitsetContainer(words, self.card)
+
+    def _to_bitset_scalar(self) -> BitsetContainer:
         words = np.zeros(BITSET_WORDS, dtype=np.uint64)
         card = 0
         for s, l in self.runs.tolist():

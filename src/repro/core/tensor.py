@@ -338,6 +338,54 @@ class RoaringTensor:
         return hit & found
 
     # ====================================================================
+    # wide aggregation (paper section 5.8 on device)
+    # ====================================================================
+
+    def reduce_or(self, backend: str | None = None) -> "RoaringTensor":
+        """OR-reduce the whole batch axis into a single bitmap using ONE
+        segmented-kernel dispatch (host bridge, not jit-able: the segment
+        plan depends on the concrete keys).
+
+        Every non-empty slot of every batch row becomes one slab row; slots
+        sharing a chunk key across the batch form a segment; the same
+        ``segment_reduce`` kernel that powers ``RoaringBitmap.or_many``
+        reduces them fused with the Harley-Seal cardinality.  Returns a
+        batch-1 tensor whose capacity is the number of distinct keys."""
+        keys = np.asarray(self.keys).reshape(-1)
+        kinds = np.asarray(self.kinds).reshape(-1)
+        live = np.flatnonzero(kinds != KIND_EMPTY)
+        if live.size == 0:
+            return RoaringTensor(
+                jnp.full((1, 1), SENTINEL, jnp.int32),
+                jnp.zeros((1, 1), jnp.int32), jnp.zeros((1, 1), jnp.int32),
+                jnp.zeros((1, 1), jnp.int32),
+                jnp.zeros((1, 1, SLAB16), jnp.uint16))
+        order = live[np.argsort(keys[live], kind="stable")]
+        sorted_keys = keys[order]
+        uniq, first = np.unique(sorted_keys, return_index=True)
+        starts = np.concatenate((first, [sorted_keys.size])).astype(np.int32)
+        jmax = int(np.diff(starts).max())
+        # pad rows / segments / depth to powers of two so the jit cache is
+        # reused across calls (same scheme as aggregate._dispatch); padded
+        # segments are empty -> card 0 -> dropped by repack
+        pow2 = lambda x: 1 if x <= 1 else 1 << (x - 1).bit_length()
+        jmax = pow2(jmax)
+        n_pad = pow2(order.size)
+        order = np.concatenate((order, np.zeros(n_pad - order.size,
+                                                order.dtype)))
+        s_pad = pow2(uniq.size)
+        out_keys = np.full(s_pad, SENTINEL, np.int32)
+        out_keys[:uniq.size] = uniq
+        starts = np.concatenate(
+            (starts, np.full(s_pad - uniq.size, starts[-1], np.int32)))
+        words = self.to_words().reshape(-1, WORDS)
+        slab = jnp.take(words, jnp.asarray(order), axis=0)
+        rw, cards = kops.segment_reduce(slab, jnp.asarray(starts), "or",
+                                        jmax=jmax, backend=backend)
+        return repack(jnp.asarray(out_keys)[None, :],
+                      cards[None, :], rw[None])
+
+    # ====================================================================
     # maintenance
     # ====================================================================
 

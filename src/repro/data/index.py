@@ -44,11 +44,23 @@ class InvertedIndex:
     def _get(self, term: str) -> RoaringBitmap:
         return self.postings.get(term, RoaringBitmap())
 
+    # query_and/query_or/query_xor/query_threshold all route through the
+    # wide-aggregation planner (repro.core.aggregate): one fused kernel
+    # dispatch per query regardless of the number of terms.
     def query_and(self, *terms) -> RoaringBitmap:
         return RoaringBitmap.and_many([self._get(t) for t in terms])
 
     def query_or(self, *terms) -> RoaringBitmap:
         return RoaringBitmap.or_many([self._get(t) for t in terms])
+
+    def query_xor(self, *terms) -> RoaringBitmap:
+        return RoaringBitmap.xor_many([self._get(t) for t in terms])
+
+    def query_threshold(self, terms, t: int) -> RoaringBitmap:
+        """Documents matching at least ``t`` of the given terms
+        (T-occurrence query, Kaser & Lemire)."""
+        return RoaringBitmap.threshold_many(
+            [self._get(term) for term in terms], t)
 
     def query_andnot(self, keep: str, drop: str) -> RoaringBitmap:
         return self._get(keep) - self._get(drop)

@@ -73,7 +73,10 @@ def generate_set(spec: DatasetSpec, rng: np.random.Generator) -> np.ndarray:
 
 
 def generate_dataset(spec: DatasetSpec, seed: int = 0) -> list[np.ndarray]:
-    rng = np.random.default_rng(seed ^ hash(spec.name) % (1 << 31))
+    # crc32, not hash(): str hashes are salted per process (PYTHONHASHSEED),
+    # which silently made "seeded" datasets irreproducible across runs
+    import zlib
+    rng = np.random.default_rng(seed ^ zlib.crc32(spec.name.encode()))
     return [generate_set(spec, rng) for _ in range(spec.n_sets)]
 
 

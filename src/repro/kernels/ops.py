@@ -19,6 +19,7 @@ from repro.kernels import bitset_ops as _bitset_ops
 from repro.kernels import block_sparse_attn as _bsa
 from repro.kernels import harley_seal as _hs
 from repro.kernels import ref
+from repro.kernels import segment_ops as _segment_ops
 
 Backend = str
 _DEFAULT: Backend = "auto"
@@ -79,6 +80,23 @@ def array_intersect(a_vals, a_card, b_vals, b_card, *,
     if _use_pallas(backend):
         return _array_ops.array_intersect(a_vals, a_card, b_vals, b_card)
     return ref.array_intersect_mask(a_vals, a_card, b_vals, b_card)
+
+
+_ref_segment_reduce = jax.jit(
+    ref.segment_reduce, static_argnames=("op", "jmax"))
+
+
+def segment_reduce(slab, starts, op: str, *, jmax: int, threshold: int = 0,
+                   backend: Backend | None = None):
+    """Segmented K-way OR/AND/XOR/threshold reduce fused with cardinality:
+    one dispatch for an arbitrary number of bitmaps (wide aggregation,
+    paper section 5.8).  See kernels/segment_ops.py for the layout.
+    ``threshold`` is a runtime scalar: T-sweeps share one compilation."""
+    t = jnp.asarray(threshold, jnp.int32)
+    if _use_pallas(backend):
+        return _segment_ops.segment_reduce(slab, starts, op, jmax=jmax,
+                                           threshold=t)
+    return _ref_segment_reduce(slab, starts, op, jmax=jmax, threshold=t)
 
 
 def decode_attention(q, k, v, block_mask_words, kv_len, *,

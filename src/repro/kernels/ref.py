@@ -183,6 +183,52 @@ def _compact(vals: jax.Array, keep: jax.Array) -> tuple[jax.Array, jax.Array]:
 
 
 # ---------------------------------------------------------------------------
+# segmented wide-aggregation oracle (paper sec 5.8 generalized; see
+# kernels/segment_ops.py for the Pallas twin)
+# ---------------------------------------------------------------------------
+
+def segment_reduce(slab: jax.Array, starts: jax.Array, op: str, *,
+                   jmax: int, threshold: int = 0
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Per-segment OR/AND/XOR/threshold reduction + cardinality.
+
+    slab: (N, WORDS) uint32 rows grouped segment-major; starts: (S + 1,)
+    int32 row offsets; jmax: static max segment length.  Returns
+    (words (S, WORDS) uint32, cards (S,) int32).  Empty segments reduce to
+    zero words / zero cardinality for every op.
+    """
+    slab = slab.astype(jnp.uint32)
+    starts = starts.astype(jnp.int32)
+    n = slab.shape[0]
+    seg_len = starts[1:] - starts[:-1]                    # (S,)
+    row = starts[:-1, None] + jnp.arange(jmax, dtype=jnp.int32)[None, :]
+    valid = row < starts[1:, None]                        # (S, jmax)
+    g = slab[jnp.minimum(row, n - 1)]                     # (S, jmax, WORDS)
+    if op == "threshold":
+        g = jnp.where(valid[..., None], g, jnp.uint32(0))
+        out = jnp.zeros((g.shape[0], WORDS), jnp.uint32)
+        for b in range(32):
+            cnt = ((g >> jnp.uint32(b)) & jnp.uint32(1)).sum(
+                axis=1).astype(jnp.int32)
+            hit = (cnt >= threshold).astype(jnp.uint32)
+            out = out | (hit << jnp.uint32(b))
+    else:
+        ident = jnp.uint32(0xFFFFFFFF if op == "and" else 0)
+        g = jnp.where(valid[..., None], g, ident)
+        if op == "or":
+            comb = jax.numpy.bitwise_or
+        elif op == "and":
+            comb = jax.numpy.bitwise_and
+        elif op == "xor":
+            comb = jax.numpy.bitwise_xor
+        else:
+            raise ValueError(op)
+        out = jax.lax.reduce(g, ident, comb, dimensions=(1,))
+    out = jnp.where((seg_len > 0)[:, None], out, jnp.uint32(0))
+    return out, popcount_words(out)
+
+
+# ---------------------------------------------------------------------------
 # Roaring-masked block-sparse attention (decode step) oracle
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,186 @@
+"""Segmented wide-aggregation kernel: K-way OR/AND/XOR/threshold reductions
+over bitset-promoted containers in ONE Pallas dispatch.
+
+The paper's wide union (section 5.8, ``roaring_bitmap_or_many``) keeps an
+accumulator container hot while streaming inputs through it; sections 4.1.2
+and 5.9 argue the logical op and the population count must both happen while
+the words are still in vector registers.  This kernel generalizes that to a
+*segmented reduce*: the host planner (``repro.core.aggregate``) stacks every
+container that shares a 16-bit chunk key into contiguous rows of an
+``(N, WORDS)`` uint32 slab and describes the segments with a row-offset
+vector ``starts`` of shape ``(S + 1,)`` (segment ``s`` owns rows
+``starts[s]:starts[s+1]``).  One ``pallas_call`` then produces, per segment,
+the reduced words *and* the Harley-Seal cardinality -- the popcount runs
+exactly once per segment, at finalization, never per accumulation step
+(the paper's "lazy" cardinality).
+
+Grid layout: ``(S, jmax)`` where ``jmax`` is the (static) longest segment.
+The inner dimension walks a segment's rows; the output block index ignores
+it, so the accumulator stays resident in VMEM across the whole segment
+(the standard Pallas revisited-output accumulation pattern).  Row offsets
+arrive via scalar prefetch so the input index map can address ragged
+segments; steps past a segment's end contribute the op identity.
+
+``threshold`` extends the same engine to T-occurrence queries ("Threshold
+and Symmetric Functions over Bitmaps", Kaser & Lemire): a bit-sliced
+ripple-carry counter (one uint32 plane per counter bit, ``L = ceil(log2(
+jmax + 1))`` planes in VMEM scratch) counts how many inputs set each of the
+2^16 bits, and finalization runs a bitwise magnitude comparator against
+``T`` -- a runtime scalar (scalar prefetch), so threshold sweeps over the
+same inputs reuse one compiled kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.harley_seal import harley_seal_reduce
+from repro.kernels.ref import WORDS
+
+_FULL = np.uint32(0xFFFFFFFF)
+
+OPS = ("or", "and", "xor", "threshold")
+
+
+def counter_planes(jmax: int) -> int:
+    """Bit-sliced counter planes needed to count up to ``jmax`` inputs."""
+    return max(1, int(jmax).bit_length())
+
+
+def _identity(op: str):
+    return _FULL if op == "and" else np.uint32(0)
+
+
+def _combine(acc, x, op: str):
+    if op == "or":
+        return acc | x
+    if op == "and":
+        return acc & x
+    if op == "xor":
+        return acc ^ x
+    raise ValueError(op)
+
+
+def _finalize(words, card_ref, out_ref, seg_len):
+    """Mask empty segments to zero and emit words + lazy popcount."""
+    r = jnp.where(seg_len > 0, words, jnp.uint32(0))
+    out_ref[...] = r
+    card_ref[...] = harley_seal_reduce(r.reshape(1, WORDS // 16, 16))[:, None]
+
+
+def _reduce_kernel(starts_ref, t_ref, slab_ref, out_ref, card_ref, *,
+                   op, jmax):
+    s = pl.program_id(0)
+    j = pl.program_id(1)
+    seg_len = starts_ref[s + 1] - starts_ref[s]
+    x = jnp.where(j < seg_len, slab_ref[...], _identity(op))
+
+    @pl.when(j == 0)
+    def _():
+        out_ref[...] = x
+
+    @pl.when(j > 0)
+    def _():
+        out_ref[...] = _combine(out_ref[...], x, op)
+
+    @pl.when(j == jmax - 1)
+    def _():
+        _finalize(out_ref[...], card_ref, out_ref, seg_len)
+
+
+def _threshold_kernel(starts_ref, t_ref, slab_ref, out_ref, card_ref,
+                      cnt_ref, *, jmax, planes):
+    s = pl.program_id(0)
+    j = pl.program_id(1)
+    seg_len = starts_ref[s + 1] - starts_ref[s]
+
+    @pl.when(j == 0)
+    def _():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    # ripple-carry add of one input bit-plane into the bit-sliced counter
+    carry = jnp.where(j < seg_len, slab_ref[...], jnp.uint32(0))
+    for i in range(planes):
+        ci = cnt_ref[i]
+        cnt_ref[i] = ci ^ carry
+        carry = ci & carry
+
+    @pl.when(j == jmax - 1)
+    def _():
+        # bitwise magnitude comparator: count >= T, MSB first.  T arrives at
+        # runtime (scalar prefetch), so threshold sweeps share one compile;
+        # its bit i becomes an all-ones/all-zeros lane mask.
+        t = t_ref[0]
+        gt = jnp.zeros((1, WORDS), jnp.uint32)
+        eq = jnp.full((1, WORDS), _FULL)
+        for i in reversed(range(planes)):
+            ci = cnt_ref[i]
+            tmask = jnp.where((t >> i) & 1 == 1, _FULL,
+                              jnp.uint32(0))
+            gt = gt | (eq & ci & ~tmask)
+            eq = eq & ~(ci ^ tmask)
+        _finalize(gt | eq, card_ref, out_ref, seg_len)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("op", "jmax", "interpret"))
+def segment_reduce(slab: jax.Array, starts: jax.Array, op: str, *,
+                   jmax: int, threshold=0,
+                   interpret: bool | None = None
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Segmented K-way reduction fused with cardinality.
+
+    slab:   (N, WORDS) uint32 bitset-promoted container rows, segment-major.
+    starts: (S + 1,) int32 row offsets; segment s covers rows
+            starts[s]:starts[s+1] (empty segments allowed -> card 0).
+    op:     "or" | "and" | "xor" | "threshold".
+    jmax:   static upper bound on segment length (>= max(diff(starts))).
+    threshold: T for op="threshold" (1 <= T <= jmax); a runtime scalar, so
+            sweeping T over the same inputs reuses one compilation.
+
+    Returns (words (S, WORDS) uint32, cards (S,) int32).
+    """
+    assert op in OPS, op
+    assert jmax >= 1
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n = slab.shape[0]
+    s = starts.shape[0] - 1
+    starts = starts.astype(jnp.int32)
+    tval = jnp.asarray(threshold, jnp.int32).reshape(1)
+
+    def row_index(si, j, st, tv):
+        return (jnp.minimum(st[si] + j, n - 1), 0)
+
+    out_specs = [pl.BlockSpec((1, WORDS), lambda si, j, st, tv: (si, 0)),
+                 pl.BlockSpec((1, 1), lambda si, j, st, tv: (si, 0))]
+    out_shape = [jax.ShapeDtypeStruct((s, WORDS), jnp.uint32),
+                 jax.ShapeDtypeStruct((s, 1), jnp.int32)]
+    if op == "threshold":
+        planes = counter_planes(jmax)
+        kernel = functools.partial(_threshold_kernel, jmax=jmax,
+                                   planes=planes)
+        scratch = [pltpu.VMEM((planes, 1, WORDS), jnp.uint32)]
+    else:
+        kernel = functools.partial(_reduce_kernel, op=op, jmax=jmax)
+        scratch = []
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(s, jmax),
+        in_specs=[pl.BlockSpec((1, WORDS), row_index)],
+        out_specs=out_specs,
+        scratch_shapes=scratch,
+    )
+    words, card = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(starts, tval, slab.astype(jnp.uint32))
+    return words, card[:, 0]

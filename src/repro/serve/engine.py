@@ -58,11 +58,27 @@ class Engine:
         self._decode = jax.jit(
             lambda p, st, t, m: T.decode_step(p, st, t, cfg, m))
         self.n_blocks = max(1, max_seq // cfg.attn_block_size)
+        self._mask_cache: dict[tuple[int, ...], jax.Array] = {}
 
     def _mask_words(self, kv_lens: list[int]):
-        sets = [self.policy.visible_set(kl, self.cfg.attn_block_size)
-                for kl in kv_lens]
-        return block_mask_words(sets, self.n_blocks)
+        """Visible-block mask words, cached on the per-request block counts.
+
+        The visible set depends on kv_len only through
+        ceil(kv_len / block_size), so consecutive decode steps inside one
+        attention block hit the cache instead of rebuilding Roaring sets and
+        re-rendering words every token.  (Mutating ``policy.pinned`` in
+        place will not invalidate the cache; swap the policy or Engine to
+        change pinning mid-stream.)"""
+        bs = self.cfg.attn_block_size
+        key = tuple(-(-kl // bs) for kl in kv_lens)
+        mask = self._mask_cache.get(key)
+        if mask is None:
+            if len(self._mask_cache) > 512:        # bound decode-long growth
+                self._mask_cache.clear()
+            sets = [self.policy.visible_set(kl, bs) for kl in kv_lens]
+            mask = self._mask_cache[key] = block_mask_words(
+                sets, self.n_blocks)
+        return mask
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int) -> np.ndarray:
         """prompts: (B, S0) int32 -> (B, max_new_tokens) int32."""

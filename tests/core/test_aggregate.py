@@ -1,0 +1,219 @@
+"""Wide-aggregation planner vs a Python-set oracle.
+
+Property-style tests (seeded rng sweeps; hypothesis is not available in this
+environment) across adversarial distributions: dense runs, sparse arrays,
+the 4096/4097 array<->bitset boundary, disjoint key ranges, and the K=0/K=1
+edges.  Every op is checked against functools.reduce over Python sets and
+threshold against an occurrence Counter."""
+
+import operator
+from collections import Counter
+from functools import reduce
+
+import numpy as np
+import pytest
+
+from repro.core import RoaringBitmap
+from repro.core import aggregate
+
+
+def bm(values):
+    return RoaringBitmap.from_values(np.asarray(list(values), np.uint32))
+
+
+# ---------------------------------------------------------------------------
+# adversarial input distributions
+# ---------------------------------------------------------------------------
+
+def dense_runs(rng, k):
+    """Heavily overlapping intervals -> run/bitset containers."""
+    out = []
+    for _ in range(k):
+        parts = []
+        for _ in range(int(rng.integers(1, 4))):
+            lo = int(rng.integers(0, 1 << 18))
+            parts.append(np.arange(lo, lo + int(rng.integers(1, 70000)),
+                                   dtype=np.uint32))
+        out.append(np.unique(np.concatenate(parts)))
+    return out
+
+
+def sparse_arrays(rng, k):
+    """Small scattered arrays across many chunks."""
+    return [rng.integers(0, 1 << 20, int(rng.integers(1, 500)),
+                         dtype=np.uint32) for _ in range(k)]
+
+
+def boundary_4096(rng, k):
+    """Exactly 4096 / 4097 values inside one chunk: the array<->bitset
+    result-kind boundary."""
+    out = []
+    for i in range(k):
+        n = 4096 + (i % 2)
+        out.append(rng.choice(1 << 16, n, replace=False).astype(np.uint32))
+    return out
+
+
+def disjoint_keys(rng, k):
+    """Each bitmap owns its own key range -> all singleton groups."""
+    return [(np.uint32(i << 16) +
+             rng.integers(0, 1 << 16, int(rng.integers(1, 3000)),
+                          dtype=np.uint32))
+            for i in range(k)]
+
+
+def mixed(rng, k):
+    """Runs + arrays + bitsets overlapping in the same chunks."""
+    gens = [dense_runs, sparse_arrays, boundary_4096]
+    return [gens[i % len(gens)](rng, 1)[0] for i in range(k)]
+
+
+DISTS = [dense_runs, sparse_arrays, boundary_4096, disjoint_keys, mixed]
+
+
+def _check_invariants(r):
+    assert r.keys == sorted(r.keys)
+    for c in r.containers:
+        assert c.card > 0
+        if c.kind == "array":
+            assert c.card <= 4096
+            assert np.all(np.diff(c.values.astype(np.int64)) > 0)
+        elif c.kind == "run":
+            assert c.num_runs() <= 2047
+
+
+@pytest.mark.parametrize("dist", DISTS, ids=lambda d: d.__name__)
+@pytest.mark.parametrize("k", [2, 3, 7])
+def test_wide_ops_vs_set_oracle(rng, dist, k):
+    vals = dist(rng, k)
+    bms = [bm(v) for v in vals]
+    sets = [set(v.tolist()) for v in vals]
+    for name, wide, op in [("or", RoaringBitmap.or_many, operator.or_),
+                           ("and", RoaringBitmap.and_many, operator.and_),
+                           ("xor", RoaringBitmap.xor_many, operator.xor)]:
+        want = sorted(reduce(op, sets))
+        got = wide(bms)
+        assert got.to_array().tolist() == want, (name, dist.__name__, k)
+        _check_invariants(got)
+
+
+@pytest.mark.parametrize("dist", DISTS, ids=lambda d: d.__name__)
+@pytest.mark.parametrize("k,t", [(3, 2), (5, 3), (7, 7), (4, 1)])
+def test_threshold_vs_counter_oracle(rng, dist, k, t):
+    vals = dist(rng, k)
+    bms = [bm(v) for v in vals]
+    cnt = Counter()
+    for v in vals:
+        cnt.update(set(v.tolist()))
+    want = sorted(x for x, c in cnt.items() if c >= t)
+    got = RoaringBitmap.threshold_many(bms, t)
+    assert got.to_array().tolist() == want, (dist.__name__, k, t)
+    _check_invariants(got)
+
+
+def test_wide_matches_pairwise(rng):
+    """The planner must agree with the two-by-two merge operators."""
+    for _ in range(5):
+        bms = [bm(rng.integers(0, 1 << 19, int(rng.integers(0, 20000)),
+                               dtype=np.uint32)) for _ in range(4)]
+        assert RoaringBitmap.or_many(bms) == reduce(operator.or_, bms)
+        assert RoaringBitmap.and_many(bms) == reduce(operator.and_, bms)
+        assert RoaringBitmap.xor_many(bms) == reduce(operator.xor, bms)
+
+
+def test_threshold_endpoints(rng):
+    """T=1 is union, T=K intersection, T>K empty, T<1 rejected."""
+    bms = [bm(rng.integers(0, 1 << 18, 5000, dtype=np.uint32))
+           for _ in range(5)]
+    assert RoaringBitmap.threshold_many(bms, 1) == RoaringBitmap.or_many(bms)
+    assert RoaringBitmap.threshold_many(bms, 5) == RoaringBitmap.and_many(bms)
+    assert not RoaringBitmap.threshold_many(bms, 6)
+    with pytest.raises(ValueError):
+        RoaringBitmap.threshold_many(bms, 0)
+
+
+def test_k0_and_k1_edges(rng):
+    for wide in (RoaringBitmap.or_many, RoaringBitmap.and_many,
+                 RoaringBitmap.xor_many):
+        assert wide([]).cardinality == 0
+    assert RoaringBitmap.threshold_many([], 1).cardinality == 0
+    x = bm(rng.integers(0, 1 << 20, 10000, dtype=np.uint32))
+    for wide in (RoaringBitmap.or_many, RoaringBitmap.and_many,
+                 RoaringBitmap.xor_many):
+        assert wide([x]) == x
+    assert RoaringBitmap.threshold_many([x], 1) == x
+    assert RoaringBitmap.threshold_many([x], 2).cardinality == 0
+
+
+def test_full_chunk_or_short_circuit():
+    """A full 2^16 chunk in any input forces a full result chunk."""
+    a = RoaringBitmap.from_range(0, 1 << 16)
+    b = bm([5, 70000])
+    r = RoaringBitmap.or_many([a, b, b])
+    assert r.cardinality == (1 << 16) + 1
+    assert r.containers[0].card == 1 << 16
+
+
+def test_and_empty_key_early_exit():
+    """Disjoint key sets make AND exit before touching containers."""
+    a = bm(range(0, 1000))
+    c = bm(range(1 << 17, (1 << 17) + 1000))
+    assert RoaringBitmap.and_many([a, c, a]).cardinality == 0
+
+
+def test_aggregate_duplicates_of_same_bitmap(rng):
+    """The same bitmap object repeated K times: OR/AND are idempotent and
+    XOR follows parity."""
+    x = bm(rng.integers(0, 1 << 19, 30000, dtype=np.uint32))
+    assert RoaringBitmap.or_many([x, x, x]) == x
+    assert RoaringBitmap.and_many([x, x, x]) == x
+    assert RoaringBitmap.xor_many([x, x, x]) == x
+    assert RoaringBitmap.xor_many([x, x]).cardinality == 0
+    assert RoaringBitmap.threshold_many([x, x, x], 3) == x
+
+
+def test_planner_module_direct_backend(rng):
+    """The planner accepts an explicit backend and the ref backend agrees
+    with the default dispatch."""
+    vals = [rng.integers(0, 1 << 18, 20000, dtype=np.uint32)
+            for _ in range(3)]
+    bms = [bm(v) for v in vals]
+    assert aggregate.or_many(bms, backend="ref") == \
+        RoaringBitmap.or_many(bms)
+    assert aggregate.threshold_many(bms, 2, backend="ref") == \
+        RoaringBitmap.threshold_many(bms, 2)
+
+
+def test_result_mutation_does_not_corrupt_inputs(rng):
+    """Pass-through keys share containers zero-copy; point updates on the
+    result must copy-on-write instead of corrupting the inputs."""
+    vals = rng.choice(1 << 16, 10000, replace=False).astype(np.uint32) \
+        + np.uint32(3 << 16)
+    a = bm(vals)                          # single bitset container, key 3
+    b = bm([1, 2])
+    want = a.to_array().copy()
+    u = RoaringBitmap.or_many([a, b])
+    u.add(int((3 << 16) + 1))
+    u.remove(int(want[0]))
+    assert np.array_equal(a.to_array(), want)
+
+
+def test_tensor_reduce_or_matches_host(rng):
+    from repro.core.tensor import RoaringTensor
+    bms = [bm(rng.integers(0, 1 << 19, int(rng.integers(1, 15000)),
+                           dtype=np.uint32)) for _ in range(5)]
+    rt = RoaringTensor.from_bitmaps(bms)
+    assert rt.reduce_or().to_bitmaps()[0] == RoaringBitmap.or_many(bms)
+
+
+def test_index_query_threshold(rng):
+    from repro.data.index import InvertedIndex
+    docs = [[f"t{t}" for t in rng.choice(20, rng.integers(1, 8),
+                                         replace=False)]
+            for _ in range(300)]
+    idx = InvertedIndex().build(docs)
+    terms = [f"t{i}" for i in range(6)]
+    got = idx.query_threshold(terms, 3)
+    for d in range(len(docs)):
+        n_match = sum(t in docs[d] for t in terms)
+        assert (d in got) == (n_match >= 3)

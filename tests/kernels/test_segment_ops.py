@@ -1,0 +1,111 @@
+"""Segmented wide-aggregation kernel (interpret=True) vs the jnp oracle and
+numpy ground truth: ragged segments, empty segments, threshold counters."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.segment_ops import counter_planes, segment_reduce
+
+WORDS = ref.WORDS
+
+
+def _np_reduce(slab, starts, op, t=0):
+    s = starts.size - 1
+    out = np.zeros((s, WORDS), np.uint32)
+    for i in range(s):
+        rows = slab[starts[i]:starts[i + 1]]
+        if rows.shape[0] == 0:
+            continue
+        if op == "threshold":
+            for b in range(32):
+                cnt = ((rows >> np.uint32(b)) & 1).sum(axis=0)
+                out[i] |= np.uint32(1 << b) * (cnt >= t)
+        else:
+            f = {"or": np.bitwise_or, "and": np.bitwise_and,
+                 "xor": np.bitwise_xor}[op]
+            out[i] = f.reduce(rows, axis=0)
+    return out
+
+
+def _segments(rng, n, s):
+    cuts = np.sort(rng.choice(n + 1, s - 1, replace=True))
+    return np.concatenate(([0], cuts, [n])).astype(np.int32)
+
+
+@pytest.mark.parametrize("op", ["or", "and", "xor"])
+@pytest.mark.parametrize("n,s", [(7, 3), (16, 1), (24, 9)])
+def test_segment_reduce_vs_oracle(rng, op, n, s):
+    slab = rng.integers(0, 1 << 32, (n, WORDS), dtype=np.uint32)
+    starts = _segments(rng, n, s)
+    jmax = max(1, int(np.diff(starts).max()))
+    want = _np_reduce(slab, starts, op)
+    want_c = np.bitwise_count(want).sum(axis=1)
+    kw, kc = segment_reduce(jnp.asarray(slab), jnp.asarray(starts), op,
+                            jmax=jmax, interpret=True)
+    ow, oc = ref.segment_reduce(jnp.asarray(slab), jnp.asarray(starts), op,
+                                jmax=jmax)
+    assert np.array_equal(np.asarray(kw), want)
+    assert np.array_equal(np.asarray(kc), want_c)
+    assert np.array_equal(np.asarray(ow), want)
+    assert np.array_equal(np.asarray(oc), want_c)
+
+
+def test_segment_reduce_empty_and_overlong_segments(rng):
+    """Empty segments reduce to zero for every op (even AND, whose step
+    identity is all-ones); jmax may exceed the longest segment."""
+    slab = rng.integers(0, 1 << 32, (5, WORDS), dtype=np.uint32)
+    starts = np.array([0, 0, 3, 3, 5], np.int32)
+    for op in ("or", "and", "xor"):
+        kw, kc = segment_reduce(jnp.asarray(slab), jnp.asarray(starts), op,
+                                jmax=8, interpret=True)
+        want = _np_reduce(slab, starts, op)
+        assert np.array_equal(np.asarray(kw), want)
+        assert int(np.asarray(kc)[0]) == 0 and int(np.asarray(kc)[2]) == 0
+
+
+@pytest.mark.parametrize("t", [1, 2, 4, 7])
+def test_segment_threshold_vs_oracle(rng, t):
+    n, s = 21, 4
+    slab = rng.integers(0, 1 << 32, (n, WORDS), dtype=np.uint32)
+    # adversarial extra: rows with identical words to stack exact counts
+    slab[3] = slab[4] = slab[5]
+    starts = np.array([0, 7, 7, 14, 21], np.int32)
+    jmax = 8
+    want = _np_reduce(slab, starts, "threshold", t)
+    kw, kc = segment_reduce(jnp.asarray(slab), jnp.asarray(starts),
+                            "threshold", jmax=jmax, threshold=t,
+                            interpret=True)
+    ow, oc = ref.segment_reduce(jnp.asarray(slab), jnp.asarray(starts),
+                                "threshold", jmax=jmax, threshold=t)
+    assert np.array_equal(np.asarray(kw), want)
+    assert np.array_equal(np.asarray(ow), want)
+    want_c = np.bitwise_count(want).sum(axis=1)
+    assert np.array_equal(np.asarray(kc), want_c)
+    assert np.array_equal(np.asarray(oc), want_c)
+
+
+def test_threshold_equals_or_and():
+    """T=1 over K rows == OR; T=K == AND (symmetric-function endpoints)."""
+    rng = np.random.default_rng(5)
+    slab = rng.integers(0, 1 << 32, (6, WORDS), dtype=np.uint32)
+    starts = np.array([0, 6], np.int32)
+    a = jnp.asarray(slab)
+    st = jnp.asarray(starts)
+    w_or, _ = segment_reduce(a, st, "or", jmax=6, interpret=True)
+    w_and, _ = segment_reduce(a, st, "and", jmax=6, interpret=True)
+    w_t1, _ = segment_reduce(a, st, "threshold", jmax=6, threshold=1,
+                             interpret=True)
+    w_t6, _ = segment_reduce(a, st, "threshold", jmax=6, threshold=6,
+                             interpret=True)
+    assert np.array_equal(np.asarray(w_t1), np.asarray(w_or))
+    assert np.array_equal(np.asarray(w_t6), np.asarray(w_and))
+
+
+def test_counter_planes():
+    assert counter_planes(1) == 1
+    assert counter_planes(2) == 2
+    assert counter_planes(3) == 2
+    assert counter_planes(4) == 3
+    assert counter_planes(64) == 7

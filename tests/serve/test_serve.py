@@ -102,6 +102,29 @@ def test_engine_generates_and_respects_constraint(rng):
     assert eng.allocator.n_free == eng.allocator.n_pages
 
 
+def test_mask_words_cache():
+    """_mask_words is cached on per-request block counts: decode steps
+    inside one attention block reuse the rendered words."""
+    cfg = dataclasses.make_dataclass("Cfg", ["attn_block_size"])(128)
+    eng = Engine.__new__(Engine)            # skip weights/jit setup
+    eng.cfg = cfg
+    eng.policy = BlockPolicy(sink_blocks=1, local_blocks=2)
+    eng.n_blocks = 16
+    eng._mask_cache = {}
+    m1 = eng._mask_words([100, 200])
+    m2 = eng._mask_words([120, 250])        # same block counts -> cache hit
+    assert m2 is m1
+    assert len(eng._mask_cache) == 1
+    m3 = eng._mask_words([200, 250])        # first request crossed a block
+    assert m3 is not m1
+    assert len(eng._mask_cache) == 2
+    # cached words match a fresh render
+    from repro.core.tensor import block_mask_words
+    sets = [eng.policy.visible_set(kl, 128) for kl in (100, 200)]
+    assert np.array_equal(np.asarray(m1),
+                          np.asarray(block_mask_words(sets, 16)))
+
+
 def test_block_policy_sets():
     pol = BlockPolicy(sink_blocks=2, local_blocks=3,
                       pinned=RoaringBitmap.from_values([10]))
