@@ -1,0 +1,141 @@
+"""CI benchmark-regression gate for the wide-aggregation suites.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        BENCH_wide_ops.json BENCH_candidate.json --max-slowdown 1.5
+
+Compares the candidate run against the committed baseline on every
+(bench, dist, k) key present in BOTH files (so a ``--quick`` candidate
+gates against a full baseline) and fails when any op slows down by more
+than ``--max-slowdown`` on the gate metric, or when any correctness flag
+is False.  The gate metric is best-of-N wall clock by default (one-sided
+scheduler noise never deflates it; medians stay in the JSON for
+inspection) -- pass ``--metric median`` on quiet machines.
+
+``--calibrate`` divides every key's ratio by the median ratio across all
+keys before gating: the committed baseline was recorded on a different
+machine than the CI runner, and a uniform hardware-speed factor must not
+fail the gate -- only ops that regressed RELATIVE to the rest of the
+suite do.  Speedups and new keys are reported but never fail the gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _key(rec: dict) -> tuple:
+    # n_devices is part of the identity: sharded records from a 1-device
+    # fallback run must never be compared against true multi-device runs
+    # (the gate fails loudly on zero overlap instead)
+    return (rec["bench"], rec["dist"], rec["k"], rec.get("n_devices", 1))
+
+
+def _metrics(a: dict, b: dict, metric: str) -> tuple[float, float]:
+    """Pick the SAME metric on both sides -- never mix a best-of baseline
+    with a median candidate.
+
+    ``best`` (default) gates on best-of-N wall clock: one-sided noise
+    (scheduler bursts on shared runners only ever inflate a sample) makes
+    it far more stable than a 3-sample median.  ``median`` is available
+    for quiet machines and is always recorded in the JSON either way."""
+    if metric == "median" and a.get("median_us") and b.get("median_us"):
+        return a["median_us"], b["median_us"]
+    return a["wide_us"], b["wide_us"]
+
+
+def compare(baseline: list[dict], candidate: list[dict],
+            max_slowdown: float, min_us: float = 0.0,
+            metric: str = "best",
+            calibrate: bool = False) -> tuple[list[str], list[str]]:
+    """Returns (failures, notes).
+
+    Pairs whose gate metrics both sit under ``min_us`` are scheduler-
+    noise-dominated and only reported, never failed (CI passes an explicit
+    floor; default 0 keeps the strict contract for local runs).  With
+    ``calibrate``, each ratio is divided by the median ratio over all
+    compared keys, cancelling uniform machine-speed differences between
+    the baseline recorder and the CI runner."""
+    import statistics
+
+    base = {_key(r): r for r in baseline}
+    failures, notes = [], []
+    pairs = []
+    for rec in candidate:
+        k = _key(rec)
+        if not rec.get("correct", True):
+            failures.append(f"{k}: correctness check failed")
+            continue
+        b = base.get(k)
+        if b is None:
+            notes.append(f"{k}: new bench (no baseline), "
+                         f"{rec.get('median_us') or rec['wide_us']:.1f}us")
+            continue
+        mb, mc = _metrics(b, rec, metric)
+        pairs.append((k, mb, mc))
+    scale = statistics.median(mc / mb for _, mb, mc in pairs) \
+        if calibrate and pairs else 1.0
+    if calibrate and pairs:
+        notes.append(f"machine calibration factor: {scale:.2f}x "
+                     f"(median ratio across {len(pairs)} keys)")
+    for k, mb, mc in pairs:
+        ratio = mc / mb / scale
+        line = f"{k}: {mb:.1f}us -> {mc:.1f}us ({ratio:.2f}x)"
+        if ratio > max_slowdown and max(mb, mc) >= min_us:
+            failures.append(line + f"  EXCEEDS {max_slowdown}x")
+        else:
+            notes.append(line)
+    if not pairs:
+        failures.append("no candidate key overlaps the baseline -- "
+                        "wrong file or empty run?")
+    return failures, notes
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed BENCH_wide_ops.json")
+    ap.add_argument("candidate", nargs="+",
+                    help="freshly produced record files; pass ALL suites "
+                         "in one invocation so --calibrate's median ratio "
+                         "draws on every key (calibrating a single-suite "
+                         "subset whose keys share one code path would "
+                         "cancel exactly the regressions being gated)")
+    ap.add_argument("--max-slowdown", type=float, default=1.5,
+                    help="fail when the candidate/baseline ratio of the "
+                         "gate metric exceeds this (default 1.5)")
+    ap.add_argument("--min-us", type=float, default=0.0,
+                    help="never fail pairs whose metrics both sit under "
+                         "this many microseconds (noise floor; CI uses 500)")
+    ap.add_argument("--metric", choices=("best", "median"), default="best",
+                    help="gate metric: best-of-N (default; robust to "
+                         "one-sided scheduler bursts) or median (falls "
+                         "back to best when either record lacks median_us)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="divide each ratio by the median ratio across "
+                         "keys, cancelling uniform machine-speed "
+                         "differences vs the baseline recorder (CI on)")
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    candidate = []
+    for path in args.candidate:
+        with open(path) as f:
+            candidate += json.load(f)
+    failures, notes = compare(baseline, candidate, args.max_slowdown,
+                              args.min_us, args.metric, args.calibrate)
+    for n in notes:
+        print(f"ok   {n}")
+    for x in failures:
+        print(f"FAIL {x}", file=sys.stderr)
+    if failures:
+        print(f"{len(failures)} regression(s) beyond "
+              f"{args.max_slowdown}x", file=sys.stderr)
+        return 1
+    print(f"gate passed: {len(notes)} compared, none beyond "
+          f"{args.max_slowdown}x")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,8 +4,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from benchmarks.baselines import STRUCTURES
 from repro.data.synth import TABLE3, generate_dataset
 
@@ -37,12 +35,20 @@ def build_all(values_list, universe):
 
 def best_of(fn, repeats: int = 3) -> float:
     """Best wall-clock seconds of `repeats` runs."""
-    best = float("inf")
+    return time_stats(fn, repeats)[0]
+
+
+def time_stats(fn, repeats: int = 3) -> tuple[float, float]:
+    """(best, median) wall-clock seconds of `repeats` runs.  The median is
+    what the CI regression gate compares -- it is far more stable than the
+    mean under scheduler noise on shared runners."""
+    import statistics
+    times = []
     for _ in range(repeats):
         t0 = time.perf_counter()
         fn()
-        best = min(best, time.perf_counter() - t0)
-    return best
+        times.append(time.perf_counter() - t0)
+    return min(times), statistics.median(times)
 
 
 def emit(rows: list, table: str, bench: str, structure: str, dataset: str,

@@ -7,7 +7,6 @@ from __future__ import annotations
 
 import functools
 import operator
-import time
 
 import jax.numpy as jnp
 import numpy as np
@@ -20,7 +19,7 @@ from repro.core.containers import ArrayContainer, BitsetContainer
 from repro.kernels import ref
 from repro.kernels.bitset_ops import bitset_op
 from repro.kernels.harley_seal import popcount
-from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+from repro.launch.mesh import HBM_BW
 
 
 def kernel_sweeps(rows):
@@ -133,12 +132,22 @@ def _wide_dataset(dist: str, k: int, seed: int = 11):
     return out
 
 
-def wide_ops(rows) -> list[dict]:
-    """K-way aggregate timings; returns JSON-able records (BENCH_wide_ops)."""
+def wide_ops(rows, quick: bool = False) -> list[dict]:
+    """K-way aggregate timings; returns JSON-able records (BENCH_wide_ops).
+
+    ``quick`` shrinks the sweep for the CI regression gate: the surviving
+    (bench, dist, k) keys are a strict subset of the full sweep's, so the
+    gate can compare a quick candidate run against the committed full
+    baseline key-by-key."""
     records = []
-    for dist in ("uniform", "clustered", "run_heavy"):
-        for k in (4, 16, 64):
+    dists = ("uniform", "run_heavy") if quick else \
+        ("uniform", "clustered", "run_heavy")
+    ks = (4, 16) if quick else (4, 16, 64)
+    repeats = 5                  # best-of-5 keeps the gate noise-robust
+    for dist in dists:
+        for k in ks:
             bms = _wide_dataset(dist, k)
+            weights = [1 + i % 3 for i in range(k)]
             benches = [
                 ("or_many", functools.partial(_seed_or_many, bms),
                  functools.partial(RoaringBitmap.or_many, bms)),
@@ -154,25 +163,94 @@ def wide_ops(rows) -> list[dict]:
                 ("threshold_many", None,
                  functools.partial(RoaringBitmap.threshold_many, bms,
                                    max(2, k // 2))),
+                # difference chain: planner vs the pairwise a-b1-b2-... fold
+                ("andnot_many",
+                 functools.partial(functools.reduce, operator.sub, bms),
+                 functools.partial(RoaringBitmap.andnot_many, bms[0],
+                                   bms[1:])),
+                # weighted T-occurrence through the shift-and-add counters
+                ("threshold_weighted", None,
+                 functools.partial(RoaringBitmap.threshold_many, bms,
+                                   max(2, k), weights=weights)),
             ]
-            for name, seed_fn, new_fn in benches:
-                got = new_fn()           # warm-up: jit/kernel compilation
-                t_new = common.best_of(new_fn, repeats=5) * 1e6
-                if seed_fn is not None:
-                    want = seed_fn()
-                    ok = bool(want == got)
-                    t_seed = common.best_of(seed_fn, repeats=5) * 1e6
-                    speedup = t_seed / t_new if t_new else float("inf")
-                else:
-                    ok, t_seed, speedup = True, None, None
-                rec = {"bench": name, "dist": dist, "k": k,
-                       "seed_us": t_seed, "wide_us": t_new,
-                       "speedup": speedup, "correct": ok}
-                records.append(rec)
-                common.emit(
-                    rows, "wide_ops", name, f"k={k}", dist, t_new,
-                    f"correct={ok};seed_us="
-                    f"{'-' if t_seed is None else round(t_seed, 1)};"
-                    f"speedup="
-                    f"{'-' if speedup is None else round(speedup, 2)}")
+            records += _run_benches(rows, "wide_ops", benches, dist, k,
+                                    repeats)
+    return records
+
+
+def _run_benches(rows, table, benches, dist, k, repeats) -> list[dict]:
+    records = []
+    for name, seed_fn, new_fn in benches:
+        got = new_fn()               # warm-up: jit/kernel compilation
+        t_new, med_new = common.time_stats(new_fn, repeats=repeats)
+        t_new, med_new = t_new * 1e6, med_new * 1e6
+        if seed_fn is not None:
+            want = seed_fn()
+            ok = bool(want == got)
+            t_seed = common.best_of(seed_fn, repeats=repeats) * 1e6
+            speedup = t_seed / t_new if t_new else float("inf")
+        else:
+            ok, t_seed, speedup = True, None, None
+        rec = {"bench": name, "dist": dist, "k": k,
+               "seed_us": t_seed, "wide_us": t_new, "median_us": med_new,
+               "speedup": speedup, "correct": ok}
+        records.append(rec)
+        common.emit(
+            rows, table, name, f"k={k}", dist, t_new,
+            f"correct={ok};median_us={round(med_new, 1)};seed_us="
+            f"{'-' if t_seed is None else round(t_seed, 1)};"
+            f"speedup="
+            f"{'-' if speedup is None else round(speedup, 2)}")
+    return records
+
+
+def wide_ops_sharded(rows, quick: bool = False) -> list[dict]:
+    """Sharded K-way aggregates over a ``wide`` mesh of every visible
+    device, checked bit-identical against the single-device plans.
+
+    On one device the mesh path falls back to the single dispatch, so this
+    suite is only a real shard test under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the CI bench
+    job sets N=4) or on real multi-device hardware; ``n_devices`` is
+    recorded so readers can tell which regime produced a record."""
+    from repro.launch.mesh import make_wide_mesh
+
+    mesh = make_wide_mesh()
+    n_dev = int(mesh.devices.size)
+    records = []
+    dists = ("uniform",) if quick else ("uniform", "run_heavy")
+    ks = (16,) if quick else (16, 64)
+    repeats = 3 if quick else 5
+    for dist in dists:
+        for k in ks:
+            bms = _wide_dataset(dist, k)
+            weights = [1 + i % 3 for i in range(k)]
+            t = max(2, k // 2)
+            benches = [
+                ("or_many_sharded",
+                 functools.partial(RoaringBitmap.or_many, bms),
+                 functools.partial(RoaringBitmap.or_many, bms, mesh=mesh)),
+                ("xor_many_sharded",
+                 functools.partial(RoaringBitmap.xor_many, bms),
+                 functools.partial(RoaringBitmap.xor_many, bms, mesh=mesh)),
+                ("threshold_many_sharded",
+                 functools.partial(RoaringBitmap.threshold_many, bms, t),
+                 functools.partial(RoaringBitmap.threshold_many, bms, t,
+                                   mesh=mesh)),
+                ("threshold_weighted_sharded",
+                 functools.partial(RoaringBitmap.threshold_many, bms,
+                                   max(2, k), weights=weights),
+                 functools.partial(RoaringBitmap.threshold_many, bms,
+                                   max(2, k), weights=weights, mesh=mesh)),
+                ("andnot_many_sharded",
+                 functools.partial(RoaringBitmap.andnot_many, bms[0],
+                                   bms[1:]),
+                 functools.partial(RoaringBitmap.andnot_many, bms[0],
+                                   bms[1:], mesh=mesh)),
+            ]
+            recs = _run_benches(rows, "wide_ops_sharded", benches, dist, k,
+                                repeats)
+            for r in recs:
+                r["n_devices"] = n_dev
+            records += recs
     return records

@@ -4,6 +4,16 @@ Appendices B/C) on the synthetic Table-3 twin datasets.
 
     PYTHONPATH=src python -m benchmarks.run            # CI-sized
     PYTHONPATH=src python -m benchmarks.run --full     # paper-sized (200 sets)
+    PYTHONPATH=src python -m benchmarks.run --suite wide_ops --quick \
+        --out BENCH_candidate.json                     # CI regression gate
+
+``--suite`` selects table/suite names (comma list; alias of the older
+``--only``).  Suites ``wide_ops`` and ``wide_ops_sharded`` additionally
+emit JSON records; ``--quick`` shrinks them to a gate-sized subset whose
+(bench, dist, k) keys are a strict subset of the full sweep's.  The
+sharded suite only exercises real sharding when more than one device is
+visible (CI forces 4 with ``XLA_FLAGS=--xla_force_host_platform_device_
+count=4``).
 """
 
 from __future__ import annotations
@@ -17,8 +27,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-sized: 200 sets/dataset, ClusterData x50")
-    ap.add_argument("--only", default="",
-                    help="comma list: table3,table4,...,table14,kernels")
+    ap.add_argument("--only", "--suite", dest="suites", default="",
+                    help="comma list: table3,...,table14,kernels,"
+                         "wide_ops,wide_ops_sharded")
+    ap.add_argument("--quick", action="store_true",
+                    help="gate-sized wide_ops sweeps (subset of full keys)")
+    ap.add_argument("--out", default="",
+                    help="write wide-op JSON records here instead of "
+                         "BENCH_wide_ops.json")
     args = ap.parse_args()
 
     from benchmarks import ablation, kernels_bench, tables
@@ -28,7 +44,7 @@ def main() -> None:
 
     rows: list = []
     print("name,us_per_call,derived")
-    want = set(args.only.split(",")) if args.only else None
+    want = set(args.suites.split(",")) if args.suites else None
 
     def go(name, fn):
         if want is None or name in want:
@@ -46,11 +62,17 @@ def main() -> None:
         rows, scale=cluster_scale))
     go("table14", lambda: ablation.table14_host_vs_device(rows))
     go("kernels", lambda: kernels_bench.kernel_sweeps(rows))
+
+    records: list = []
     if want is None or "wide_ops" in want:
-        records = kernels_bench.wide_ops(rows)
-        with open("BENCH_wide_ops.json", "w") as f:
+        records += kernels_bench.wide_ops(rows, quick=args.quick)
+    if want is None or "wide_ops_sharded" in want:
+        records += kernels_bench.wide_ops_sharded(rows, quick=args.quick)
+    if records:
+        out = args.out or "BENCH_wide_ops.json"
+        with open(out, "w") as f:
             json.dump(records, f, indent=2)
-        print("# wrote BENCH_wide_ops.json", file=sys.stderr)
+        print(f"# wrote {out}", file=sys.stderr)
 
     print(f"# {len(rows)} rows", file=sys.stderr)
 

@@ -36,8 +36,10 @@ def main():
           f"OR = {hits_or.cardinality} docs  [{dt:.2f} ms]")
     print(f"jaccard(t0, t1) = {idx.jaccard('t0', 't1'):.4f} "
           "(count-only, never materialized)")
-    excl = idx.query_andnot("t0", "t1")
-    print(f"t0 AND NOT t1 = {excl.cardinality} docs")
+    # difference chain: one fused plan, the union of the dropped postings
+    # is never materialized
+    excl = idx.query_andnot("t0", "t1", "t2", "t3")
+    print(f"t0 AND NOT (t1 OR t2 OR t3) = {excl.cardinality} docs")
 
     # T-occurrence query: documents matching at least T of K terms, answered
     # by the segmented wide-aggregation kernel in a single dispatch (the
@@ -53,6 +55,12 @@ def main():
     dt = (time.perf_counter() - t0) * 1e3
     print(f"three warm threshold sweeps over K={len(terms)} terms "
           f"in {dt:.2f} ms (one kernel dispatch each)")
+
+    # weighted variant: rare terms score higher; same counter circuit
+    weights = [3 if i >= 4 else 1 for i in range(len(terms))]
+    hits = idx.query_threshold(terms, 6, weights=weights)
+    print(f"weighted score >= 6 over {len(terms)} terms "
+          f"(rare terms x3): {hits.cardinality} docs")
 
     # run the same predicates over a Table-3 twin dataset
     sets, universe = generate_dataset(TABLE3[0], seed=0)[:50], \

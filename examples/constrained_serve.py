@@ -11,7 +11,7 @@ import numpy as np
 import repro.configs as C
 from repro.core import RoaringBitmap
 from repro.models import transformer as T
-from repro.serve.constrained import VocabConstraint, lexicon_constraint
+from repro.serve.constrained import lexicon_constraint
 from repro.serve.engine import BlockPolicy, Engine
 
 

@@ -33,12 +33,34 @@ the output uses the memory-optimal container kind per chunk.
 AND runs the paper's cardinality-ascending planning at the top level too:
 key sets intersect cheapest-bitmap-first and the whole query exits early the
 moment the candidate key set goes empty.
+
+**Sharded multi-device path.**  When a 1-D device mesh is supplied (or
+installed with ``set_default_mesh``), each slab segment's rows are
+round-robined across the mesh axis and every shard runs the same
+``segment_reduce`` kernel on its local rows.  Partials combine with a
+``psum``-style all-reduce (``all_gather`` + an exact bitwise fold):
+
+  * OR / XOR partials fold with the op itself (both are associative and
+    commutative over disjoint row sets, so results are bit-identical to the
+    single-device plan);
+  * ANDNOT replicates the minuend row on every shard -- local partials
+    ``a & ~local_or`` then fold with AND, since
+    ``(a & ~x) & (a & ~y) == a & ~(x | y)``;
+  * threshold exchanges the bit-sliced occurrence counters themselves
+    (``kernels.ref.segment_counters``): local counters are all-gathered,
+    ripple-carry added in the bit-sliced domain, and one comparator pass
+    emits the result words.
+
+A one-device mesh falls back transparently to the single-dispatch path.
+AND always uses the single-device path (its host fast paths dominate and
+its step identity is not shard-safe for empty shards).
 """
 
 from __future__ import annotations
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import containers as C
@@ -47,9 +69,37 @@ from repro.core.containers import (
     RunContainer, optimize,
 )
 from repro.kernels import ops as kops
+from repro.kernels import ref as kref
 from repro.kernels.ref import WORDS
+from repro.kernels.segment_ops import counter_planes
 
-__all__ = ["or_many", "and_many", "xor_many", "threshold_many"]
+__all__ = ["or_many", "and_many", "xor_many", "andnot_many",
+           "threshold_many", "set_default_mesh"]
+
+_DEFAULT_MESH = None
+
+
+def set_default_mesh(mesh) -> None:
+    """Install a mesh used by every wide aggregate that is not given an
+    explicit ``mesh=``; pass None to restore the single-device path."""
+    global _DEFAULT_MESH
+    _DEFAULT_MESH = mesh
+
+
+def _resolve_mesh(mesh):
+    return _DEFAULT_MESH if mesh is None else mesh
+
+
+def _mesh_size(mesh) -> int:
+    return int(np.prod(mesh.devices.shape))
+
+
+def _mesh_axis(mesh) -> str:
+    if len(mesh.axis_names) != 1:
+        raise ValueError(
+            f"wide aggregation shards over a 1-D mesh; got axes "
+            f"{mesh.axis_names!r}")
+    return mesh.axis_names[0]
 
 
 def _bitmap_cls():
@@ -162,33 +212,49 @@ def _count_arrays(arrays: list[ArrayContainer], op: str,
     return _from_indicator(ind.astype(np.uint8))
 
 
-def _sweep_run_groups(run_groups: list[tuple[int, list[RunContainer]]],
-                      op: str, t: int) -> dict[int, Container]:
+_SUB = np.int64(1) << 40        # andnot sweep: subtrahend coverage marker
+
+
+def _sweep_run_groups(run_groups: list[tuple], op: str,
+                      t: int) -> dict[int, Container]:
     """Run-only groups, ALL reduced in one vectorized boundary sweep at
     *interval* granularity (never expanding to 2^16 bits) -- the host twin
     of the slab's single dispatch.
 
-    Each group's runs are lifted into a global coordinate space
-    (``key << 16 | start``); chunks never overlap, so one sweep serves every
-    group.  Each member's runs are disjoint, hence the coverage count over
-    an elementary interval equals the number of members containing it:
+    Each group is ``(key, containers)`` or ``(key, containers, weights)``;
+    runs are lifted into a global coordinate space (``key << 16 | start``);
+    chunks never overlap, so one sweep serves every group.  Each member's
+    runs are disjoint, hence the (weighted) coverage count over an
+    elementary interval equals the summed weight of members containing it:
     OR is count >= 1, AND count == K (per group), XOR odd count, threshold
-    count >= t.  ``run_groups`` must be key-sorted."""
+    count >= t.  ANDNOT weights the minuend (the FIRST container of each
+    group) 1 and every subtrahend ``_SUB``, keeping intervals with coverage
+    exactly 1.  ``run_groups`` must be key-sorted."""
     out: dict[int, Container] = {}
     if not run_groups:
         return out
-    starts_l, ends_l = [], []
-    for k, conts in run_groups:
+    starts_l, ends_l, delta_l = [], [], []
+    for grp in run_groups:
+        k, conts = grp[0], grp[1]
+        wts = grp[2] if len(grp) > 2 else None
+        if op == "andnot":
+            wts = [1] + [_SUB] * (len(conts) - 1)
         r = conts[0].runs if len(conts) == 1 else \
             np.concatenate([c.runs for c in conts])
+        if wts is not None:                 # weighted / andnot groups only
+            delta_l.append(np.repeat(np.asarray(wts, np.int64),
+                                     [c.runs.shape[0] for c in conts]))
         s = r[:, 0].astype(np.int64) + (np.int64(k) << 16)
         starts_l.append(s)
         ends_l.append(s + r[:, 1] + 1)                  # exclusive
     starts = np.concatenate(starts_l)
     ends = np.concatenate(ends_l)
+    if delta_l:
+        wdelta = np.concatenate(delta_l)
+    else:
+        wdelta = np.ones(starts.size, np.int64)
     pts = np.concatenate((starts, ends))
-    delta = np.concatenate((np.ones(starts.size, np.int32),
-                            np.full(ends.size, -1, np.int32)))
+    delta = np.concatenate((wdelta, -wdelta))
     order = np.argsort(pts, kind="stable")
     upts, first = np.unique(pts[order], return_index=True)
     cov = np.cumsum(np.add.reduceat(delta[order], first))[:-1]  # / interval
@@ -197,10 +263,12 @@ def _sweep_run_groups(run_groups: list[tuple[int, list[RunContainer]]],
     elif op == "xor":
         keep = (cov & 1) == 1
     elif op == "and":
-        gk = np.array([k for k, _ in run_groups], np.int64)
-        gn = np.array([len(c) for _, c in run_groups], np.int64)
+        gk = np.array([g[0] for g in run_groups], np.int64)
+        gn = np.array([len(g[1]) for g in run_groups], np.int64)
         need = gn[np.searchsorted(gk, upts[:-1] >> 16)]
         keep = cov >= need                 # gap intervals have cov 0 < need
+    elif op == "andnot":
+        keep = cov == 1                    # minuend present, no subtrahend
     else:
         keep = cov >= t
     lo, hi = upts[:-1][keep], upts[1:][keep]
@@ -222,62 +290,54 @@ def _sweep_run_groups(run_groups: list[tuple[int, list[RunContainer]]],
     return out
 
 
-def _filter_values(vals: np.ndarray, c: Container) -> np.ndarray:
-    """Keep the sorted uint16 ``vals`` that are members of container ``c``
-    (the AND fast path's vectorized membership probe)."""
-    if vals.size == 0:
-        return vals
+def _member_mask(vals: np.ndarray, c: Container) -> np.ndarray:
+    """Boolean membership of the sorted uint16 ``vals`` in container ``c``
+    (the AND / ANDNOT fast paths' vectorized membership probe)."""
     if isinstance(c, BitsetContainer):
-        return vals[C.bitset_test_many(c.words, vals)]
+        return C.bitset_test_many(c.words, vals)
     if isinstance(c, ArrayContainer):
         if c.values.size == 0:
-            return vals[:0]
+            return np.zeros(vals.size, bool)
         idx = np.searchsorted(c.values, vals)
         idx[idx == c.values.size] = c.values.size - 1
-        return vals[c.values[idx] == vals]
+        return c.values[idx] == vals
     starts = c.runs[:, 0]
     v = vals.astype(np.int32)
     i = np.searchsorted(starts, v, side="right") - 1
     i_c = np.maximum(i, 0)
-    ok = (i >= 0) & (v <= starts[i_c] + c.runs[i_c, 1])
-    return vals[ok]
+    return (i >= 0) & (v <= starts[i_c] + c.runs[i_c, 1])
+
+
+def _filter_values(vals: np.ndarray, c: Container) -> np.ndarray:
+    """Keep the sorted uint16 ``vals`` that are members of ``c``."""
+    if vals.size == 0:
+        return vals
+    return vals[_member_mask(vals, c)]
+
+
+def _filter_values_out(vals: np.ndarray, c: Container) -> np.ndarray:
+    """Keep the sorted uint16 ``vals`` that are NOT members of ``c``."""
+    if vals.size == 0:
+        return vals
+    return vals[~_member_mask(vals, c)]
 
 
 # ---------------------------------------------------------------------------
-# the single kernel dispatch
+# the single kernel dispatch (and its sharded multi-device twin)
 # ---------------------------------------------------------------------------
 
-def _dispatch(seg_keys: list[int], seg_rows: list[list[np.ndarray]],
-              op: str, threshold: int, backend) -> dict[int, Container]:
-    """Stack per-segment rows into one slab, reduce in one kernel call,
-    repack each segment's (words, card) into the optimal container kind."""
-    if not seg_keys:
-        return {}
-    lens = [len(r) for r in seg_rows]
-    starts = np.zeros(len(lens) + 1, np.int32)
-    starts[1:] = np.cumsum(lens)
-    slab64 = np.stack([w for rows in seg_rows for w in rows])
-    n = slab64.shape[0]
-    slab32 = slab64.view(np.uint32).reshape(n, WORDS)
-    # pad rows / segments / depth to powers of two so jit and kernel
-    # specializations are reused across calls
-    n_pad = _pow2(n)
-    if n_pad != n:
-        slab32 = np.concatenate(
-            [slab32, np.zeros((n_pad - n, WORDS), np.uint32)])
-    s = len(lens)
-    s_pad = _pow2(s)
-    if s_pad != s:
-        starts = np.concatenate(
-            [starts, np.full(s_pad - s, starts[-1], np.int32)])
-    jmax = _pow2(max(lens))
-    words, cards = kops.segment_reduce(
-        jnp.asarray(slab32), jnp.asarray(starts), op, jmax=jmax,
-        threshold=threshold, backend=backend)
-    words = np.asarray(words[:s])
-    cards = np.asarray(cards[:s])
+def _planes_for(totals: list[int], threshold: int) -> int:
+    """Bit-sliced counter width for a threshold dispatch: wide enough for
+    the largest attainable per-segment count AND for every bit of ``t``
+    (the comparator reads t bit-by-bit; truncating high bits would compare
+    against t mod 2^planes)."""
+    return max(counter_planes(max(totals)), int(threshold).bit_length())
+
+
+def _repack_segments(seg_keys, words, cards) -> dict[int, Container]:
+    """(words, card) per segment -> optimal container kind per chunk."""
     out: dict[int, Container] = {}
-    for key, w32, card in zip(seg_keys, words, cards):
+    for key, w32, card in zip(seg_keys, np.asarray(words), np.asarray(cards)):
         card = int(card)
         if card == 0:
             continue
@@ -286,12 +346,172 @@ def _dispatch(seg_keys: list[int], seg_rows: list[list[np.ndarray]],
     return out
 
 
+def _dispatch(seg_keys: list[int], seg_rows: list[list[np.ndarray]],
+              op: str, threshold: int, backend,
+              seg_weights: list[list[int]] | None = None,
+              mesh=None) -> dict[int, Container]:
+    """Stack per-segment rows into one slab, reduce in one kernel call,
+    repack each segment's (words, card) into the optimal container kind.
+    With a multi-device mesh, rows shard across the mesh axis instead
+    (see ``_shard_reduce``); AND stays single-device."""
+    if not seg_keys:
+        return {}
+    mesh = _resolve_mesh(mesh)
+    lens = [len(r) for r in seg_rows]
+    slab64 = np.stack([w for rows in seg_rows for w in rows])
+    n = slab64.shape[0]
+    slab32 = slab64.view(np.uint32).reshape(n, WORDS)
+    planes = None
+    wbits = 1
+    if op == "threshold" and seg_weights is not None:
+        planes = _planes_for([sum(w) for w in seg_weights], threshold)
+        wbits = max(int(w).bit_length() for ws in seg_weights for w in ws)
+    if mesh is not None and _mesh_size(mesh) > 1 and op != "and":
+        words, cards = _shard_reduce(
+            jnp.asarray(slab32), lens, seg_weights, op, threshold,
+            backend, mesh, planes=planes)
+        return _repack_segments(seg_keys, words, cards)
+    starts = np.zeros(len(lens) + 1, np.int32)
+    starts[1:] = np.cumsum(lens)
+    weights = None
+    if seg_weights is not None:
+        weights = np.concatenate(
+            [np.asarray(w, np.int32) for w in seg_weights])
+    # pad rows / segments / depth to powers of two so jit and kernel
+    # specializations are reused across calls
+    n_pad = _pow2(n)
+    if n_pad != n:
+        slab32 = np.concatenate(
+            [slab32, np.zeros((n_pad - n, WORDS), np.uint32)])
+        if weights is not None:
+            weights = np.concatenate(
+                [weights, np.ones(n_pad - n, np.int32)])
+    s = len(lens)
+    s_pad = _pow2(s)
+    if s_pad != s:
+        starts = np.concatenate(
+            [starts, np.full(s_pad - s, starts[-1], np.int32)])
+    jmax = _pow2(max(lens))
+    words, cards = kops.segment_reduce(
+        jnp.asarray(slab32), jnp.asarray(starts), op, jmax=jmax,
+        threshold=threshold,
+        weights=None if weights is None else jnp.asarray(weights),
+        planes=planes, wbits=wbits, backend=backend)
+    return _repack_segments(seg_keys, words[:s], cards[:s])
+
+
+def _shard_plan(seg_sizes: list[int], d: int, op: str,
+                seg_weights: list[list[int]] | None):
+    """Round-robin each segment's rows across ``d`` shards.
+
+    Returns per-device (row ids into the segment-major slab, per-row
+    weights, segment starts); every device sees the SAME segment structure
+    (some local segments may be empty -> the kernel's identity).  For
+    "andnot" the minuend (each segment's row 0) is REPLICATED on every
+    shard so the local partials ``a & ~local_or`` fold with AND."""
+    ids = [[] for _ in range(d)]
+    wts = [[] for _ in range(d)]
+    starts = [[0] for _ in range(d)]
+    base = 0
+    for si, nrow in enumerate(seg_sizes):
+        w = None if seg_weights is None else seg_weights[si]
+        for dev in range(d):
+            if op == "andnot":
+                mine = [base] + list(range(base + 1 + dev, base + nrow, d))
+                mw = [1] * len(mine)
+            else:
+                mine = list(range(base + dev, base + nrow, d))
+                mw = [1] * len(mine) if w is None else \
+                    [w[i - base] for i in mine]
+            ids[dev].extend(mine)
+            wts[dev].extend(mw)
+            starts[dev].append(len(ids[dev]))
+        base += nrow
+    return ids, wts, starts
+
+
+def _shard_reduce(slab: jax.Array, seg_sizes: list[int],
+                  seg_weights: list[list[int]] | None, op: str,
+                  threshold: int, backend, mesh, planes: int | None = None):
+    """Sharded segmented reduce: split rows across the mesh axis, reduce
+    per shard with the SAME segment kernel, all-reduce the partials.
+
+    slab: (N, WORDS) uint32 rows, segment-major (segment s owns
+    ``sum(seg_sizes[:s]) : sum(seg_sizes[:s+1])``).  Returns
+    (words (S, WORDS), cards (S,)) identical to the single-device plan:
+    OR/XOR partials fold with the op, ANDNOT partials (minuend replicated)
+    fold with AND, and threshold all-gathers the bit-sliced occurrence
+    counters and adds them before one comparator pass.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+
+    d = _mesh_size(mesh)
+    axis = _mesh_axis(mesh)
+    s = len(seg_sizes)
+    ids, wts, starts = _shard_plan(seg_sizes, d, op, seg_weights)
+    n_pad = _pow2(max(max(len(i) for i in ids), 1))
+    s_pad = _pow2(s)
+    ids_all = np.zeros((d, n_pad), np.int32)
+    w_all = np.ones((d, n_pad), np.int32)
+    starts_all = np.zeros((d, s_pad + 1), np.int32)
+    jmax = 1
+    for dev in range(d):
+        k = len(ids[dev])
+        ids_all[dev, :k] = ids[dev]
+        w_all[dev, :k] = wts[dev]
+        st = np.asarray(starts[dev], np.int32)
+        starts_all[dev, :s + 1] = st
+        starts_all[dev, s + 1:] = st[-1]
+        jmax = max(jmax, int(np.diff(st).max(initial=1)))
+    jmax = _pow2(jmax)
+    if op == "threshold" and planes is None:
+        planes = _planes_for(
+            seg_sizes if seg_weights is None else
+            [sum(w) for w in seg_weights], threshold)
+    slab_all = jnp.take(slab.astype(jnp.uint32),
+                        jnp.asarray(ids_all.reshape(-1)),
+                        axis=0).reshape(d, n_pad, WORDS)
+
+    def body(slab_d, starts_d, w_d):
+        slab_l, starts_l, w_l = slab_d[0], starts_d[0], w_d[0]
+        if op == "threshold":
+            local = kops.segment_counters(
+                slab_l, starts_l, jmax=jmax, planes=planes, weights=w_l,
+                backend=backend)
+            allp = jax.lax.all_gather(local, axis)      # (D, S, L, WORDS)
+            tot = allp[0]
+            for i in range(1, d):
+                tot = kref.bitsliced_add(tot, allp[i])
+            words = kref.counters_ge(tot, jnp.int32(threshold))
+        else:
+            pw, _ = kops.segment_reduce(slab_l, starts_l, op, jmax=jmax,
+                                        backend=backend)
+            allw = jax.lax.all_gather(pw, axis)         # (D, S, WORDS)
+            comb = {"or": jnp.bitwise_or, "xor": jnp.bitwise_xor,
+                    "andnot": jnp.bitwise_and}[op]
+            words = allw[0]
+            for i in range(1, d):
+                words = comb(words, allw[i])
+        return words, kref.popcount_words(words)
+
+    spec = PartitionSpec(axis)
+    with mesh:
+        words, cards = shard_map(
+            body, mesh=mesh, in_specs=(spec, spec, spec),
+            out_specs=(PartitionSpec(), PartitionSpec()),
+            check_rep=False)(slab_all, jnp.asarray(starts_all),
+                             jnp.asarray(w_all))
+    return words[:s], cards[:s]
+
+
 # ---------------------------------------------------------------------------
 # public wide aggregates
 # ---------------------------------------------------------------------------
 
-def or_many(bitmaps, *, backend: str | None = None):
-    """Union of K bitmaps in one kernel dispatch (paper section 5.8)."""
+def or_many(bitmaps, *, backend: str | None = None, mesh=None):
+    """Union of K bitmaps in one kernel dispatch (paper section 5.8);
+    with a multi-device ``mesh``, one sharded dispatch per shard."""
     bitmaps = list(bitmaps)
     if not bitmaps:
         return _bitmap_cls()()
@@ -331,11 +551,11 @@ def or_many(bitmaps, *, backend: str | None = None):
         seg_keys.append(k)
         seg_rows.append(rows)
     merged.update(_sweep_run_groups(run_groups, "or", 0))
-    merged.update(_dispatch(seg_keys, seg_rows, "or", 0, backend))
+    merged.update(_dispatch(seg_keys, seg_rows, "or", 0, backend, mesh=mesh))
     return _build(merged)
 
 
-def xor_many(bitmaps, *, backend: str | None = None):
+def xor_many(bitmaps, *, backend: str | None = None, mesh=None):
     """Wide symmetric difference: a value survives iff it occurs in an odd
     number of inputs (K-ary XOR)."""
     bitmaps = list(bitmaps)
@@ -368,14 +588,20 @@ def xor_many(bitmaps, *, backend: str | None = None):
         seg_keys.append(k)
         seg_rows.append(rows)
     merged.update(_sweep_run_groups(run_groups, "xor", 0))
-    merged.update(_dispatch(seg_keys, seg_rows, "xor", 0, backend))
+    merged.update(_dispatch(seg_keys, seg_rows, "xor", 0, backend,
+                            mesh=mesh))
     return _build(merged)
 
 
-def and_many(bitmaps, *, backend: str | None = None):
+def and_many(bitmaps, *, backend: str | None = None, mesh=None):
     """Intersection of K bitmaps: cardinality-ascending key pruning with
     empty-key early exit, array-anchored host filtering for sparse groups,
-    one kernel dispatch for the dense remainder."""
+    one kernel dispatch for the dense remainder.
+
+    ``mesh`` is accepted for interface symmetry but AND always runs the
+    single-device plan: its host fast paths dominate, and its all-ones
+    step identity is not shard-safe for shards holding no rows of a
+    segment."""
     bitmaps = list(bitmaps)
     if not bitmaps:
         return _bitmap_cls()()
@@ -414,24 +640,109 @@ def and_many(bitmaps, *, backend: str | None = None):
         seg_keys.append(k)
         seg_rows.append([_words_row(c) for c in g])
     merged.update(_sweep_run_groups(run_groups, "and", 0))
-    merged.update(_dispatch(seg_keys, seg_rows, "and", 0, backend))
+    merged.update(_dispatch(seg_keys, seg_rows, "and", 0, backend,
+                            mesh=mesh))
     return _build(merged)
 
 
-def threshold_many(bitmaps, t: int, *, backend: str | None = None):
-    """T-occurrence query: values present in at least ``t`` of the K inputs
-    (Kaser & Lemire's threshold function; T=1 is union, T=K intersection).
+def andnot_many(minuend, subtrahends, *, backend: str | None = None,
+                mesh=None):
+    """Difference chain ``a - (b1 | b2 | ...)`` as ONE plan: subtrahends
+    OR-reduce segment-wise and a fused ANDNOT finalizes in the kernel
+    ("Compressed bitmap indexes: beyond unions and intersections",
+    Kaser & Lemire -- never materializes the intermediate union).
 
-    Keys appearing in fewer than ``t`` inputs are pruned on the host; the
-    rest run through the kernel's bit-sliced counter circuit."""
+    Keys absent from every subtrahend pass through zero-copy; keys whose
+    subtrahend group contains a full chunk drop immediately; array-probe
+    and interval-sweep fast paths mirror the other aggregates."""
+    subtrahends = list(subtrahends)
+    if not subtrahends:
+        return _shallow(minuend)
+    sub_groups = _group(subtrahends)
+    merged: dict[int, Container] = {}
+    seg_keys: list[int] = []
+    seg_rows: list[list[np.ndarray]] = []
+    run_groups: list[tuple[int, list[Container]]] = []
+    for k, c in zip(minuend.keys, minuend.containers):
+        g = sub_groups.get(k)
+        if g is None:
+            merged[k] = c                          # zero-copy pass-through
+            continue
+        if any(_is_full(x) for x in g):
+            continue                               # chunk fully subtracted
+        if isinstance(c, RunContainer) and \
+                all(isinstance(x, RunContainer) for x in g):
+            run_groups.append((k, [c] + g))        # interval-level diff
+            continue
+        cc = c
+        if isinstance(cc, RunContainer) and cc.card <= ARRAY_MAX:
+            cc = ArrayContainer(cc.to_array_values())
+        if isinstance(cc, ArrayContainer):
+            # array-anchored: the result is a subset of the minuend, so
+            # vectorized NOT-member probes beat promoting the group
+            vals = cc.values
+            for x in sorted(g, key=lambda q: -q.card):
+                vals = _filter_values_out(vals, x)
+                if vals.size == 0:
+                    break
+            if vals.size:
+                merged[k] = ArrayContainer(vals)
+            continue
+        arrays = [x for x in g if isinstance(x, ArrayContainer)]
+        others = [x for x in g if not isinstance(x, ArrayContainer)]
+        rows = [_words_row(c)]                     # minuend is row 0
+        if arrays:
+            rows.append(_indicator_row(arrays, "or"))
+        rows.extend(_words_row(x) for x in others)
+        seg_keys.append(k)
+        seg_rows.append(rows)
+    merged.update(_sweep_run_groups(run_groups, "andnot", 0))
+    merged.update(_dispatch(seg_keys, seg_rows, "andnot", 0, backend,
+                            mesh=mesh))
+    return _build(merged)
+
+
+def _check_weights(weights, k: int) -> list[int] | None:
+    """Validate per-bitmap threshold weights; None when they degenerate to
+    the unweighted path (all 1).  The total weight must fit int32: the
+    kernel's counters and the jnp oracle accumulate in int32 (the host
+    fast paths are int64, and results must not depend on container kind).
+    """
+    if weights is None:
+        return None
+    w = [int(x) for x in weights]
+    if len(w) != k:
+        raise ValueError(f"need one weight per bitmap: {len(w)} != {k}")
+    if any(x < 1 for x in w):
+        raise ValueError(f"weights must be >= 1, got {w}")
+    if sum(w) >= 1 << 31:
+        raise ValueError(
+            f"total weight {sum(w)} overflows the int32 counter domain")
+    return None if all(x == 1 for x in w) else w
+
+
+def threshold_many(bitmaps, t: int, *, weights=None,
+                   backend: str | None = None, mesh=None):
+    """T-occurrence query: values whose (weighted) occurrence count over
+    the K inputs reaches ``t`` (Kaser & Lemire's threshold function; T=1 is
+    union, unweighted T=K intersection).
+
+    ``weights`` are per-bitmap positive integers added into the same
+    bit-sliced counter circuit (weight 1 everywhere degenerates to the
+    unweighted plan, bit for bit).  Keys whose total attainable weight
+    stays below ``t`` are pruned on the host."""
     bitmaps = list(bitmaps)
     t = int(t)
     if t < 1:
         raise ValueError(f"threshold must be >= 1, got {t}")
-    if not bitmaps or t > len(bitmaps):
+    weights = _check_weights(weights, len(bitmaps))
+    if not bitmaps or (weights is None and t > len(bitmaps)) or \
+            (weights is not None and t > sum(weights)):
         return _bitmap_cls()()
     if t == 1:
-        return or_many(bitmaps, backend=backend)
+        return or_many(bitmaps, backend=backend, mesh=mesh)
+    if weights is not None:
+        return _threshold_weighted(bitmaps, t, weights, backend, mesh)
     groups = _group(bitmaps)
     merged: dict[int, Container] = {}
     seg_keys: list[int] = []
@@ -452,5 +763,46 @@ def threshold_many(bitmaps, t: int, *, backend: str | None = None):
         seg_keys.append(k)
         seg_rows.append([_words_row(c) for c in g])
     merged.update(_sweep_run_groups(run_groups, "threshold", t))
-    merged.update(_dispatch(seg_keys, seg_rows, "threshold", t, backend))
+    merged.update(_dispatch(seg_keys, seg_rows, "threshold", t, backend,
+                            mesh=mesh))
+    return _build(merged)
+
+
+def _threshold_weighted(bitmaps, t: int, weights: list[int], backend, mesh):
+    """Weighted threshold body: identical planning shape, with per-member
+    weights threaded through the sweep, the bincount fast path, and the
+    kernel's shift-and-add counter circuit."""
+    groups: dict[int, list[tuple[Container, int]]] = {}
+    for bm, w in zip(bitmaps, weights):
+        for k, c in zip(bm.keys, bm.containers):
+            groups.setdefault(k, []).append((c, w))
+    merged: dict[int, Container] = {}
+    seg_keys: list[int] = []
+    seg_rows: list[list[np.ndarray]] = []
+    seg_wts: list[list[int]] = []
+    run_groups: list[tuple] = []
+    for k in sorted(groups):
+        g = groups[k]
+        if sum(w for _, w in g) < t:
+            continue                               # can never reach T
+        if all(isinstance(c, RunContainer) for c, _ in g):
+            run_groups.append((k, [c for c, _ in g], [w for _, w in g]))
+            continue
+        if all(isinstance(c, ArrayContainer) for c, _ in g):
+            vals = np.concatenate([c.values for c, _ in g])
+            wrep = np.repeat(np.asarray([w for _, w in g], np.int64),
+                             [c.values.size for c, _ in g])
+            # bincount's float64 sums are exact for int totals < 2^53
+            # (weights are bounded to the int32 domain by _check_weights)
+            cnt = np.bincount(vals, weights=wrep, minlength=CHUNK)
+            c = _from_indicator((cnt >= t).astype(np.uint8))
+            if c is not None:
+                merged[k] = c
+            continue
+        seg_keys.append(k)
+        seg_rows.append([_words_row(c) for c, _ in g])
+        seg_wts.append([w for _, w in g])
+    merged.update(_sweep_run_groups(run_groups, "threshold", t))
+    merged.update(_dispatch(seg_keys, seg_rows, "threshold", t, backend,
+                            seg_weights=seg_wts, mesh=mesh))
     return _build(merged)

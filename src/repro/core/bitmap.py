@@ -308,10 +308,12 @@ class RoaringBitmap:
     # ------------------------------------------------------------------
 
     @staticmethod
-    def or_many(bitmaps: list["RoaringBitmap"]) -> "RoaringBitmap":
-        """Wide union: one segmented-kernel dispatch for any K."""
+    def or_many(bitmaps: list["RoaringBitmap"], *,
+                mesh=None) -> "RoaringBitmap":
+        """Wide union: one segmented-kernel dispatch for any K (one per
+        mesh shard when a multi-device ``mesh`` is given)."""
         from repro.core import aggregate
-        return aggregate.or_many(bitmaps)
+        return aggregate.or_many(bitmaps, mesh=mesh)
 
     @staticmethod
     def and_many(bitmaps: list["RoaringBitmap"]) -> "RoaringBitmap":
@@ -321,18 +323,30 @@ class RoaringBitmap:
         return aggregate.and_many(bitmaps)
 
     @staticmethod
-    def xor_many(bitmaps: list["RoaringBitmap"]) -> "RoaringBitmap":
+    def xor_many(bitmaps: list["RoaringBitmap"], *,
+                 mesh=None) -> "RoaringBitmap":
         """Wide symmetric difference: values present in an odd number of
         inputs."""
         from repro.core import aggregate
-        return aggregate.xor_many(bitmaps)
+        return aggregate.xor_many(bitmaps, mesh=mesh)
 
     @staticmethod
-    def threshold_many(bitmaps: list["RoaringBitmap"],
-                       t: int) -> "RoaringBitmap":
-        """T-occurrence query: values present in >= t of the K inputs."""
+    def andnot_many(minuend: "RoaringBitmap",
+                    subtrahends: list["RoaringBitmap"], *,
+                    mesh=None) -> "RoaringBitmap":
+        """Difference chain ``a - (b1 | b2 | ...)`` as one fused plan (the
+        subtrahend union is never materialized)."""
         from repro.core import aggregate
-        return aggregate.threshold_many(bitmaps, t)
+        return aggregate.andnot_many(minuend, subtrahends, mesh=mesh)
+
+    @staticmethod
+    def threshold_many(bitmaps: list["RoaringBitmap"], t: int, *,
+                       weights=None, mesh=None) -> "RoaringBitmap":
+        """T-occurrence query: values whose (optionally per-bitmap
+        weighted) occurrence count reaches ``t``."""
+        from repro.core import aggregate
+        return aggregate.threshold_many(bitmaps, t, weights=weights,
+                                        mesh=mesh)
 
     # ------------------------------------------------------------------
     # maintenance (paper: run_optimize / shrink_to_fit)

@@ -50,11 +50,23 @@ def serialize(bm: RoaringBitmap) -> bytes:
     return b"".join(parts)
 
 
+def _need(buf: bytes, off: int, nbytes: int, what: str) -> None:
+    """Bounds check with an actionable message (truncated/corrupt payloads
+    must fail with ValueError, never a bare struct/buffer error)."""
+    if off + nbytes > len(buf):
+        raise ValueError(
+            f"truncated roaring payload: need {nbytes} byte(s) for {what} "
+            f"at offset {off}, but only {len(buf) - off} remain")
+
+
 def deserialize(buf: bytes) -> RoaringBitmap:
+    buf = bytes(buf)
+    _need(buf, 0, 8, "header")
     if buf[:4] != MAGIC:
         raise ValueError("bad magic; not an RJ01 roaring payload")
     (n,) = struct.unpack_from("<I", buf, 4)
     off = 8
+    _need(buf, off, 5 * n, f"directory of {n} container(s)")
     keys = np.frombuffer(buf, dtype=np.uint16, count=n, offset=off)
     off += 2 * n
     kinds = np.frombuffer(buf, dtype=np.uint8, count=n, offset=off)
@@ -66,17 +78,21 @@ def deserialize(buf: bytes) -> RoaringBitmap:
         card = int(cards[i]) + 1
         kind = int(kinds[i])
         if kind == 1:
+            _need(buf, off, 2 * card, f"array container {i} ({card} values)")
             vals = np.frombuffer(buf, dtype=np.uint16, count=card, offset=off)
             off += 2 * card
             out_conts.append(ArrayContainer(vals.copy()))
         elif kind == 2:
+            _need(buf, off, 8 * BITSET_WORDS, f"bitset container {i}")
             words = np.frombuffer(buf, dtype=np.uint64,
                                   count=BITSET_WORDS, offset=off)
             off += 8 * BITSET_WORDS
             out_conts.append(BitsetContainer(words.copy(), card))
         elif kind == 3:
+            _need(buf, off, 2, f"run count of container {i}")
             (nr,) = struct.unpack_from("<H", buf, off)
             off += 2
+            _need(buf, off, 4 * nr, f"run container {i} ({nr} runs)")
             runs = np.frombuffer(buf, dtype=np.uint16, count=2 * nr,
                                  offset=off).reshape(nr, 2)
             off += 4 * nr

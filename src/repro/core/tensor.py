@@ -26,7 +26,6 @@ static-capacity sorted merge.  Count-only variants never materialize results
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -341,7 +340,8 @@ class RoaringTensor:
     # wide aggregation (paper section 5.8 on device)
     # ====================================================================
 
-    def reduce_or(self, backend: str | None = None) -> "RoaringTensor":
+    def reduce_or(self, backend: str | None = None,
+                  mesh=None) -> "RoaringTensor":
         """OR-reduce the whole batch axis into a single bitmap using ONE
         segmented-kernel dispatch (host bridge, not jit-able: the segment
         plan depends on the concrete keys).
@@ -349,8 +349,12 @@ class RoaringTensor:
         Every non-empty slot of every batch row becomes one slab row; slots
         sharing a chunk key across the batch form a segment; the same
         ``segment_reduce`` kernel that powers ``RoaringBitmap.or_many``
-        reduces them fused with the Harley-Seal cardinality.  Returns a
-        batch-1 tensor whose capacity is the number of distinct keys."""
+        reduces them fused with the Harley-Seal cardinality.  With a
+        multi-device ``mesh``, each segment's rows shard across the mesh
+        axis and partials all-reduce with OR (see aggregate._shard_reduce).
+        Returns a batch-1 tensor whose capacity is the number of distinct
+        keys."""
+        from repro.core import aggregate
         keys = np.asarray(self.keys).reshape(-1)
         kinds = np.asarray(self.kinds).reshape(-1)
         live = np.flatnonzero(kinds != KIND_EMPTY)
@@ -364,6 +368,15 @@ class RoaringTensor:
         sorted_keys = keys[order]
         uniq, first = np.unique(sorted_keys, return_index=True)
         starts = np.concatenate((first, [sorted_keys.size])).astype(np.int32)
+        words = self.to_words().reshape(-1, WORDS)
+        mesh = aggregate._resolve_mesh(mesh)
+        if mesh is not None and aggregate._mesh_size(mesh) > 1:
+            slab = jnp.take(words, jnp.asarray(order), axis=0)
+            rw, cards = aggregate._shard_reduce(
+                slab, np.diff(starts).tolist(), None, "or", 0, backend,
+                mesh)
+            return repack(jnp.asarray(uniq.astype(np.int32))[None, :],
+                          cards[None, :], rw[None])
         jmax = int(np.diff(starts).max())
         # pad rows / segments / depth to powers of two so the jit cache is
         # reused across calls (same scheme as aggregate._dispatch); padded
@@ -378,7 +391,6 @@ class RoaringTensor:
         out_keys[:uniq.size] = uniq
         starts = np.concatenate(
             (starts, np.full(s_pad - uniq.size, starts[-1], np.int32)))
-        words = self.to_words().reshape(-1, WORDS)
         slab = jnp.take(words, jnp.asarray(order), axis=0)
         rw, cards = kops.segment_reduce(slab, jnp.asarray(starts), "or",
                                         jmax=jmax, backend=backend)

@@ -56,14 +56,19 @@ class InvertedIndex:
     def query_xor(self, *terms) -> RoaringBitmap:
         return RoaringBitmap.xor_many([self._get(t) for t in terms])
 
-    def query_threshold(self, terms, t: int) -> RoaringBitmap:
-        """Documents matching at least ``t`` of the given terms
-        (T-occurrence query, Kaser & Lemire)."""
+    def query_threshold(self, terms, t: int, weights=None) -> RoaringBitmap:
+        """Documents whose matched terms reach a total score of ``t``
+        (T-occurrence query, Kaser & Lemire); optional per-term integer
+        ``weights`` rank terms without leaving the one-dispatch plan."""
         return RoaringBitmap.threshold_many(
-            [self._get(term) for term in terms], t)
+            [self._get(term) for term in terms], t, weights=weights)
 
-    def query_andnot(self, keep: str, drop: str) -> RoaringBitmap:
-        return self._get(keep) - self._get(drop)
+    def query_andnot(self, keep: str, *drops: str) -> RoaringBitmap:
+        """Documents matching ``keep`` and none of ``drops`` -- a
+        difference chain planned as one fused dispatch (the union of the
+        dropped postings is never materialized)."""
+        return RoaringBitmap.andnot_many(
+            self._get(keep), [self._get(d) for d in drops])
 
     def count_and(self, a: str, b: str) -> int:
         return self._get(a).and_card(self._get(b))  # fast count, sec 5.9

@@ -85,18 +85,42 @@ def array_intersect(a_vals, a_card, b_vals, b_card, *,
 _ref_segment_reduce = jax.jit(
     ref.segment_reduce, static_argnames=("op", "jmax"))
 
+_ref_segment_counters = jax.jit(
+    ref.segment_counters, static_argnames=("jmax", "planes"))
+
 
 def segment_reduce(slab, starts, op: str, *, jmax: int, threshold: int = 0,
+                   weights=None, planes: int | None = None, wbits: int = 1,
                    backend: Backend | None = None):
-    """Segmented K-way OR/AND/XOR/threshold reduce fused with cardinality:
-    one dispatch for an arbitrary number of bitmaps (wide aggregation,
-    paper section 5.8).  See kernels/segment_ops.py for the layout.
-    ``threshold`` is a runtime scalar: T-sweeps share one compilation."""
+    """Segmented K-way OR/AND/XOR/ANDNOT/threshold reduce fused with
+    cardinality: one dispatch for an arbitrary number of bitmaps (wide
+    aggregation, paper section 5.8).  See kernels/segment_ops.py for the
+    layout.  ``threshold`` is a runtime scalar: T-sweeps share one
+    compilation.  ``weights`` (N,) int32 weight threshold rows (``wbits``
+    static bit width, ``planes`` static counter width)."""
     t = jnp.asarray(threshold, jnp.int32)
+    if weights is not None:
+        weights = jnp.asarray(weights, jnp.int32)
     if _use_pallas(backend):
         return _segment_ops.segment_reduce(slab, starts, op, jmax=jmax,
-                                           threshold=t)
-    return _ref_segment_reduce(slab, starts, op, jmax=jmax, threshold=t)
+                                           threshold=t, weights=weights,
+                                           planes=planes, wbits=wbits)
+    return _ref_segment_reduce(slab, starts, op, jmax=jmax, threshold=t,
+                               weights=weights)
+
+
+def segment_counters(slab, starts, *, jmax: int, planes: int, weights=None,
+                     backend: Backend | None = None):
+    """Per-segment bit-sliced occurrence counters (S, planes, WORDS) --
+    the exchange payload of the sharded threshold path.  Counter
+    computation is a pure-jnp path on all backends: it exists to be
+    all-gathered and combined across mesh shards, where XLA's fusion of
+    the 32 plane extractions is already the right lowering."""
+    del backend
+    if weights is not None:
+        weights = jnp.asarray(weights, jnp.int32)
+    return _ref_segment_counters(slab, starts, jmax=jmax, planes=planes,
+                                 weights=weights)
 
 
 def decode_attention(q, k, v, block_mask_words, kv_len, *,

@@ -188,14 +188,19 @@ def _compact(vals: jax.Array, keep: jax.Array) -> tuple[jax.Array, jax.Array]:
 # ---------------------------------------------------------------------------
 
 def segment_reduce(slab: jax.Array, starts: jax.Array, op: str, *,
-                   jmax: int, threshold: int = 0
+                   jmax: int, threshold: int = 0,
+                   weights: jax.Array | None = None
                    ) -> tuple[jax.Array, jax.Array]:
-    """Per-segment OR/AND/XOR/threshold reduction + cardinality.
+    """Per-segment OR/AND/XOR/ANDNOT/threshold reduction + cardinality.
 
     slab: (N, WORDS) uint32 rows grouped segment-major; starts: (S + 1,)
     int32 row offsets; jmax: static max segment length.  Returns
     (words (S, WORDS) uint32, cards (S,) int32).  Empty segments reduce to
     zero words / zero cardinality for every op.
+
+    op "andnot" treats each segment's FIRST row as the minuend and the rest
+    as subtrahends: row0 & ~(row1 | row2 | ...).  ``weights`` (N,) int32 are
+    per-row occurrence weights for op "threshold" (default 1 per row).
     """
     slab = slab.astype(jnp.uint32)
     starts = starts.astype(jnp.int32)
@@ -206,12 +211,23 @@ def segment_reduce(slab: jax.Array, starts: jax.Array, op: str, *,
     g = slab[jnp.minimum(row, n - 1)]                     # (S, jmax, WORDS)
     if op == "threshold":
         g = jnp.where(valid[..., None], g, jnp.uint32(0))
+        if weights is None:
+            w = jnp.ones((g.shape[0], jmax), jnp.int32)
+        else:
+            w = weights.astype(jnp.int32)[jnp.minimum(row, n - 1)]
+        w = jnp.where(valid, w, 0)
         out = jnp.zeros((g.shape[0], WORDS), jnp.uint32)
         for b in range(32):
-            cnt = ((g >> jnp.uint32(b)) & jnp.uint32(1)).sum(
-                axis=1).astype(jnp.int32)
+            cnt = (((g >> jnp.uint32(b)) & jnp.uint32(1)).astype(jnp.int32)
+                   * w[..., None]).sum(axis=1)
             hit = (cnt >= threshold).astype(jnp.uint32)
             out = out | (hit << jnp.uint32(b))
+    elif op == "andnot":
+        g = jnp.where(valid[..., None], g, jnp.uint32(0))
+        first = g[:, 0]
+        rest = jax.lax.reduce(g[:, 1:], jnp.uint32(0),
+                              jax.numpy.bitwise_or, dimensions=(1,))
+        out = first & ~rest
     else:
         ident = jnp.uint32(0xFFFFFFFF if op == "and" else 0)
         g = jnp.where(valid[..., None], g, ident)
@@ -226,6 +242,79 @@ def segment_reduce(slab: jax.Array, starts: jax.Array, op: str, *,
         out = jax.lax.reduce(g, ident, comb, dimensions=(1,))
     out = jnp.where((seg_len > 0)[:, None], out, jnp.uint32(0))
     return out, popcount_words(out)
+
+
+# ---------------------------------------------------------------------------
+# bit-sliced occurrence counters (the exchange payload of the sharded
+# threshold path: each shard counts locally, counters are all-gathered and
+# added bit-sliced, then one comparator pass emits the result words)
+# ---------------------------------------------------------------------------
+
+def segment_counters(slab: jax.Array, starts: jax.Array, *, jmax: int,
+                     planes: int,
+                     weights: jax.Array | None = None) -> jax.Array:
+    """Per-segment bit-sliced occurrence counters.
+
+    Counts, for every one of the 2^16 bit positions, the (weighted) number
+    of rows of the segment that set it, and returns the counts bit-sliced:
+    ``(S, planes, WORDS)`` uint32 where plane ``p`` holds bit ``p`` of each
+    position's count.  ``planes`` must satisfy ``max count < 2^planes``.
+    """
+    slab = slab.astype(jnp.uint32)
+    starts = starts.astype(jnp.int32)
+    n = slab.shape[0]
+    row = starts[:-1, None] + jnp.arange(jmax, dtype=jnp.int32)[None, :]
+    valid = row < starts[1:, None]
+    g = jnp.where(valid[..., None], slab[jnp.minimum(row, n - 1)],
+                  jnp.uint32(0))                          # (S, jmax, WORDS)
+    if weights is None:
+        w = jnp.ones((g.shape[0], jmax), jnp.int32)
+    else:
+        w = weights.astype(jnp.int32)[jnp.minimum(row, n - 1)]
+    w = jnp.where(valid, w, 0)
+    # one expensive (S, jmax, WORDS) reduction per bit position; the plane
+    # extraction afterwards is cheap elementwise work
+    out = [jnp.zeros((g.shape[0], WORDS), jnp.uint32) for _ in range(planes)]
+    for b in range(32):
+        cnt = (((g >> jnp.uint32(b)) & jnp.uint32(1)).astype(jnp.int32)
+               * w[..., None]).sum(axis=1)
+        for p in range(planes):
+            bit = ((cnt >> p) & 1).astype(jnp.uint32)
+            out[p] = out[p] | (bit << jnp.uint32(b))
+    return jnp.stack(out, axis=1)
+
+
+def bitsliced_add(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Ripple-carry add of two bit-sliced counter sets (..., planes, WORDS).
+
+    The result keeps the same number of planes; callers must size ``planes``
+    so the true sum never overflows (the sharded planner bounds it by the
+    total weight across ALL shards)."""
+    planes = a.shape[-2]
+    carry = jnp.zeros_like(a[..., 0, :])
+    out = []
+    for i in range(planes):
+        ai, bi = a[..., i, :], b[..., i, :]
+        out.append(ai ^ bi ^ carry)
+        carry = (ai & bi) | (carry & (ai ^ bi))
+    return jnp.stack(out, axis=-2)
+
+
+def counters_ge(planes_arr: jax.Array, t: jax.Array) -> jax.Array:
+    """Bitwise magnitude comparator: positions whose bit-sliced count is
+    >= t.  planes_arr: (..., planes, WORDS) uint32; t: runtime int32 scalar.
+    Returns (..., WORDS) uint32 result words."""
+    full = jnp.uint32(0xFFFFFFFF)
+    n_planes = planes_arr.shape[-2]
+    t = jnp.asarray(t, jnp.int32)
+    gt = jnp.zeros_like(planes_arr[..., 0, :])
+    eq = jnp.full_like(gt, full)
+    for i in reversed(range(n_planes)):
+        ci = planes_arr[..., i, :]
+        tmask = jnp.where((t >> i) & 1 == 1, full, jnp.uint32(0))
+        gt = gt | (eq & ci & ~tmask)
+        eq = eq & ~(ci ^ tmask)
+    return gt | eq
 
 
 # ---------------------------------------------------------------------------

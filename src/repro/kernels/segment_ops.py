@@ -27,7 +27,16 @@ ripple-carry counter (one uint32 plane per counter bit, ``L = ceil(log2(
 jmax + 1))`` planes in VMEM scratch) counts how many inputs set each of the
 2^16 bits, and finalization runs a bitwise magnitude comparator against
 ``T`` -- a runtime scalar (scalar prefetch), so threshold sweeps over the
-same inputs reuse one compiled kernel.
+same inputs reuse one compiled kernel.  Per-row integer weights (scalar
+prefetch, static bit width) generalize the counter to WEIGHTED threshold
+queries via shift-and-add: weight bit ``b`` feeds the row's plane into the
+counter at plane ``b``.
+
+``andnot`` runs difference chains ``a - (b1 | b2 | ...)`` as one plan: the
+minuend (each segment's first row) parks in the output block while the
+subtrahends OR into a VMEM accumulator; the ANDNOT and the popcount fuse
+into finalization ("Compressed bitmap indexes: beyond unions and
+intersections", Kaser & Lemire).
 """
 
 from __future__ import annotations
@@ -45,7 +54,7 @@ from repro.kernels.ref import WORDS
 
 _FULL = np.uint32(0xFFFFFFFF)
 
-OPS = ("or", "and", "xor", "threshold")
+OPS = ("or", "and", "xor", "andnot", "threshold")
 
 
 def counter_planes(jmax: int) -> int:
@@ -74,7 +83,7 @@ def _finalize(words, card_ref, out_ref, seg_len):
     card_ref[...] = harley_seal_reduce(r.reshape(1, WORDS // 16, 16))[:, None]
 
 
-def _reduce_kernel(starts_ref, t_ref, slab_ref, out_ref, card_ref, *,
+def _reduce_kernel(starts_ref, t_ref, w_ref, slab_ref, out_ref, card_ref, *,
                    op, jmax):
     s = pl.program_id(0)
     j = pl.program_id(1)
@@ -94,8 +103,35 @@ def _reduce_kernel(starts_ref, t_ref, slab_ref, out_ref, card_ref, *,
         _finalize(out_ref[...], card_ref, out_ref, seg_len)
 
 
-def _threshold_kernel(starts_ref, t_ref, slab_ref, out_ref, card_ref,
-                      cnt_ref, *, jmax, planes):
+def _andnot_kernel(starts_ref, t_ref, w_ref, slab_ref, out_ref, card_ref,
+                   rest_ref, *, jmax):
+    """Fused difference chain: row0 & ~(row1 | row2 | ...).
+
+    The minuend (row 0) parks in ``out_ref`` while the subtrahends OR into
+    the ``rest_ref`` VMEM accumulator; finalization masks and popcounts in
+    the same pass (the planner's "OR-reduce the subtrahends, then ANDNOT
+    finalize" contract)."""
+    s = pl.program_id(0)
+    j = pl.program_id(1)
+    seg_len = starts_ref[s + 1] - starts_ref[s]
+    x = jnp.where(j < seg_len, slab_ref[...], jnp.uint32(0))
+
+    @pl.when(j == 0)
+    def _():
+        out_ref[...] = x
+        rest_ref[...] = jnp.zeros_like(rest_ref)
+
+    @pl.when(j > 0)
+    def _():
+        rest_ref[...] = rest_ref[...] | x
+
+    @pl.when(j == jmax - 1)
+    def _():
+        _finalize(out_ref[...] & ~rest_ref[...], card_ref, out_ref, seg_len)
+
+
+def _threshold_kernel(starts_ref, t_ref, w_ref, slab_ref, out_ref, card_ref,
+                      cnt_ref, *, jmax, planes, wbits, n_rows):
     s = pl.program_id(0)
     j = pl.program_id(1)
     seg_len = starts_ref[s + 1] - starts_ref[s]
@@ -104,12 +140,17 @@ def _threshold_kernel(starts_ref, t_ref, slab_ref, out_ref, card_ref,
     def _():
         cnt_ref[...] = jnp.zeros_like(cnt_ref)
 
-    # ripple-carry add of one input bit-plane into the bit-sliced counter
-    carry = jnp.where(j < seg_len, slab_ref[...], jnp.uint32(0))
-    for i in range(planes):
-        ci = cnt_ref[i]
-        cnt_ref[i] = ci ^ carry
-        carry = ci & carry
+    # shift-and-add of one weighted input bit-plane into the bit-sliced
+    # counter: weight bit b contributes the row's plane at counter plane b
+    # (wbits == 1 degenerates to the unweighted ripple-carry add)
+    x = jnp.where(j < seg_len, slab_ref[...], jnp.uint32(0))
+    w = w_ref[jnp.minimum(starts_ref[s] + j, n_rows - 1)]
+    for b in range(wbits):
+        carry = jnp.where((w >> b) & 1 == 1, x, jnp.uint32(0))
+        for i in range(b, planes):
+            ci = cnt_ref[i]
+            cnt_ref[i] = ci ^ carry
+            carry = ci & carry
 
     @pl.when(j == jmax - 1)
     def _():
@@ -129,9 +170,11 @@ def _threshold_kernel(starts_ref, t_ref, slab_ref, out_ref, card_ref,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("op", "jmax", "interpret"))
+                   static_argnames=("op", "jmax", "planes", "wbits",
+                                    "interpret"))
 def segment_reduce(slab: jax.Array, starts: jax.Array, op: str, *,
-                   jmax: int, threshold=0,
+                   jmax: int, threshold=0, weights: jax.Array | None = None,
+                   planes: int | None = None, wbits: int = 1,
                    interpret: bool | None = None
                    ) -> tuple[jax.Array, jax.Array]:
     """Segmented K-way reduction fused with cardinality.
@@ -139,10 +182,16 @@ def segment_reduce(slab: jax.Array, starts: jax.Array, op: str, *,
     slab:   (N, WORDS) uint32 bitset-promoted container rows, segment-major.
     starts: (S + 1,) int32 row offsets; segment s covers rows
             starts[s]:starts[s+1] (empty segments allowed -> card 0).
-    op:     "or" | "and" | "xor" | "threshold".
+    op:     "or" | "and" | "xor" | "andnot" | "threshold".  "andnot" treats
+            each segment's first row as the minuend: row0 & ~OR(rest).
     jmax:   static upper bound on segment length (>= max(diff(starts))).
-    threshold: T for op="threshold" (1 <= T <= jmax); a runtime scalar, so
-            sweeping T over the same inputs reuses one compilation.
+    threshold: T for op="threshold"; a runtime scalar, so sweeping T over
+            the same inputs reuses one compilation.
+    weights: (N,) int32 per-row occurrence weights for op="threshold"
+            (default: 1 per row).  ``wbits`` is the static bit width of the
+            largest weight and ``planes`` the static counter width; both
+            must satisfy max-per-segment-total-weight < 2^planes and
+            t < 2^planes.
 
     Returns (words (S, WORDS) uint32, cards (S,) int32).
     """
@@ -154,24 +203,32 @@ def segment_reduce(slab: jax.Array, starts: jax.Array, op: str, *,
     s = starts.shape[0] - 1
     starts = starts.astype(jnp.int32)
     tval = jnp.asarray(threshold, jnp.int32).reshape(1)
+    if weights is None:
+        wval = jnp.ones((n,), jnp.int32)
+    else:
+        wval = weights.astype(jnp.int32)
 
-    def row_index(si, j, st, tv):
+    def row_index(si, j, st, tv, wv):
         return (jnp.minimum(st[si] + j, n - 1), 0)
 
-    out_specs = [pl.BlockSpec((1, WORDS), lambda si, j, st, tv: (si, 0)),
-                 pl.BlockSpec((1, 1), lambda si, j, st, tv: (si, 0))]
+    out_specs = [pl.BlockSpec((1, WORDS), lambda si, j, st, tv, wv: (si, 0)),
+                 pl.BlockSpec((1, 1), lambda si, j, st, tv, wv: (si, 0))]
     out_shape = [jax.ShapeDtypeStruct((s, WORDS), jnp.uint32),
                  jax.ShapeDtypeStruct((s, 1), jnp.int32)]
     if op == "threshold":
-        planes = counter_planes(jmax)
+        if planes is None:
+            planes = counter_planes(jmax)
         kernel = functools.partial(_threshold_kernel, jmax=jmax,
-                                   planes=planes)
+                                   planes=planes, wbits=wbits, n_rows=n)
         scratch = [pltpu.VMEM((planes, 1, WORDS), jnp.uint32)]
+    elif op == "andnot":
+        kernel = functools.partial(_andnot_kernel, jmax=jmax)
+        scratch = [pltpu.VMEM((1, WORDS), jnp.uint32)]
     else:
         kernel = functools.partial(_reduce_kernel, op=op, jmax=jmax)
         scratch = []
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(s, jmax),
         in_specs=[pl.BlockSpec((1, WORDS), row_index)],
         out_specs=out_specs,
@@ -182,5 +239,5 @@ def segment_reduce(slab: jax.Array, starts: jax.Array, op: str, *,
         grid_spec=grid_spec,
         out_shape=out_shape,
         interpret=interpret,
-    )(starts, tval, slab.astype(jnp.uint32))
+    )(starts, tval, wval, slab.astype(jnp.uint32))
     return words, card[:, 0]

@@ -21,7 +21,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 import repro.configs as C

@@ -21,7 +21,6 @@ condition's comparison constant.
 
 from __future__ import annotations
 
-import json
 import re
 from dataclasses import dataclass, field
 

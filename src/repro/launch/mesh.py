@@ -24,6 +24,21 @@ def make_local_mesh(model_parallel: int = 1):
     return jax.make_mesh((n // mp, mp), ("data", "model"))
 
 
+def make_wide_mesh(n: int | None = None):
+    """1-D mesh over the ``wide`` axis for sharded wide aggregation
+    (core.aggregate): each slab segment's rows split across this axis and
+    partial bitset words / bit-sliced counters all-reduce over it.
+
+    ``n`` defaults to every local device; a 1-device mesh makes the
+    aggregates fall back to the single-dispatch path, so this is always
+    safe to install via ``aggregate.set_default_mesh``."""
+    from jax.experimental import mesh_utils
+    devs = jax.devices()
+    n = len(devs) if n is None else min(n, len(devs))
+    return jax.sharding.Mesh(
+        mesh_utils.create_device_mesh((n,), devices=devs[:n]), ("wide",))
+
+
 # Hardware constants for the roofline analysis (TPU v5e-class chip).
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s per chip
 HBM_BW = 819e9                  # bytes/s per chip

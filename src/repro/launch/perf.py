@@ -13,8 +13,6 @@ import ast
 import dataclasses
 import json
 
-import jax
-
 import repro.configs as C
 from repro.launch.dryrun import lower_cell
 from repro.launch.mesh import make_production_mesh

@@ -11,7 +11,6 @@ also runs standalone on CPU with reduced configs.  The dry-run
 from __future__ import annotations
 
 import argparse
-import os
 
 
 def main():

@@ -14,9 +14,6 @@ Three entry points (shapes per the assignment):
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -8,7 +8,6 @@ inherit their PartitionSpecs (ZeRO-style sharded optimizer state).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

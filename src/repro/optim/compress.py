@@ -16,8 +16,6 @@ the long run (Stich et al.); the residual lives in optimizer state.
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 import numpy as np

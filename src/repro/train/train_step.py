@@ -8,8 +8,6 @@ Signature kept flat so in_shardings/out_shardings line up 1:1:
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 

@@ -206,6 +206,96 @@ def test_tensor_reduce_or_matches_host(rng):
     assert rt.reduce_or().to_bitmaps()[0] == RoaringBitmap.or_many(bms)
 
 
+@pytest.mark.parametrize("dist", DISTS, ids=lambda d: d.__name__)
+@pytest.mark.parametrize("k", [1, 3, 6])
+def test_andnot_many_vs_set_oracle(rng, dist, k):
+    """a - (b1 | ... | bk) against the Python-set oracle and the pairwise
+    two-by-two chain, across every adversarial distribution."""
+    vals = dist(rng, k + 1)
+    a, subs = bm(vals[0]), [bm(v) for v in vals[1:]]
+    want = sorted(set(vals[0].tolist()) -
+                  set().union(*(set(v.tolist()) for v in vals[1:])))
+    got = RoaringBitmap.andnot_many(a, subs)
+    assert got.to_array().tolist() == want, (dist.__name__, k)
+    _check_invariants(got)
+    assert got == reduce(operator.sub, [a] + subs)
+
+
+def test_andnot_many_edges(rng):
+    a = bm(rng.integers(0, 1 << 19, 20000, dtype=np.uint32))
+    assert RoaringBitmap.andnot_many(a, []) == a
+    assert RoaringBitmap.andnot_many(a, [a]).cardinality == 0
+    assert RoaringBitmap.andnot_many(RoaringBitmap(), [a]).cardinality == 0
+    # a full subtrahend chunk wipes the minuend's chunk entirely
+    full = RoaringBitmap.from_range(0, 1 << 16)
+    r = RoaringBitmap.andnot_many(bm([5, 70000]), [full])
+    assert r.to_array().tolist() == [70000]
+    # empty subtrahends are no-ops
+    assert RoaringBitmap.andnot_many(a, [RoaringBitmap()] * 3) == a
+
+
+@pytest.mark.parametrize("dist", DISTS, ids=lambda d: d.__name__)
+@pytest.mark.parametrize("k,t", [(3, 4), (5, 7), (4, 2)])
+def test_threshold_weighted_vs_counter_oracle(rng, dist, k, t):
+    """Weighted T-occurrence against a weighted Counter oracle."""
+    vals = dist(rng, k)
+    bms = [bm(v) for v in vals]
+    w = [int(x) for x in rng.integers(1, 6, k)]
+    cnt = Counter()
+    for v, wi in zip(vals, w):
+        for x in set(v.tolist()):
+            cnt[x] += wi
+    want = sorted(x for x, c in cnt.items() if c >= t)
+    got = RoaringBitmap.threshold_many(bms, t, weights=w)
+    assert got.to_array().tolist() == want, (dist.__name__, k, t, w)
+    _check_invariants(got)
+
+
+def test_threshold_weight_one_degenerates(rng):
+    """weights=[1]*k must agree with the unweighted plan exactly."""
+    for dist in DISTS:
+        vals = dist(rng, 4)
+        bms = [bm(v) for v in vals]
+        for t in (1, 2, 4):
+            assert RoaringBitmap.threshold_many(bms, t, weights=[1] * 4) \
+                == RoaringBitmap.threshold_many(bms, t), (dist.__name__, t)
+
+
+def test_threshold_weighted_edges(rng):
+    bms = [bm(rng.integers(0, 1 << 18, 5000, dtype=np.uint32))
+           for _ in range(3)]
+    w = [5, 3, 2]
+    # t above the total weight is empty without touching containers
+    assert RoaringBitmap.threshold_many(bms, 11, weights=w).cardinality == 0
+    # t == total weight is the intersection
+    assert RoaringBitmap.threshold_many(bms, 10, weights=w) == \
+        RoaringBitmap.and_many(bms)
+    # t == 1 is the union
+    assert RoaringBitmap.threshold_many(bms, 1, weights=w) == \
+        RoaringBitmap.or_many(bms)
+    # a single heavy bitmap can satisfy t alone
+    got = RoaringBitmap.threshold_many(bms, 5, weights=w)
+    for x in bms[0].to_array()[:100].tolist():
+        assert x in got
+    with pytest.raises(ValueError):
+        RoaringBitmap.threshold_many(bms, 2, weights=[1, 2])   # wrong len
+    with pytest.raises(ValueError):
+        RoaringBitmap.threshold_many(bms, 2, weights=[1, 0, 2])  # w < 1
+
+
+def test_index_query_andnot_chain(rng):
+    from repro.data.index import InvertedIndex
+    docs = [[f"t{t}" for t in rng.choice(10, rng.integers(1, 5),
+                                         replace=False)]
+            for _ in range(200)]
+    idx = InvertedIndex().build(docs)
+    got = idx.query_andnot("t0", "t1", "t2")
+    for d in range(len(docs)):
+        want = "t0" in docs[d] and "t1" not in docs[d] and \
+            "t2" not in docs[d]
+        assert (d in got) == want, d
+
+
 def test_index_query_threshold(rng):
     from repro.data.index import InvertedIndex
     docs = [[f"t{t}" for t in rng.choice(20, rng.integers(1, 8),

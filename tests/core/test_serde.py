@@ -1,0 +1,100 @@
+"""Serialization round-trip and corruption handling.
+
+Property-style seeded sweeps (hypothesis is not installed in this image;
+the strategy mix is hand-rolled) over bitmaps whose containers cover every
+kind combination -- run/array/bitset mixes, the 4096/4097 boundary, full
+chunks -- plus truncation at every structural boundary, which must raise a
+clear ValueError rather than a bare struct/buffer error.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import RoaringBitmap, deserialize, serialize
+from repro.core.serde import MAGIC
+
+
+def bm(values):
+    return RoaringBitmap.from_values(np.asarray(list(values), np.uint32))
+
+
+def _mixed_bitmap(rng, n_chunks=4):
+    """A bitmap mixing array, bitset, and run containers across chunks."""
+    parts = []
+    for i in range(n_chunks):
+        base = np.uint32(int(rng.integers(0, 64)) << 16)
+        style = rng.integers(0, 4)
+        if style == 0:                               # sparse array
+            vals = rng.integers(0, 1 << 16, int(rng.integers(1, 400)),
+                                dtype=np.uint32)
+        elif style == 1:                             # dense bitset
+            vals = rng.choice(1 << 16, int(rng.integers(4097, 20000)),
+                              replace=False).astype(np.uint32)
+        elif style == 2:                             # runs
+            lo = int(rng.integers(0, 1 << 15))
+            vals = np.arange(lo, lo + int(rng.integers(100, 30000)),
+                             dtype=np.uint32)
+        else:                                        # 4096/4097 boundary
+            vals = rng.choice(1 << 16, 4096 + int(rng.integers(0, 2)),
+                              replace=False).astype(np.uint32)
+        parts.append(base + vals)
+    return bm(np.concatenate(parts)).run_optimize()
+
+
+@pytest.mark.parametrize("trial", range(12))
+def test_roundtrip_mixed_kinds(rng, trial):
+    x = _mixed_bitmap(rng, n_chunks=int(rng.integers(1, 6)))
+    assert deserialize(serialize(x)) == x
+
+
+def test_roundtrip_edges(rng):
+    assert deserialize(serialize(RoaringBitmap())) == RoaringBitmap()
+    one = bm([0])
+    assert deserialize(serialize(one)) == one
+    full = RoaringBitmap.from_range(0, 1 << 16).run_optimize()
+    assert deserialize(serialize(full)) == full
+    top = bm([0xFFFFFFFF])
+    assert deserialize(serialize(top)) == top
+
+
+def test_roundtrip_preserves_kinds(rng):
+    x = _mixed_bitmap(rng)
+    y = deserialize(serialize(x))
+    assert [c.kind for c in y.containers] == [c.kind for c in x.containers]
+    assert y.keys == x.keys
+
+
+@pytest.mark.parametrize("trial", range(6))
+def test_truncation_every_boundary_raises_value_error(rng, trial):
+    """Truncating a valid payload anywhere must raise ValueError with a
+    useful message -- not struct.error, not a silent short read."""
+    x = _mixed_bitmap(rng)
+    payload = serialize(x)
+    cuts = sorted({1, 3, 4, 6, 8, len(payload) // 2, len(payload) - 1})
+    for cut in cuts:
+        with pytest.raises(ValueError):
+            deserialize(payload[:cut])
+
+
+def test_truncation_message_is_clear(rng):
+    payload = serialize(_mixed_bitmap(rng))
+    with pytest.raises(ValueError, match="truncated roaring payload"):
+        deserialize(payload[:len(payload) - 1])
+    with pytest.raises(ValueError, match="header"):
+        deserialize(MAGIC)                    # magic only, no count
+
+
+def test_bad_magic_and_bad_kind():
+    with pytest.raises(ValueError, match="magic"):
+        deserialize(b"XXXX" + b"\x00" * 8)
+    x = bm([1, 2, 3])
+    payload = bytearray(serialize(x))
+    # kinds live right after the 2-byte key directory
+    payload[8 + 2] = 9
+    with pytest.raises(ValueError, match="kind"):
+        deserialize(bytes(payload))
+
+
+def test_empty_buffer():
+    with pytest.raises(ValueError):
+        deserialize(b"")

@@ -1,0 +1,141 @@
+"""Sharded multi-device wide aggregation.
+
+The tier-1 process sees exactly one CPU device (tests/conftest.py pins
+that), so the real multi-device runs happen in subprocesses launched with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``: each one builds an
+N-way ``jax.sharding`` mesh via ``jax.experimental.mesh_utils`` and
+asserts the sharded plans are bit-identical to the single-device plans.
+In-process tests cover the 1-device fallback and the host-side shard
+planner directly.
+"""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import RoaringBitmap
+from repro.core import aggregate
+
+SRC = str(Path(__file__).resolve().parents[2] / "src")
+
+_SUBPROCESS_BODY = """
+import os, sys
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count={d} "
+    + os.environ.get("XLA_FLAGS", ""))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import jax
+from jax.experimental import mesh_utils
+from jax.sharding import Mesh
+
+from repro.core import RoaringBitmap
+from repro.core import aggregate
+from repro.core.tensor import RoaringTensor
+
+assert jax.device_count() == {d}, jax.device_count()
+mesh = Mesh(mesh_utils.create_device_mesh(({d},)), ("wide",))
+
+rng = np.random.default_rng(0xC0FFEE)
+def bm(v):
+    return RoaringBitmap.from_values(np.asarray(v, np.uint32))
+
+k = 7
+bms = []
+for i in range(k):
+    parts = [rng.integers(0, 1 << 18, 3000, dtype=np.uint32)]
+    lo = int(rng.integers(0, 1 << 17))
+    parts.append(np.arange(lo, lo + 50000, dtype=np.uint32))
+    bms.append(bm(np.unique(np.concatenate(parts))))
+
+checks = [
+    ("or", aggregate.or_many(bms), aggregate.or_many(bms, mesh=mesh)),
+    ("xor", aggregate.xor_many(bms), aggregate.xor_many(bms, mesh=mesh)),
+    ("threshold", aggregate.threshold_many(bms, 3),
+     aggregate.threshold_many(bms, 3, mesh=mesh)),
+    ("threshold_w",
+     aggregate.threshold_many(bms, 9, weights=[1, 2, 3, 1, 2, 3, 4]),
+     aggregate.threshold_many(bms, 9, weights=[1, 2, 3, 1, 2, 3, 4],
+                              mesh=mesh)),
+    ("andnot", aggregate.andnot_many(bms[0], bms[1:]),
+     aggregate.andnot_many(bms[0], bms[1:], mesh=mesh)),
+]
+for name, single, sharded in checks:
+    assert single == sharded, name
+    assert single.cardinality > 0, name
+
+rt = RoaringTensor.from_bitmaps(bms)
+assert rt.reduce_or(mesh=mesh).to_bitmaps()[0] == \\
+    rt.reduce_or().to_bitmaps()[0]
+
+aggregate.set_default_mesh(mesh)
+try:
+    assert RoaringBitmap.or_many(bms) == checks[0][1]
+finally:
+    aggregate.set_default_mesh(None)
+print("SHARDED_OK")
+"""
+
+
+def _run_subprocess(devices: int) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", _SUBPROCESS_BODY.format(d=devices)],
+        capture_output=True, text=True, timeout=600, env=env)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    return proc.stdout
+
+
+@pytest.mark.parametrize("devices", [2, 4])
+def test_sharded_matches_single_device(devices):
+    """or/xor/threshold/weighted-threshold/andnot are bit-identical on a
+    forced multi-device CPU mesh (the acceptance contract)."""
+    assert "SHARDED_OK" in _run_subprocess(devices)
+
+
+def test_one_device_mesh_falls_back(rng):
+    """A 1-device mesh must transparently use the single-dispatch path."""
+    import jax
+    from jax.experimental import mesh_utils
+    from jax.sharding import Mesh
+    mesh = Mesh(mesh_utils.create_device_mesh(
+        (1,), devices=jax.devices()[:1]), ("wide",))
+    bms = [RoaringBitmap.from_values(
+        rng.integers(0, 1 << 19, 20000, dtype=np.uint32)) for _ in range(4)]
+    assert aggregate.or_many(bms, mesh=mesh) == aggregate.or_many(bms)
+    assert aggregate.threshold_many(bms, 2, mesh=mesh) == \
+        aggregate.threshold_many(bms, 2)
+
+
+def test_shard_plan_partition():
+    """Every row lands on exactly one shard (minuend excepted: replicated
+    for andnot), segment structure is identical across shards, and weights
+    follow their rows."""
+    sizes = [5, 1, 0, 7]
+    wts = [[2, 3, 4, 5, 6], [7], [], [1, 2, 3, 4, 5, 6, 7]]
+    ids, w, starts = aggregate._shard_plan(sizes, 3, "threshold", wts)
+    seen = []
+    base = {0: 0, 1: 5, 2: 6, 3: 6}
+    for dev in range(3):
+        assert len(starts[dev]) == len(sizes) + 1
+        for si in range(len(sizes)):
+            rows = ids[dev][starts[dev][si]:starts[dev][si + 1]]
+            assert all(base[si] <= r < base[si] + sizes[si] for r in rows)
+            for r, wr in zip(rows, w[dev][starts[dev][si]:
+                                          starts[dev][si + 1]]):
+                assert wr == wts[si][r - base[si]]
+        seen.extend(ids[dev])
+    assert sorted(seen) == list(range(13))        # exact partition
+
+    ids, w, starts = aggregate._shard_plan([4], 3, "andnot", None)
+    all_rows = [ids[d] for d in range(3)]
+    assert all(rows[0] == 0 for rows in all_rows)  # minuend replicated
+    subs = sorted(r for rows in all_rows for r in rows[1:])
+    assert subs == [1, 2, 3]                       # subtrahends partitioned

@@ -1,7 +1,6 @@
 """Data pipeline: roaring filters, resume-without-replay, generators."""
 
 import numpy as np
-import pytest
 
 from repro.core import RoaringBitmap
 from repro.data.pipeline import (RoaringDataPipeline, dedup_filter,

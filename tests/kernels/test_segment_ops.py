@@ -11,7 +11,7 @@ from repro.kernels.segment_ops import counter_planes, segment_reduce
 WORDS = ref.WORDS
 
 
-def _np_reduce(slab, starts, op, t=0):
+def _np_reduce(slab, starts, op, t=0, w=None):
     s = starts.size - 1
     out = np.zeros((s, WORDS), np.uint32)
     for i in range(s):
@@ -19,9 +19,15 @@ def _np_reduce(slab, starts, op, t=0):
         if rows.shape[0] == 0:
             continue
         if op == "threshold":
+            ws = np.ones(rows.shape[0], np.int64) if w is None else \
+                w[starts[i]:starts[i + 1]].astype(np.int64)
             for b in range(32):
-                cnt = ((rows >> np.uint32(b)) & 1).sum(axis=0)
+                cnt = (((rows >> np.uint32(b)) & 1) * ws[:, None]).sum(axis=0)
                 out[i] |= np.uint32(1 << b) * (cnt >= t)
+        elif op == "andnot":
+            rest = np.bitwise_or.reduce(rows[1:], axis=0) \
+                if rows.shape[0] > 1 else np.zeros(WORDS, np.uint32)
+            out[i] = rows[0] & ~rest
         else:
             f = {"or": np.bitwise_or, "and": np.bitwise_and,
                  "xor": np.bitwise_xor}[op]
@@ -109,3 +115,111 @@ def test_counter_planes():
     assert counter_planes(3) == 2
     assert counter_planes(4) == 3
     assert counter_planes(64) == 7
+
+
+@pytest.mark.parametrize("n,s", [(7, 3), (9, 1), (16, 5)])
+def test_segment_andnot_vs_oracle(rng, n, s):
+    """Fused difference chain: row0 & ~(OR of the rest), including
+    single-row segments (nothing subtracted) and empty segments."""
+    slab = rng.integers(0, 1 << 32, (n, WORDS), dtype=np.uint32)
+    starts = _segments(rng, n, s)
+    jmax = max(1, int(np.diff(starts).max()))
+    want = _np_reduce(slab, starts, "andnot")
+    kw, kc = segment_reduce(jnp.asarray(slab), jnp.asarray(starts),
+                            "andnot", jmax=jmax, interpret=True)
+    ow, oc = ref.segment_reduce(jnp.asarray(slab), jnp.asarray(starts),
+                                "andnot", jmax=jmax)
+    want_c = np.bitwise_count(want).sum(axis=1)
+    assert np.array_equal(np.asarray(kw), want)
+    assert np.array_equal(np.asarray(kc), want_c)
+    assert np.array_equal(np.asarray(ow), want)
+    assert np.array_equal(np.asarray(oc), want_c)
+
+
+def test_segment_andnot_self_and_empty(rng):
+    """a - a == 0; a - nothing == a; empty segment -> zero."""
+    slab = rng.integers(0, 1 << 32, (4, WORDS), dtype=np.uint32)
+    slab[1] = slab[0]
+    starts = np.array([0, 2, 3, 3, 4], np.int32)
+    kw, kc = segment_reduce(jnp.asarray(slab), jnp.asarray(starts),
+                            "andnot", jmax=4, interpret=True)
+    kw, kc = np.asarray(kw), np.asarray(kc)
+    assert not kw[0].any() and kc[0] == 0          # a & ~a
+    assert np.array_equal(kw[1], slab[2])          # lone minuend
+    assert not kw[2].any() and kc[2] == 0          # empty segment
+
+
+@pytest.mark.parametrize("t", [2, 5, 11])
+def test_segment_threshold_weighted_vs_oracle(rng, t):
+    """Weighted counters via shift-and-add: per-row integer weights, with
+    exact-count collisions from duplicated rows."""
+    n, s = 14, 3
+    slab = rng.integers(0, 1 << 32, (n, WORDS), dtype=np.uint32)
+    slab[4] = slab[3]                              # stack exact counts
+    starts = np.array([0, 6, 6, 14], np.int32)
+    w = rng.integers(1, 8, n).astype(np.int32)
+    jmax = 8
+    totals = [int(w[starts[i]:starts[i + 1]].sum())
+              for i in range(starts.size - 1)]
+    planes = max(counter_planes(max(totals)), int(t).bit_length())
+    wbits = int(w.max()).bit_length()
+    want = _np_reduce(slab, starts, "threshold", t, w)
+    want_c = np.bitwise_count(want).sum(axis=1)
+    kw, kc = segment_reduce(jnp.asarray(slab), jnp.asarray(starts),
+                            "threshold", jmax=jmax, threshold=t,
+                            weights=jnp.asarray(w), planes=planes,
+                            wbits=wbits, interpret=True)
+    ow, oc = ref.segment_reduce(jnp.asarray(slab), jnp.asarray(starts),
+                                "threshold", jmax=jmax, threshold=t,
+                                weights=jnp.asarray(w))
+    assert np.array_equal(np.asarray(kw), want)
+    assert np.array_equal(np.asarray(kc), want_c)
+    assert np.array_equal(np.asarray(ow), want)
+    assert np.array_equal(np.asarray(oc), want_c)
+
+
+def test_weight_one_degenerates_to_unweighted(rng):
+    """All-ones weights must produce bit-identical output to the
+    unweighted counter circuit."""
+    n = 12
+    slab = rng.integers(0, 1 << 32, (n, WORDS), dtype=np.uint32)
+    starts = np.array([0, 5, 12], np.int32)
+    for t in (1, 3, 5):
+        kw0, kc0 = segment_reduce(jnp.asarray(slab), jnp.asarray(starts),
+                                  "threshold", jmax=8, threshold=t,
+                                  interpret=True)
+        kw1, kc1 = segment_reduce(jnp.asarray(slab), jnp.asarray(starts),
+                                  "threshold", jmax=8, threshold=t,
+                                  weights=jnp.ones(n, jnp.int32),
+                                  interpret=True)
+        assert np.array_equal(np.asarray(kw0), np.asarray(kw1))
+        assert np.array_equal(np.asarray(kc0), np.asarray(kc1))
+
+
+def test_segment_counters_exchange_roundtrip(rng):
+    """The sharded-threshold contract: counters from disjoint row splits,
+    bit-slice-added, then compared, must equal the one-shot threshold."""
+    n = 10
+    slab = rng.integers(0, 1 << 32, (n, WORDS), dtype=np.uint32)
+    starts = np.array([0, 4, 10], np.int32)
+    w = rng.integers(1, 5, n).astype(np.int32)
+    planes = counter_planes(int(max(w[0:4].sum(), w[4:10].sum()) * 2))
+    # split each segment's rows into even/odd halves (zero-padded rows
+    # keep the segment structure identical on both "shards")
+    halves = []
+    for par in (0, 1):
+        h = slab.copy()
+        hw = w.copy()
+        for i in range(starts.size - 1):
+            rows = np.arange(starts[i], starts[i + 1])
+            drop = rows[(rows - starts[i]) % 2 != par]
+            h[drop] = 0
+            hw[drop] = 1                          # weight of a zero row
+        halves.append(ref.segment_counters(
+            jnp.asarray(h), jnp.asarray(starts), jmax=8, planes=planes,
+            weights=jnp.asarray(hw)))
+    tot = ref.bitsliced_add(halves[0], halves[1])
+    for t in (1, 4, 9):
+        got = np.asarray(ref.counters_ge(tot, jnp.int32(t)))
+        want = _np_reduce(slab, starts, "threshold", t, w)
+        assert np.array_equal(got, want), t

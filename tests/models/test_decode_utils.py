@@ -2,7 +2,6 @@
 token-column scatter insert, roaring block-id extraction, stacked block
 gather."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

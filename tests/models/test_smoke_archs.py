@@ -2,8 +2,6 @@
 configs, one forward/train step on CPU, asserting shapes + no NaNs, plus a
 decode step."""
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -3,15 +3,13 @@ inside the framework (train + index + serve in one scenario)."""
 
 import dataclasses
 
-import jax
 import numpy as np
 import pytest
 
 import repro.configs as C
 from repro.core import RoaringBitmap
 from repro.data.index import InvertedIndex
-from repro.data.pipeline import RoaringDataPipeline, quality_filter
-from repro.models import transformer as T
+from repro.data.pipeline import RoaringDataPipeline
 from repro.optim.adamw import AdamWConfig
 from repro.train.trainer import Trainer
 

@@ -3,7 +3,7 @@
 import numpy as np
 import pytest
 
-from repro.train.elastic import MeshPlan, plan_mesh, rebatch_plan
+from repro.train.elastic import plan_mesh, rebatch_plan
 from repro.train.ft import HeartbeatMonitor, StragglerPolicy
 
 
