@@ -115,6 +115,12 @@ def main() -> int:
                     help="divide each ratio by the median ratio across "
                          "keys, cancelling uniform machine-speed "
                          "differences vs the baseline recorder (CI on)")
+    ap.add_argument("--report", default="",
+                    help="also write the full comparison (every note and "
+                         "failure line plus the gate parameters) to this "
+                         "JSON file, pass or fail -- CI uploads it as an "
+                         "artifact so gate failures are debuggable "
+                         "without rerunning locally")
     args = ap.parse_args()
     with open(args.baseline) as f:
         baseline = json.load(f)
@@ -124,6 +130,17 @@ def main() -> int:
             candidate += json.load(f)
     failures, notes = compare(baseline, candidate, args.max_slowdown,
                               args.min_us, args.metric, args.calibrate)
+    if args.report:
+        with open(args.report, "w") as f:
+            json.dump({"baseline": args.baseline,
+                       "candidates": args.candidate,
+                       "metric": args.metric,
+                       "max_slowdown": args.max_slowdown,
+                       "min_us": args.min_us,
+                       "calibrate": args.calibrate,
+                       "passed": not failures,
+                       "failures": failures,
+                       "notes": notes}, f, indent=1)
     for n in notes:
         print(f"ok   {n}")
     for x in failures:

@@ -76,18 +76,23 @@ from repro.kernels.segment_ops import counter_planes
 __all__ = ["or_many", "and_many", "xor_many", "andnot_many",
            "threshold_many", "set_default_mesh"]
 
-_DEFAULT_MESH = None
-
-
 def set_default_mesh(mesh) -> None:
     """Install a mesh used by every wide aggregate that is not given an
-    explicit ``mesh=``; pass None to restore the single-device path."""
-    global _DEFAULT_MESH
-    _DEFAULT_MESH = mesh
+    explicit ``mesh=``; pass None to restore the single-device path.
+
+    The mesh is stored in ``repro.dist.ctx`` (the single mesh source of
+    truth shared with the model sharding layer); this function and
+    ``ctx.set_wide_mesh`` / ``ctx.install_wide_mesh`` are interchangeable.
+    """
+    from repro.dist import ctx
+    ctx.set_wide_mesh(mesh)
 
 
 def _resolve_mesh(mesh):
-    return _DEFAULT_MESH if mesh is None else mesh
+    if mesh is not None:
+        return mesh
+    from repro.dist import ctx
+    return ctx.wide_mesh()
 
 
 def _mesh_size(mesh) -> int:

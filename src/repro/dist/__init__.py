@@ -1,0 +1,5 @@
+"""Distributed layout: mesh/axis context (ctx) + name-pattern parameter
+sharding rules (sharding).  See README.md in this directory for the
+spec-rule grammar and the mesh-context API."""
+
+from repro.dist import ctx, sharding  # noqa: F401

@@ -1,0 +1,262 @@
+"""Name-pattern parameter sharding rules.
+
+``RULES`` is an ordered list of ``(regex, dims)``.  The regex is searched
+against the dotted parameter path (see :func:`path_str`); ``dims`` gives,
+for each dim of the UNSTACKED leaf shape, a priority tuple of candidate
+mesh axes (or None for always-replicated).  Resolution walks dims left to
+right and assigns the first candidate axis that
+
+  (a) exists in the mesh,
+  (b) is not already used by an earlier dim of the same spec, and
+  (c) divides the dim size exactly;
+
+otherwise the dim stays replicated.  That single first-fit rule encodes
+every fallback in one place: a 2-head KV projection drops the model axis,
+an 8-expert MoE on a 16-way model axis falls through to tensor-parallel on
+the ff dim, and ``pure_dp=True`` removes the model axis from every
+candidate list.
+
+Params under a scanned ``pattern.<i>.`` stack carry a leading repeats dim,
+which is always replicated (the scan traverses it).  Params matching no
+rule -- or matching with an unexpected rank -- are fully replicated.
+
+Explicit ``overrides`` ({regex: PartitionSpec}) win over the rules and are
+validated strictly: a spec axis that does not divide its dim raises a
+ValueError naming the param, the dim and the mesh axis sizes.
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.ctx import MODEL_AXIS, axis_sizes_of, dp_axes_of
+
+DATA = ("data",)
+MODEL = ("model",)
+
+# (regex searched in the dotted path, per-dim candidate axes for the
+# unstacked shape).  Order matters only where patterns overlap.
+RULES: list[tuple[str, tuple]] = [
+    # attention / mlstm projections (d|di, H, hd): FSDP on dim0, TP heads
+    (r"mixer\.(wq|wk|wv)$", (DATA, MODEL, None)),
+    (r"mixer\.wo$", (MODEL, None, DATA)),
+    (r"mixer\.(bq|bk|bv)$", (MODEL, None)),
+    # MLA low-rank factors
+    (r"mixer\.w_dq$", (DATA, MODEL)),
+    (r"mixer\.w_dkv$", (DATA, None)),
+    (r"mixer\.(w_uq|w_uk|w_uv)$", (DATA, MODEL, None)),
+    # SSM / xLSTM mixers
+    (r"mixer\.(in_proj|up)$", (DATA, MODEL)),
+    (r"mixer\.(out_proj|down)$", (MODEL, DATA)),
+    (r"mixer\.x_proj$", (MODEL, None)),
+    (r"mixer\.dt_proj$", (None, MODEL)),
+    (r"mixer\.conv_w$", (None, MODEL)),
+    (r"mixer\.(wi|wf)$", (DATA, MODEL)),
+    (r"mixer\.w$", (DATA, None, MODEL, None)),    # slstm (d, 4, h, dh)
+    (r"mixer\.r$", (None, MODEL, None, None)),    # slstm (4, h, dh, dh)
+    # dense FFN (also MoE shared experts via ffn.shared.*)
+    (r"ffn(\.shared)?\.(w_gate|w_up|w_in)$", (DATA, MODEL)),
+    (r"ffn(\.shared)?\.(w_down|w_out)$", (MODEL, DATA)),
+    (r"ffn\.router$", (DATA, None)),
+    # MoE expert stacks: expert-parallel over the model axis when the
+    # expert count divides it, else tensor-parallel on the ff dim (the
+    # first-fit resolver realises the fallback)
+    (r"ffn\.(wg|wu)$", (MODEL, DATA, MODEL)),     # (E, d, ff)
+    (r"ffn\.wd$", (MODEL, MODEL, DATA)),          # (E, ff, d)
+    # embeddings / head / frontend
+    (r"^embed$", (DATA, MODEL)),
+    (r"^lm_head$", (DATA, MODEL)),
+    (r"^frontend_proj$", (DATA, MODEL)),
+]
+
+_STACKED = re.compile(r"(^|\.)pattern\.\d+\.")
+
+
+# ---------------------------------------------------------------------------
+# paths
+# ---------------------------------------------------------------------------
+
+def path_str(path) -> str:
+    """Dotted string for a jax key path: dict keys, sequence indices and
+    attr names join with '.' -- 'pattern.0.mixer.wq'.  Stable across
+    save/load, so checkpoints key their manifests on it."""
+    tu = jax.tree_util
+    parts = []
+    for k in path:
+        if isinstance(k, tu.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, tu.SequenceKey):
+            parts.append(str(k.idx))
+        elif isinstance(k, tu.GetAttrKey):
+            parts.append(str(k.name))
+        elif isinstance(k, tu.FlattenedIndexKey):
+            parts.append(str(k.key))
+        else:
+            parts.append(str(k))
+    return ".".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# spec resolution
+# ---------------------------------------------------------------------------
+
+# works for jax.sharding.Mesh and any stand-in exposing
+# .axis_names/.devices (tests use a FakeMesh; no device access needed)
+_axis_sizes = axis_sizes_of
+
+
+def _resolve(dims, shape, sizes, pure_dp):
+    used, out = set(), []
+    for cands, n in zip(dims, shape):
+        pick = None
+        for ax in (cands or ()):
+            if pure_dp and ax == MODEL_AXIS:
+                continue
+            sz = sizes.get(ax)
+            if not sz or ax in used or n % sz:
+                continue
+            pick = ax
+            used.add(ax)
+            break
+        out.append(pick)
+    return out
+
+
+def _check_spec(path: str, shape, spec, sizes) -> None:
+    """Strict validation for explicit specs: every named axis must exist
+    and divide its dim; raises a ValueError naming the offender."""
+    if len(spec) > len(shape):
+        raise ValueError(
+            f"param {path!r}: spec {spec} has rank {len(spec)} but the "
+            f"param has rank {len(shape)} (shape {tuple(shape)})")
+    seen: set = set()
+    for i, entry in enumerate(spec):
+        if entry is None:
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        dup = seen.intersection(axes)
+        if dup:
+            raise ValueError(
+                f"param {path!r}: spec {spec} maps mesh axis "
+                f"{sorted(dup)[0]!r} to more than one dim")
+        seen.update(axes)
+        n = 1
+        for a in axes:
+            if a not in sizes:
+                raise ValueError(
+                    f"param {path!r}: spec axis {a!r} is not a mesh axis "
+                    f"(mesh has {tuple(sizes)!r})")
+            n *= sizes[a]
+        if n > 1 and shape[i] % n:
+            raise ValueError(
+                f"param {path!r}: dim {i} (size {shape[i]}) is not "
+                f"divisible by mesh axes {axes!r} (total size {n}); "
+                f"adjust the mesh shape or the spec")
+
+
+def spec_for_param(path: str, shape, mesh, *, pure_dp: bool = False,
+                   overrides: dict | None = None) -> P:
+    """PartitionSpec for one parameter, resolved from RULES (see module
+    docstring).  ``overrides`` maps path regexes to explicit specs, which
+    are validated strictly (non-divisible dims raise)."""
+    sizes = _axis_sizes(mesh)
+    shape = tuple(shape)
+    if overrides:
+        for pat, spec in overrides.items():
+            if re.search(pat, path):
+                _check_spec(path, shape, spec, sizes)
+                return spec
+    stacked = bool(_STACKED.search(path))
+    for pat, dims in RULES:
+        if re.search(pat, path):
+            if len(shape) != len(dims) + (1 if stacked else 0):
+                break           # rank mismatch: leave replicated
+            body = shape[1:] if stacked else shape
+            entries = _resolve(dims, body, sizes, pure_dp)
+            if stacked:
+                entries = [None] + entries
+            return P(*entries)
+    return P()                  # no rule -> fully replicated
+
+
+def replicated(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def param_shardings(tree, mesh, *, pure_dp: bool = False,
+                    overrides: dict | None = None):
+    """NamedSharding tree for a parameter (or optimizer-moment) pytree."""
+    def leaf(path, l):
+        spec = spec_for_param(path_str(path), tuple(l.shape), mesh,
+                              pure_dp=pure_dp, overrides=overrides)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(leaf, tree)
+
+
+# ---------------------------------------------------------------------------
+# batch / decode-state shardings
+# ---------------------------------------------------------------------------
+
+def data_axes(mesh, *, pure_dp: bool = False) -> tuple:
+    """Axes a batch dim shards over: all but model/wide (all but wide
+    under pure-dp) -- same derivation ``ctx.dp_axes`` applies to the
+    current mesh."""
+    return dp_axes_of(mesh, pure_dp)
+
+
+def _batch_spec(path: str, shape, axes, sizes) -> P:
+    if not shape or not axes:
+        return P()
+    n = 1
+    for a in axes:
+        n *= sizes[a]
+    if n > 1 and shape[0] % n:
+        raise ValueError(
+            f"batch dim 0 of {path!r} (size {shape[0]}) is not divisible "
+            f"by the data-parallel mesh axes {axes!r} (total size {n}); "
+            f"pick a global batch that is a multiple of {n}")
+    lead = axes[0] if len(axes) == 1 else axes
+    return P(lead, *([None] * (len(shape) - 1)))
+
+
+def batch_shardings(tree, mesh, *, pure_dp: bool = False):
+    """Shard dim 0 of every batch leaf over the data-parallel axes; a
+    non-divisible batch raises immediately with the axis sizes spelled
+    out (silently replicating a batch is never what anyone wants)."""
+    axes = data_axes(mesh, pure_dp=pure_dp)
+    sizes = _axis_sizes(mesh)
+
+    def leaf(path, l):
+        return NamedSharding(
+            mesh, _batch_spec(path_str(path), tuple(l.shape), axes, sizes))
+    return jax.tree_util.tree_map_with_path(leaf, tree)
+
+
+def decode_state_shardings(tree, mesh, *, pure_dp: bool = False):
+    """Decode caches: batch dim 0 over the data axes; attention KV-cache
+    leaves ('k'/'v') additionally put the model axis on their head dim
+    when it divides (dim 1 unstacked, dim 2 for batch-major layer stacks,
+    which have rank 5).  MLA caches ('ckv'/'kr') have no head dim -- the
+    latent is shared across heads -- so only their batch dim shards."""
+    axes = data_axes(mesh, pure_dp=pure_dp)
+    sizes = _axis_sizes(mesh)
+    msz = sizes.get(MODEL_AXIS, 0)
+
+    def leaf(path, l):
+        ps = path_str(path)
+        shape = tuple(l.shape)
+        spec = _batch_spec(ps, shape, axes, sizes)
+        name = ps.rsplit(".", 1)[-1]
+        if (not pure_dp and msz > 1 and name in ("k", "v")
+                and len(shape) in (4, 5)):
+            hd = 1 if len(shape) == 4 else 2
+            if shape[hd] % msz == 0:
+                entries = list(spec) + [None] * (len(shape) - len(spec))
+                entries[hd] = MODEL_AXIS
+                spec = P(*entries)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(leaf, tree)

@@ -1,5 +1,9 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The production meshes need 256/512 devices; on a plain host we fake them.
+# An operator-provided XLA_FLAGS wins -- main() preflights the resulting
+# device count and fails with instructions instead of a mesh traceback.
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
@@ -24,7 +28,15 @@ import jax
 import numpy as np
 
 import repro.configs as C
-from repro.dist import sharding as SH
+
+try:
+    from repro.dist import ctx as _ctx
+    from repro.dist import sharding as SH
+    _DIST_ERR = None
+except ImportError as _e:            # pragma: no cover - broken install
+    _ctx = SH = None
+    _DIST_ERR = _e
+
 from repro.launch import roofline as R
 from repro.launch.mesh import make_production_mesh
 from repro.models import transformer as T
@@ -45,7 +57,6 @@ def lower_cell(cfg, shape_name: str, mesh, *, compile_: bool = True,
     t0 = time.monotonic()
 
     pdp = getattr(cfg, "pure_dp", False)
-    from repro.dist import ctx as _ctx
     _ctx.set_pure_dp(pdp)
     param_shapes = T.param_shapes(cfg)
     p_shard = SH.param_shardings(param_shapes, mesh, pure_dp=pdp)
@@ -103,7 +114,7 @@ def lower_cell(cfg, shape_name: str, mesh, *, compile_: bool = True,
             args = (_sds(param_shapes), state_shapes, inputs["tokens"])
         model_flops = R.model_flops_decode(cfg, spec.global_batch)
 
-    with jax.set_mesh(mesh):
+    with _ctx.activate(mesh):
         lowered = jitted.lower(*args)
         result = {
             "arch": cfg.name, "shape": shape_name,
@@ -126,6 +137,8 @@ def lower_cell(cfg, shape_name: str, mesh, *, compile_: bool = True,
                                         None),
     }
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # jax<0.5: one dict per computation
+        cost = cost[0] if cost else {}
     result["cost"] = {k: float(v) for k, v in cost.items()
                       if isinstance(v, (int, float)) and
                       k in ("flops", "bytes accessed", "transcendentals",
@@ -159,6 +172,32 @@ def main():
     ap.add_argument("--variant", default="",
                     help="config variant fn, e.g. roaring_sparse_variant")
     args = ap.parse_args()
+
+    if SH is None:
+        raise SystemExit(
+            f"dryrun: the repro.dist sharding package failed to import "
+            f"({_DIST_ERR}).\nThe dry-run lowers every cell under "
+            f"production param/batch shardings and cannot run without "
+            f"it.  Run from the repo root with PYTHONPATH=src (see "
+            f"ROADMAP.md 'Tier-1 verify').")
+    need = {"single": 256, "multi": 512, "both": 512}[args.mesh]
+    have = jax.device_count()
+    if have < need:
+        platform = jax.devices()[0].platform
+        if platform == "cpu":
+            hint = (f"On a CPU host, fake them with\n"
+                    f"    XLA_FLAGS=--xla_force_host_platform_device_"
+                    f"count={need}\n(the default when XLA_FLAGS is "
+                    f"unset; your environment sets XLA_FLAGS to "
+                    f"something else).")
+        else:
+            hint = (f"This host's {platform} backend exposes {have} "
+                    f"device(s); run on a slice with >= {need} chips, "
+                    f"or dry-run on CPU (JAX_PLATFORMS=cpu fakes the "
+                    f"devices automatically).")
+        raise SystemExit(
+            f"dryrun: --mesh {args.mesh} needs {need} devices to build "
+            f"the production mesh but only {have} are available.\n{hint}")
 
     archs = C.ARCH_IDS if args.arch == "all" else \
         [C.ALIASES.get(args.arch, args.arch)]

@@ -1,0 +1,184 @@
+"""dist.sharding edge cases: replicated fallback, divisibility errors,
+override validation, and path_str round-trips through checkpointing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import sharding as SH
+
+
+class FakeMesh:
+    axis_names = ("data", "model")
+    devices = np.empty((16, 16), object)
+
+
+class WideMesh:
+    axis_names = ("wide",)
+    devices = np.empty((4,), object)
+
+
+# ---------------------------------------------------------------------------
+# rule fallbacks
+# ---------------------------------------------------------------------------
+
+def test_unmatched_param_is_replicated():
+    m = FakeMesh()
+    assert SH.spec_for_param("totally.unknown.leaf", (48, 48), m) == P()
+    assert SH.spec_for_param("final_norm.scale", (4096,), m) == P()
+
+
+def test_rank_mismatch_is_replicated():
+    # a rule matches the name but the shape has the wrong rank: the rule
+    # must not misapply axes positionally
+    m = FakeMesh()
+    assert SH.spec_for_param("prefix_0.mixer.wq", (4096, 4096), m) == P()
+
+
+def test_mesh_without_named_axes_replicates():
+    # the 1-D ("wide",) aggregation mesh has neither "data" nor "model":
+    # every candidate is absent, every param stays replicated
+    m = WideMesh()
+    assert SH.spec_for_param("prefix_0.mixer.wq", (4096, 32, 128), m) == \
+        P(None, None, None)
+
+
+def test_non_divisible_candidates_drop_per_dim():
+    m = FakeMesh()
+    # 4095 % 16 != 0: the data axis drops but the head axis still lands
+    assert SH.spec_for_param("prefix_0.mixer.wq", (4095, 32, 128), m) == \
+        P(None, "model", None)
+
+
+# ---------------------------------------------------------------------------
+# divisibility errors
+# ---------------------------------------------------------------------------
+
+def test_override_not_divisible_raises_clear_error():
+    m = FakeMesh()
+    with pytest.raises(ValueError, match=r"not divisible.*model"):
+        SH.spec_for_param("prefix_0.mixer.wq", (4096, 30, 128), m,
+                          overrides={r"mixer\.wq$": P(None, "model", None)})
+
+
+def test_override_unknown_axis_raises():
+    m = FakeMesh()
+    with pytest.raises(ValueError, match="not a mesh axis"):
+        SH.spec_for_param("embed", (32000, 4096), m,
+                          overrides={"^embed$": P("tensor", None)})
+
+
+def test_override_duplicate_axis_raises():
+    m = FakeMesh()
+    with pytest.raises(ValueError, match="more than one dim"):
+        SH.spec_for_param("prefix_0.mixer.wq", (4096, 32, 128), m,
+                          overrides={r"mixer\.wq$": P("model", "model",
+                                                      None)})
+
+
+def test_override_rank_raises():
+    m = FakeMesh()
+    with pytest.raises(ValueError, match="rank"):
+        SH.spec_for_param("embed", (32000, 4096), m,
+                          overrides={"^embed$": P(None, None, "model")})
+
+
+def test_batch_not_divisible_raises_clear_error():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    leaf = jax.ShapeDtypeStruct((3, 128), jnp.int32)
+    # sizes recomputed against the fake 16x16 spec checker via _batch_spec
+    with pytest.raises(ValueError, match=r"not divisible.*data"):
+        SH._batch_spec("tokens", (3, 128), ("data",), {"data": 16})
+    # and the tree-level API on a real mesh succeeds when divisible
+    shd = SH.batch_shardings({"tokens": leaf}, mesh)
+    assert shd["tokens"] == NamedSharding(mesh, P("data", None))
+
+
+def test_data_axes_pure_dp_takes_every_axis():
+    m = FakeMesh()
+    assert SH.data_axes(m) == ("data",)
+    assert SH.data_axes(m, pure_dp=True) == ("data", "model")
+
+
+# ---------------------------------------------------------------------------
+# tree-level shardings on a real (1-device) mesh
+# ---------------------------------------------------------------------------
+
+def test_param_shardings_tree_smoke():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    tree = {
+        "embed": jax.ShapeDtypeStruct((256, 16), jnp.float32),
+        "prefix_0": {"mixer": {
+            "wq": jax.ShapeDtypeStruct((16, 2, 8), jnp.float32)}},
+        "pattern": ({"ffn": {
+            "wg": jax.ShapeDtypeStruct((4, 2, 16, 32), jnp.float32)}},),
+    }
+    shd = SH.param_shardings(tree, mesh)
+    flat = jax.tree.leaves(shd)
+    assert all(isinstance(s, NamedSharding) for s in flat)
+    # size-1 axes still resolve through the same rules
+    assert shd["embed"].spec == P("data", "model")
+    assert shd["pattern"][0]["ffn"]["wg"].spec == \
+        P(None, "model", "data", None)
+
+
+def test_decode_state_shardings_smoke():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    state = {
+        "pos": jax.ShapeDtypeStruct((4,), jnp.int32),
+        "prefix_0": {"k": jax.ShapeDtypeStruct((4, 2, 32, 8), jnp.bfloat16),
+                     "v": jax.ShapeDtypeStruct((4, 2, 32, 8), jnp.bfloat16)},
+    }
+    shd = SH.decode_state_shardings(state, mesh)
+    assert shd["pos"].spec == P("data")
+    assert shd["prefix_0"]["k"].spec == P("data", None, None, None)
+
+
+def test_replicated_spec():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    assert SH.replicated(mesh) == NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# path_str: stability + checkpoint round-trip
+# ---------------------------------------------------------------------------
+
+def test_path_str_dotted_names():
+    tree = {"embed": 0, "pattern": ({"mixer": {"wq": 1}}, {"ffn": [2, 3]})}
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    paths = [SH.path_str(p) for p, _ in flat]
+    assert paths == ["embed", "pattern.0.mixer.wq",
+                     "pattern.1.ffn.0", "pattern.1.ffn.1"]
+
+
+def test_path_str_roundtrips_through_checkpoint(tmp_path, rng):
+    from repro.train.checkpoint import CheckpointManager
+    tree = {
+        "embed": jnp.asarray(rng.standard_normal((8, 4)), jnp.float32),
+        "final_norm": {"scale": jnp.ones((4,), jnp.float32)},
+        "pattern": (
+            {"mixer": {"wq": jnp.asarray(
+                rng.standard_normal((2, 4, 2, 2)), jnp.float32)}},
+        ),
+    }
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(7, tree)
+    # the manifest keys leaves by path_str -- the same strings the
+    # sharding rules match on
+    import json
+    import os
+    with open(os.path.join(str(tmp_path), "step_0000000007",
+                           "manifest.json")) as f:
+        manifest = json.load(f)
+    saved_paths = {m["path"] for m in manifest["leaves"].values()}
+    assert saved_paths == {"embed", "final_norm.scale",
+                           "pattern.0.mixer.wq"}
+    restored, _ = mgr.restore(7, tree)
+    for (pa, a), (pb, b) in zip(
+            jax.tree_util.tree_flatten_with_path(tree)[0],
+            jax.tree_util.tree_flatten_with_path(restored)[0]):
+        assert SH.path_str(pa) == SH.path_str(pb)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
