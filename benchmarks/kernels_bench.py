@@ -204,6 +204,149 @@ def _run_benches(rows, table, benches, dist, k, repeats) -> list[dict]:
     return records
 
 
+# ---------------------------------------------------------------------------
+# pairwise suite: the batched pair engine (core.pairwise) vs the seed
+# scalar two-by-two path, over Zipfian posting-list shapes -- the
+# similarity-join workload ("beyond unions and intersections").
+# ---------------------------------------------------------------------------
+
+def _seed_and_card(a, b):
+    """Frozen copy of the seed RoaringBitmap.and_card (scalar key-merge;
+    the live method now routes through the pairwise planner)."""
+    cnt = 0
+    i = j = 0
+    while i < len(a.keys) and j < len(b.keys):
+        ka, kb = a.keys[i], b.keys[j]
+        if ka == kb:
+            cnt += C.container_and_card(a.containers[i], b.containers[j])
+            i += 1
+            j += 1
+        elif ka < kb:
+            i += 1
+        else:
+            j += 1
+    return cnt
+
+
+def _seed_pair_merge(a, b, op):
+    """Frozen copy of the seed RoaringBitmap._merge (one container op per
+    matched key)."""
+    fn = C.OPS[op][0]
+    keys, conts = [], []
+    i = j = 0
+    na, nb = len(a.keys), len(b.keys)
+    while i < na and j < nb:
+        ka, kb = a.keys[i], b.keys[j]
+        if ka == kb:
+            c = fn(a.containers[i], b.containers[j])
+            if c.card:
+                keys.append(ka)
+                conts.append(c)
+            i += 1
+            j += 1
+        elif ka < kb:
+            if op in ("or", "xor", "andnot"):
+                keys.append(ka)
+                conts.append(a.containers[i])
+            i += 1
+        else:
+            if op in ("or", "xor"):
+                keys.append(kb)
+                conts.append(b.containers[j])
+            j += 1
+    if op in ("or", "xor", "andnot"):
+        while i < na:
+            keys.append(a.keys[i])
+            conts.append(a.containers[i])
+            i += 1
+    if op in ("or", "xor"):
+        while j < nb:
+            keys.append(b.keys[j])
+            conts.append(b.containers[j])
+            j += 1
+    return RoaringBitmap(keys, conts)
+
+
+def _zipf_postings(n_terms: int, n_docs: int = 1 << 20, seed: int = 17):
+    """Zipfian posting lists over a document universe: term r matches
+    ~300k/(r+1)^1.1 docs, half clustered around a hot range (dense bitset
+    and run containers for head terms) and half uniform (array containers
+    for the tail) -- the shape of a real inverted index."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for r in range(n_terms):
+        size = max(50, int(300_000 / (r + 1) ** 1.1))
+        n_hot = size // 2
+        center = int(rng.integers(0, n_docs - (1 << 16)))
+        hot = center + rng.integers(0, 1 << 16, n_hot)
+        cold = rng.integers(0, n_docs, size - n_hot)
+        vals = np.unique(np.concatenate([hot, cold]).astype(np.uint32))
+        out.append(RoaringBitmap.from_values(vals).run_optimize())
+    return out
+
+
+def pairwise_suite(rows, quick: bool = False) -> list[dict]:
+    """Batched pairwise engine vs looped seed two-by-two (JSON records
+    gate-compatible with BENCH_wide_ops.json).
+
+    ``k`` is the number of posting lists; the all-pairs benches cover
+    k*(k-1)/2 pairs.  The acceptance contract lives in the k=64 rows:
+    batched ``pairwise_card`` / ``jaccard_matrix`` must beat the looped
+    seed ``and_card`` by >= 3x with bit-identical results."""
+    records = []
+    ks = (16,) if quick else (16, 64)
+    repeats = 5
+    for k in ks:
+        bms = _zipf_postings(k)
+        pairs = [(bms[i], bms[j]) for i in range(k)
+                 for j in range(i + 1, k)]
+        cards = [bm.cardinality for bm in bms]
+
+        def looped_and_card(pairs=pairs):
+            return tuple(_seed_and_card(a, b) for a, b in pairs)
+
+        def batched_and_card(pairs=pairs):
+            return tuple(RoaringBitmap.pairwise_card("and", pairs)
+                         .tolist())
+
+        def looped_jaccard(bms=bms, cards=cards):
+            n = len(bms)
+            out = np.ones((n, n))
+            for i in range(n):
+                for j in range(i + 1, n):
+                    inter = _seed_and_card(bms[i], bms[j])
+                    union = cards[i] + cards[j] - inter
+                    out[i, j] = out[j, i] = \
+                        inter / union if union else 1.0
+            return tuple(out.ravel().tolist())
+
+        def batched_jaccard(bms=bms):
+            return tuple(RoaringBitmap.jaccard_matrix(bms)
+                         .ravel().tolist())
+
+        a, b = bms[k // 2], bms[k // 2 + 1]      # array-heavy tail pair
+        da, db = bms[0], bms[1]                  # densest (bitset) pair
+        benches = [
+            ("pairwise_and_card", looped_and_card, batched_and_card),
+            ("jaccard_matrix", looped_jaccard, batched_jaccard),
+            ("pair_merge_or", functools.partial(_seed_pair_merge,
+                                                a, b, "or"),
+             functools.partial(operator.or_, a, b)),
+            ("pair_merge_and", functools.partial(_seed_pair_merge,
+                                                 a, b, "and"),
+             functools.partial(operator.and_, a, b)),
+            ("pair_merge_xor", functools.partial(_seed_pair_merge,
+                                                 a, b, "xor"),
+             functools.partial(operator.xor, a, b)),
+            ("pair_merge_and_dense", functools.partial(_seed_pair_merge,
+                                                       da, db, "and"),
+             functools.partial(operator.and_, da, db)),
+        ]
+        records += _run_benches(rows, "pairwise", benches, "zipf", k,
+                                repeats)
+    return records
+
+
 def wide_ops_sharded(rows, quick: bool = False) -> list[dict]:
     """Sharded K-way aggregates over a ``wide`` mesh of every visible
     device, checked bit-identical against the single-device plans.

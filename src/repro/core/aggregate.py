@@ -49,11 +49,13 @@ round-robined across the mesh axis and every shard runs the same
   * threshold exchanges the bit-sliced occurrence counters themselves
     (``kernels.ref.segment_counters``): local counters are all-gathered,
     ripple-carry added in the bit-sliced domain, and one comparator pass
-    emits the result words.
+    emits the result words;
+  * AND exchanges a per-shard occupancy mask with the partials: shards
+    holding no rows of a segment contribute the all-ones identity (the
+    kernel's empty-segment convention is all-zeros, which would be wrong
+    to fold), and a segment occupied by no shard resolves to empty.
 
 A one-device mesh falls back transparently to the single-dispatch path.
-AND always uses the single-device path (its host fast paths dominate and
-its step identity is not shard-safe for empty shards).
 """
 
 from __future__ import annotations
@@ -148,17 +150,11 @@ def _is_full(c: Container) -> bool:
 
 
 def _prefer_kernel(backend: str | None) -> bool:
-    """Whether dense array-only groups should ride the slab kernel.
-
-    On TPU (or when a backend is forced, e.g. in tests) the fused segmented
-    kernel wins; on CPU the host indicator path avoids a device round-trip
-    that the jnp reference backend cannot amortize.  Run-only groups always
-    use the interval sweep: it is strictly cheaper than bit-level promotion
-    on every backend."""
-    if backend in ("pallas", "ref"):
-        return True
-    import jax
-    return jax.default_backend() == "tpu"
+    """Whether dense array-only groups should ride the slab kernel
+    (kernels.ops.prefer_kernel: TPU or a forced backend).  Run-only
+    groups always use the interval sweep: it is strictly cheaper than
+    bit-level promotion on every backend."""
+    return kops.prefer_kernel(backend)
 
 
 # ---------------------------------------------------------------------------
@@ -358,9 +354,32 @@ def _dispatch(seg_keys: list[int], seg_rows: list[list[np.ndarray]],
     """Stack per-segment rows into one slab, reduce in one kernel call,
     repack each segment's (words, card) into the optimal container kind.
     With a multi-device mesh, rows shard across the mesh axis instead
-    (see ``_shard_reduce``); AND stays single-device."""
+    (see ``_shard_reduce``)."""
     if not seg_keys:
         return {}
+    # peel single-row segments: reducing one row is the identity (a lone
+    # minuend for "andnot"; for "threshold" the row survives iff its own
+    # weight reaches t), so a host popcount beats the pad/stack/transfer
+    # of a kernel dispatch.  This is the small-K hot path: collapsed
+    # array groups contribute exactly one indicator row per key.
+    peeled: dict[int, Container] = {}
+    keep = [i for i, rows in enumerate(seg_rows) if len(rows) > 1]
+    if len(keep) != len(seg_keys):
+        for i, (key, rows) in enumerate(zip(seg_keys, seg_rows)):
+            if len(rows) != 1:
+                continue
+            if op == "threshold" and \
+                    (seg_weights[i][0] if seg_weights else 1) < threshold:
+                continue
+            card = int(np.bitwise_count(rows[0]).sum())
+            if card:
+                peeled[key] = optimize(C._result_from_bitset(rows[0], card))
+        seg_keys = [seg_keys[i] for i in keep]
+        seg_rows = [seg_rows[i] for i in keep]
+        if seg_weights is not None:
+            seg_weights = [seg_weights[i] for i in keep]
+        if not seg_keys:
+            return peeled
     mesh = _resolve_mesh(mesh)
     lens = [len(r) for r in seg_rows]
     slab64 = np.stack([w for rows in seg_rows for w in rows])
@@ -371,11 +390,12 @@ def _dispatch(seg_keys: list[int], seg_rows: list[list[np.ndarray]],
     if op == "threshold" and seg_weights is not None:
         planes = _planes_for([sum(w) for w in seg_weights], threshold)
         wbits = max(int(w).bit_length() for ws in seg_weights for w in ws)
-    if mesh is not None and _mesh_size(mesh) > 1 and op != "and":
+    if mesh is not None and _mesh_size(mesh) > 1:
         words, cards = _shard_reduce(
             jnp.asarray(slab32), lens, seg_weights, op, threshold,
             backend, mesh, planes=planes)
-        return _repack_segments(seg_keys, words, cards)
+        peeled.update(_repack_segments(seg_keys, words, cards))
+        return peeled
     starts = np.zeros(len(lens) + 1, np.int32)
     starts[1:] = np.cumsum(lens)
     weights = None
@@ -402,7 +422,8 @@ def _dispatch(seg_keys: list[int], seg_rows: list[list[np.ndarray]],
         threshold=threshold,
         weights=None if weights is None else jnp.asarray(weights),
         planes=planes, wbits=wbits, backend=backend)
-    return _repack_segments(seg_keys, words[:s], cards[:s])
+    peeled.update(_repack_segments(seg_keys, words[:s], cards[:s]))
+    return peeled
 
 
 def _shard_plan(seg_sizes: list[int], d: int, op: str,
@@ -445,8 +466,13 @@ def _shard_reduce(slab: jax.Array, seg_sizes: list[int],
     ``sum(seg_sizes[:s]) : sum(seg_sizes[:s+1])``).  Returns
     (words (S, WORDS), cards (S,)) identical to the single-device plan:
     OR/XOR partials fold with the op, ANDNOT partials (minuend replicated)
-    fold with AND, and threshold all-gathers the bit-sliced occurrence
-    counters and adds them before one comparator pass.
+    fold with AND, threshold all-gathers the bit-sliced occurrence
+    counters and adds them before one comparator pass, and AND exchanges a
+    per-shard *occupancy mask* alongside the partials: a shard holding no
+    rows of a segment contributes the all-ones identity (masked in after
+    the kernel, whose empty-segment convention is all-zeros), and a
+    segment no shard occupies resolves to empty -- the shard-safe
+    empty-shard identity the single-device plan never needed.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec
@@ -489,6 +515,18 @@ def _shard_reduce(slab: jax.Array, seg_sizes: list[int],
             for i in range(1, d):
                 tot = kref.bitsliced_add(tot, allp[i])
             words = kref.counters_ge(tot, jnp.int32(threshold))
+        elif op == "and":
+            pw, _ = kops.segment_reduce(slab_l, starts_l, op, jmax=jmax,
+                                        backend=backend)
+            occ = (starts_l[1:] - starts_l[:-1]) > 0    # local occupancy
+            pw = jnp.where(occ[:, None], pw, jnp.uint32(0xFFFFFFFF))
+            allw = jax.lax.all_gather(pw, axis)         # (D, S, WORDS)
+            allo = jax.lax.all_gather(occ, axis)        # (D, S)
+            words, any_occ = allw[0], allo[0]
+            for i in range(1, d):
+                words = words & allw[i]
+                any_occ = any_occ | allo[i]
+            words = jnp.where(any_occ[:, None], words, jnp.uint32(0))
         else:
             pw, _ = kops.segment_reduce(slab_l, starts_l, op, jmax=jmax,
                                         backend=backend)
@@ -603,10 +641,11 @@ def and_many(bitmaps, *, backend: str | None = None, mesh=None):
     empty-key early exit, array-anchored host filtering for sparse groups,
     one kernel dispatch for the dense remainder.
 
-    ``mesh`` is accepted for interface symmetry but AND always runs the
-    single-device plan: its host fast paths dominate, and its all-ones
-    step identity is not shard-safe for shards holding no rows of a
-    segment."""
+    With a multi-device ``mesh``, dense segments shard across the mesh
+    axis like the other aggregates: each shard ANDs its local rows and
+    exchanges an occupancy mask with its partial, so shards holding no
+    rows of a segment contribute the all-ones identity instead of the
+    kernel's empty-segment zeros (see ``_shard_reduce``)."""
     bitmaps = list(bitmaps)
     if not bitmaps:
         return _bitmap_cls()()

@@ -29,12 +29,13 @@ __all__ = ["RoaringBitmap"]
 class RoaringBitmap:
     """Compressed set of uint32 values."""
 
-    __slots__ = ("keys", "containers")
+    __slots__ = ("keys", "containers", "_prefix")
 
     def __init__(self, keys: list[int] | None = None,
                  conts: list[Container] | None = None):
         self.keys: list[int] = keys if keys is not None else []
         self.containers: list[Container] = conts if conts is not None else []
+        self._prefix: np.ndarray | None = None    # cumulative cards cache
 
     # ------------------------------------------------------------------
     # construction
@@ -80,9 +81,21 @@ class RoaringBitmap:
     # basic queries
     # ------------------------------------------------------------------
 
+    def _card_prefix(self) -> np.ndarray:
+        """Cached cumulative container cardinalities (paper section 6):
+        rank/select navigate the top level with ONE binary search instead
+        of a scalar per-container scan.  Invalidated by ``add`` /
+        ``remove`` / ``run_optimize``."""
+        if self._prefix is None or \
+                self._prefix.size != len(self.containers):
+            self._prefix = np.cumsum(
+                [c.card for c in self.containers]).astype(np.int64)
+        return self._prefix
+
     @property
     def cardinality(self) -> int:
-        return sum(c.card for c in self.containers)
+        p = self._card_prefix()
+        return int(p[-1]) if p.size else 0
 
     def __len__(self) -> int:
         return self.cardinality
@@ -150,6 +163,7 @@ class RoaringBitmap:
     # ------------------------------------------------------------------
 
     def add(self, v: int) -> None:
+        self._prefix = None                      # invalidate rank cache
         hi, lo = int(v) >> 16, int(v) & 0xFFFF
         i = bisect.bisect_left(self.keys, hi)
         if i < len(self.keys) and self.keys[i] == hi:
@@ -175,6 +189,7 @@ class RoaringBitmap:
                 i, ArrayContainer(np.array([lo], dtype=np.uint16)))
 
     def remove(self, v: int) -> None:
+        self._prefix = None                      # invalidate rank cache
         hi, lo = int(v) >> 16, int(v) & 0xFFFF
         i = bisect.bisect_left(self.keys, hi)
         if i == len(self.keys) or self.keys[i] != hi:
@@ -206,41 +221,13 @@ class RoaringBitmap:
     # ------------------------------------------------------------------
 
     def _merge(self, other: "RoaringBitmap", op: str) -> "RoaringBitmap":
-        fn = C.OPS[op][0]
-        keys, conts = [], []
-        i = j = 0
-        a_keys, b_keys = self.keys, other.keys
-        na, nb = len(a_keys), len(b_keys)
-        while i < na and j < nb:
-            ka, kb = a_keys[i], b_keys[j]
-            if ka == kb:
-                c = fn(self.containers[i], other.containers[j])
-                if c.card:
-                    keys.append(ka)
-                    conts.append(c)
-                i += 1
-                j += 1
-            elif ka < kb:
-                if op in ("or", "xor", "andnot"):
-                    keys.append(ka)
-                    conts.append(self.containers[i])
-                i += 1
-            else:
-                if op in ("or", "xor"):
-                    keys.append(kb)
-                    conts.append(other.containers[j])
-                j += 1
-        if op in ("or", "xor", "andnot"):
-            while i < na:
-                keys.append(a_keys[i])
-                conts.append(self.containers[i])
-                i += 1
-        if op in ("or", "xor"):
-            while j < nb:
-                keys.append(b_keys[j])
-                conts.append(other.containers[j])
-                j += 1
-        return RoaringBitmap(keys, conts)
+        """Two-by-two set algebra through the type-grouped pair planner
+        (repro.core.pairwise): matched container pairs bucket by class
+        (bitset x bitset, array x array, array x bitset) and each class
+        executes as ONE batched dispatch; small pairs stay on the scalar
+        key-merge (paper sections 4.2-4.5)."""
+        from repro.core import pairwise
+        return pairwise.merge_one(self, other, op)
 
     def __and__(self, other):
         return self._merge(other, "and")
@@ -262,20 +249,10 @@ class RoaringBitmap:
     # ------------------------------------------------------------------
 
     def and_card(self, other: "RoaringBitmap") -> int:
-        cnt = 0
-        i = j = 0
-        while i < len(self.keys) and j < len(other.keys):
-            ka, kb = self.keys[i], other.keys[j]
-            if ka == kb:
-                cnt += C.container_and_card(
-                    self.containers[i], other.containers[j])
-                i += 1
-                j += 1
-            elif ka < kb:
-                i += 1
-            else:
-                j += 1
-        return cnt
+        """Intersection cardinality without materializing the result
+        (section 5.9), planned as a batch of one pair."""
+        from repro.core import pairwise
+        return int(pairwise.pairwise_card("and", [(self, other)])[0])
 
     def or_card(self, other) -> int:
         return self.cardinality + other.cardinality - self.and_card(other)
@@ -301,6 +278,29 @@ class RoaringBitmap:
         return self.and_card(other) > 0
 
     # ------------------------------------------------------------------
+    # batched pairwise engine (similarity joins: "Compressed bitmap
+    # indexes: beyond unions and intersections", Kaser & Lemire)
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def pairwise_card(ops, pairs, *, backend=None) -> np.ndarray:
+        """Count-only set algebra over M bitmap pairs in O(container-type
+        classes) dispatches (not O(pairs)).
+
+        ``ops`` is one of "and" | "or" | "xor" | "andnot" or a length-M
+        sequence of per-pair op names; ``pairs`` is a sequence of
+        ``(RoaringBitmap, RoaringBitmap)``.  Returns (M,) int64 counts."""
+        from repro.core import pairwise
+        return pairwise.pairwise_card(ops, pairs, backend=backend)
+
+    @staticmethod
+    def jaccard_matrix(bitmaps, *, backend=None) -> np.ndarray:
+        """(N, N) Jaccard similarity matrix: the all-pairs similarity
+        join, batched class-wise over all N*(N-1)/2 pairs."""
+        from repro.core import pairwise
+        return pairwise.jaccard_matrix(bitmaps, backend=backend)
+
+    # ------------------------------------------------------------------
     # wide aggregates (paper section 5.8: roaring_bitmap_or_many), routed
     # through the segmented-aggregation planner (repro.core.aggregate):
     # containers sharing a chunk key are stacked into one slab and reduced
@@ -316,11 +316,13 @@ class RoaringBitmap:
         return aggregate.or_many(bitmaps, mesh=mesh)
 
     @staticmethod
-    def and_many(bitmaps: list["RoaringBitmap"]) -> "RoaringBitmap":
+    def and_many(bitmaps: list["RoaringBitmap"], *,
+                 mesh=None) -> "RoaringBitmap":
         """Wide intersection with cardinality-ascending key pruning and
-        empty-key early exit."""
+        empty-key early exit (sharded over ``mesh`` when given, with a
+        per-shard occupancy mask guarding the AND identity)."""
         from repro.core import aggregate
-        return aggregate.and_many(bitmaps)
+        return aggregate.and_many(bitmaps, mesh=mesh)
 
     @staticmethod
     def xor_many(bitmaps: list["RoaringBitmap"], *,
@@ -354,6 +356,7 @@ class RoaringBitmap:
 
     def run_optimize(self) -> "RoaringBitmap":
         self.containers = [optimize(c) for c in self.containers]
+        self._prefix = None                      # invalidate rank cache
         return self
 
     def memory_bytes(self) -> int:
@@ -372,31 +375,33 @@ class RoaringBitmap:
     # ------------------------------------------------------------------
 
     def rank(self, v: int) -> int:
-        """Number of elements <= v."""
+        """Number of elements <= v: one binary search over the cached
+        cumulative-cardinality prefix (paper section 6), then a per-kind
+        in-container rank -- no per-container Python loop."""
         hi, lo = int(v) >> 16, int(v) & 0xFFFF
-        total = 0
-        for k, c in zip(self.keys, self.containers):
-            if k < hi:
-                total += c.card
-            elif k == hi:
-                vals = c.to_array_values()
-                total += int(np.searchsorted(vals, np.uint16(lo),
-                                             side="right"))
-            else:
-                break
-        return total
+        if not self.keys:
+            return 0
+        prefix = self._card_prefix()
+        i = bisect.bisect_left(self.keys, hi)
+        base = int(prefix[i - 1]) if i > 0 else 0
+        if i < len(self.keys) and self.keys[i] == hi:
+            return base + C.container_rank(self.containers[i], lo)
+        return base
 
     def select(self, i: int) -> int:
-        """i-th smallest element (0-based)."""
+        """i-th smallest element (0-based): binary search the cached
+        prefix for the owning container, then a per-kind in-container
+        select (paper section 6)."""
+        i = int(i)
         if i < 0:
             raise IndexError(i)
-        for k, c in zip(self.keys, self.containers):
-            if i < c.card:
-                vals = c.to_array_values()
-                return int((np.uint32(k) << np.uint32(16)) |
-                           np.uint32(vals[i]))
-            i -= c.card
-        raise IndexError("select out of range")
+        prefix = self._card_prefix()
+        if prefix.size == 0 or i >= int(prefix[-1]):
+            raise IndexError("select out of range")
+        j = int(np.searchsorted(prefix, i, side="right"))
+        local = i - (int(prefix[j - 1]) if j else 0)
+        return (self.keys[j] << 16) | \
+            C.container_select(self.containers[j], local)
 
     def min(self) -> int:
         if not self.containers:
@@ -406,9 +411,8 @@ class RoaringBitmap:
     def max(self) -> int:
         if not self.containers:
             raise ValueError("empty bitmap")
-        k, c = self.keys[-1], self.containers[-1]
-        vals = c.to_array_values()
-        return int((np.uint32(k) << np.uint32(16)) | np.uint32(vals[-1]))
+        c = self.containers[-1]
+        return (self.keys[-1] << 16) | C.container_select(c, c.card - 1)
 
     def __repr__(self) -> str:
         kinds = {}

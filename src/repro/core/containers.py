@@ -465,6 +465,48 @@ def container_andnot(x: Container, y: Container) -> Container:
 
 
 # ---------------------------------------------------------------------------
+# in-container rank / select (the chunk-level half of paper section 6):
+# vectorized per kind, never expanding the container to a value array.
+# ---------------------------------------------------------------------------
+
+def container_rank(c: Container, v: int) -> int:
+    """Number of container values <= v (v in [0, 2^16))."""
+    v = int(v)
+    if isinstance(c, ArrayContainer):
+        return int(np.searchsorted(c.values, np.uint16(v), side="right"))
+    if isinstance(c, BitsetContainer):
+        w = v >> 6
+        partial = int(c.words[w]) & ((2 << (v & 63)) - 1)
+        return int(np.bitwise_count(c.words[:w]).sum()) + partial.bit_count()
+    if c.runs.size == 0:
+        return 0
+    i = int(np.searchsorted(c.runs[:, 0], v, side="right")) - 1
+    if i < 0:
+        return 0
+    base = int((c.runs[:i, 1] + 1).sum())
+    s, ln = int(c.runs[i, 0]), int(c.runs[i, 1])
+    return base + min(v - s, ln) + 1
+
+
+def container_select(c: Container, i: int) -> int:
+    """The i-th smallest container value (0-based; requires i < card)."""
+    i = int(i)
+    if isinstance(c, ArrayContainer):
+        return int(c.values[i])
+    if isinstance(c, BitsetContainer):
+        cs = np.cumsum(np.bitwise_count(c.words))
+        w = int(np.searchsorted(cs, i, side="right"))
+        prior = int(cs[w - 1]) if w else 0
+        bits = np.flatnonzero(np.unpackbits(
+            c.words[w:w + 1].view(np.uint8), bitorder="little"))
+        return (w << 6) + int(bits[i - prior])
+    cum = np.cumsum(c.runs[:, 1] + 1)
+    r = int(np.searchsorted(cum, i, side="right"))
+    prior = int(cum[r - 1]) if r else 0
+    return int(c.runs[r, 0]) + (i - prior)
+
+
+# ---------------------------------------------------------------------------
 # count-only variants (paper section 5.9 "fast counts"):
 # never materialize the result container.
 # ---------------------------------------------------------------------------

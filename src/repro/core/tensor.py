@@ -36,7 +36,7 @@ from repro.core.containers import (
     ARRAY_MAX, ArrayContainer, BitsetContainer, RunContainer,
 )
 from repro.kernels import ops as kops
-from repro.kernels.ref import WORDS, CONTAINER_BITS
+from repro.kernels.ref import PAIR_OPS, WORDS, CONTAINER_BITS
 
 SENTINEL = np.int32(0x7FFFFFFF)
 KIND_EMPTY, KIND_ARRAY, KIND_BITSET, KIND_RUN = 0, 1, 2, 3
@@ -218,9 +218,10 @@ class RoaringTensor:
                 backend: str | None = None) -> "RoaringTensor":
         outk, aw, bw, hit_a, hit_b = self._align(other)
         b, co = outk.shape
-        rw, cards = kops.bitset_op(aw.reshape(b * co, WORDS),
-                                   bw.reshape(b * co, WORDS), op,
-                                   backend=backend)
+        opids = jnp.full((b * co,), PAIR_OPS.index(op), jnp.int32)
+        rw, cards = kops.bitset_pair_op(aw.reshape(b * co, WORDS),
+                                        bw.reshape(b * co, WORDS), opids,
+                                        backend=backend)
         rw = rw.reshape(b, co, WORDS)
         cards = cards.reshape(b, co)
         if op == "and":
@@ -250,9 +251,31 @@ class RoaringTensor:
     def _binary_card(self, other, op: str, backend=None) -> jax.Array:
         outk, aw, bw, hit_a, hit_b = self._align(other)
         b, co = outk.shape
-        cards = kops.bitset_op_card(aw.reshape(b * co, WORDS),
-                                    bw.reshape(b * co, WORDS), op,
-                                    backend=backend).reshape(b, co)
+        opids = jnp.full((b * co,), PAIR_OPS.index(op), jnp.int32)
+        cards = kops.bitset_pair_card(aw.reshape(b * co, WORDS),
+                                      bw.reshape(b * co, WORDS), opids,
+                                      backend=backend).reshape(b, co)
+        return cards.sum(axis=1)
+
+    def pairwise_card(self, other: "RoaringTensor", ops,
+                      backend: str | None = None) -> jax.Array:
+        """(B,) counts with a per-batch-row op: ``ops`` is one op name or
+        a length-B sequence; the whole batch rides ONE mixed-op kernel
+        dispatch (op id per row -- the device twin of the host pairwise
+        planner's bitset class)."""
+        outk, aw, bw, _, _ = self._align(other)
+        b, co = outk.shape
+        if isinstance(ops, str):
+            opids = jnp.full((b,), PAIR_OPS.index(ops), jnp.int32)
+        else:
+            opids = jnp.asarray([PAIR_OPS.index(o) for o in ops],
+                                jnp.int32)
+            if opids.shape[0] != b:
+                raise ValueError(f"need one op per batch row: "
+                                 f"{opids.shape[0]} != {b}")
+        cards = kops.bitset_pair_card(
+            aw.reshape(b * co, WORDS), bw.reshape(b * co, WORDS),
+            jnp.repeat(opids, co), backend=backend).reshape(b, co)
         return cards.sum(axis=1)
 
     def and_card(self, other) -> jax.Array:

@@ -4,6 +4,8 @@ harley_seal       -- vectorized population count            (paper sec 4.1.1)
 bitset_ops        -- fused logical op + cardinality         (paper sec 4.1.2)
 bitset_convert    -- array->bitset scatter w/ card tracking (paper sec 3.1/3.2)
 array_ops         -- all-vs-all sorted-array intersection   (paper sec 4.2/4.4)
+pair_ops          -- batched pairwise ops: mixed-op bitset rows + array x
+                     bitset probe (paper sec 4.1-4.5, similarity joins)
 segment_ops       -- segmented wide OR/AND/XOR/threshold    (paper sec 5.8)
 block_sparse_attn -- roaring-masked decode attention        (framework integration)
 ops               -- public jit'd wrappers with backend dispatch

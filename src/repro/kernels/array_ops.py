@@ -102,3 +102,124 @@ def array_difference(a_vals, a_card, b_vals, b_card, *, interpret=None):
     valid = (jnp.arange(ARRAY_CAP)[None, :] < a_card[:, None]).astype(jnp.int32)
     keep = valid * (1 - mask)
     return keep, (a_card.astype(jnp.int32) - inter)
+
+
+def _pair_masks_kernel(a_ref, a_card_ref, b_ref, b_card_ref,
+                       mask_a_ref, mask_b_ref, count_ref):
+    """Two-sided variant of ``_intersect_kernel``: the same tiled all-vs-all
+    compare also accumulates which B slots matched, so one dispatch feeds
+    every materializing array-array op (AND keeps A's hits, ANDNOT drops
+    them, OR appends B's misses, XOR keeps both sides' misses --
+    sections 4.2-4.5)."""
+    a = a_ref[...]
+    b = b_ref[...]
+    a_card, b_card = a_card_ref[0, 0], b_card_ref[0, 0]
+    pos = jax.lax.broadcasted_iota(jnp.int32, (1, ARRAY_CAP), 1)
+    a_v = jnp.where(pos < a_card, a, np.int32(CONTAINER_BITS))
+    b_v = jnp.where(pos < b_card, b, np.int32(CONTAINER_BITS + 1))
+
+    n_tiles = ARRAY_CAP // TILE
+    mask_a = jnp.zeros((1, ARRAY_CAP), jnp.int32)
+    mask_b = jnp.zeros((1, ARRAY_CAP), jnp.int32)
+    for i in range(n_tiles):
+        at = jax.lax.dynamic_slice(a_v, (0, i * TILE), (1, TILE))
+        a_min, a_max = at[0, 0], at[0, TILE - 1]
+        hit_a = jnp.zeros((1, TILE), jnp.int32)
+        for j in range(n_tiles):
+            bt = jax.lax.dynamic_slice(b_v, (0, j * TILE), (1, TILE))
+            b_min, b_max = bt[0, 0], bt[0, TILE - 1]
+            overlap = (a_min <= b_max) & (b_min <= a_max)
+            eq = jnp.where(overlap,
+                           at[0, :, None] == bt[0, None, :],
+                           jnp.zeros((TILE, TILE), jnp.bool_))
+            hit_a = hit_a | eq.any(axis=-1).astype(jnp.int32)[None, :]
+            bj = jax.lax.dynamic_slice(mask_b, (0, j * TILE), (1, TILE))
+            mask_b = jax.lax.dynamic_update_slice(
+                mask_b, bj | eq.any(axis=0).astype(jnp.int32)[None, :],
+                (0, j * TILE))
+        mask_a = jax.lax.dynamic_update_slice(mask_a, hit_a, (0, i * TILE))
+    mask_a_ref[...] = mask_a
+    mask_b_ref[...] = mask_b
+    count_ref[...] = mask_a.sum(axis=-1, dtype=jnp.int32)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def array_pair_masks(a_vals: jax.Array, a_card: jax.Array,
+                     b_vals: jax.Array, b_card: jax.Array, *,
+                     interpret: bool | None = None
+                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Batched two-sided sorted-array intersection masks.
+
+    a_vals/b_vals: (N, ARRAY_CAP) int32 (sorted; slots >= card ignored)
+    returns: (mask_a (N, ARRAY_CAP), mask_b (N, ARRAY_CAP), count (N,))
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n = a_vals.shape[0]
+    vspec = pl.BlockSpec((1, ARRAY_CAP), lambda i: (i, 0))
+    cspec = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    mask_a, mask_b, count = pl.pallas_call(
+        _pair_masks_kernel,
+        grid=(n,),
+        in_specs=[vspec, cspec, vspec, cspec],
+        out_specs=[vspec, vspec, cspec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, ARRAY_CAP), jnp.int32),
+            jax.ShapeDtypeStruct((n, ARRAY_CAP), jnp.int32),
+            jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(a_vals.astype(jnp.int32), a_card.astype(jnp.int32)[:, None],
+      b_vals.astype(jnp.int32), b_card.astype(jnp.int32)[:, None])
+    return mask_a, mask_b, count[:, 0]
+
+
+def _intersect_card_kernel(a_ref, a_card_ref, b_ref, b_card_ref, count_ref):
+    """Count-only intersection (paper section 5.9 applied to the section
+    4.2 compare): the membership mask never leaves registers."""
+    a = a_ref[...]
+    b = b_ref[...]
+    a_card, b_card = a_card_ref[0, 0], b_card_ref[0, 0]
+    pos = jax.lax.broadcasted_iota(jnp.int32, (1, ARRAY_CAP), 1)
+    a_v = jnp.where(pos < a_card, a, np.int32(CONTAINER_BITS))
+    b_v = jnp.where(pos < b_card, b, np.int32(CONTAINER_BITS + 1))
+    n_tiles = ARRAY_CAP // TILE
+    total = jnp.zeros((), jnp.int32)
+    for i in range(n_tiles):
+        at = jax.lax.dynamic_slice(a_v, (0, i * TILE), (1, TILE))
+        a_min, a_max = at[0, 0], at[0, TILE - 1]
+        hit = jnp.zeros((1, TILE), jnp.int32)
+        for j in range(n_tiles):
+            bt = jax.lax.dynamic_slice(b_v, (0, j * TILE), (1, TILE))
+            b_min, b_max = bt[0, 0], bt[0, TILE - 1]
+            overlap = (a_min <= b_max) & (b_min <= a_max)
+            eq_any = jnp.where(
+                overlap,
+                (at[0, :, None] == bt[0, None, :]).any(axis=-1)
+                .astype(jnp.int32)[None, :],
+                jnp.zeros((1, TILE), jnp.int32))
+            hit = hit | eq_any
+        total = total + hit.sum(dtype=jnp.int32)
+    count_ref[...] = total[None, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def array_intersect_card(a_vals: jax.Array, a_card: jax.Array,
+                         b_vals: jax.Array, b_card: jax.Array, *,
+                         interpret: bool | None = None) -> jax.Array:
+    """Batched count-only sorted-array intersection: (N,) int32 counts."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n = a_vals.shape[0]
+    vspec = pl.BlockSpec((1, ARRAY_CAP), lambda i: (i, 0))
+    cspec = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    count = pl.pallas_call(
+        _intersect_card_kernel,
+        grid=(n,),
+        in_specs=[vspec, cspec, vspec, cspec],
+        out_specs=cspec,
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        interpret=interpret,
+    )(a_vals.astype(jnp.int32), a_card.astype(jnp.int32)[:, None],
+      b_vals.astype(jnp.int32), b_card.astype(jnp.int32)[:, None])
+    return count[:, 0]

@@ -18,6 +18,7 @@ from repro.kernels import bitset_convert as _convert
 from repro.kernels import bitset_ops as _bitset_ops
 from repro.kernels import block_sparse_attn as _bsa
 from repro.kernels import harley_seal as _hs
+from repro.kernels import pair_ops as _pair_ops
 from repro.kernels import ref
 from repro.kernels import segment_ops as _segment_ops
 
@@ -37,6 +38,19 @@ def _use_pallas(backend: Backend | None) -> bool:
         return True
     if b == "ref":
         return False
+    return jax.default_backend() == "tpu"
+
+
+def prefer_kernel(backend: Backend | None) -> bool:
+    """Whether a host planner should route work through the (jit'd)
+    kernel wrappers at all, vs staying on its vectorized numpy twins.
+
+    On TPU (or when a backend is forced, e.g. in tests) the fused kernels
+    win; on CPU the host paths avoid a device round-trip that the jnp
+    reference lowering cannot amortize.  Shared by the wide-aggregation
+    and pairwise planners so the two policies can never drift."""
+    if backend in ("pallas", "ref"):
+        return True
     return jax.default_backend() == "tpu"
 
 
@@ -80,6 +94,60 @@ def array_intersect(a_vals, a_card, b_vals, b_card, *,
     if _use_pallas(backend):
         return _array_ops.array_intersect(a_vals, a_card, b_vals, b_card)
     return ref.array_intersect_mask(a_vals, a_card, b_vals, b_card)
+
+
+def array_intersect_card(a_vals, a_card, b_vals, b_card, *,
+                         backend: Backend | None = None):
+    """Count-only batched sorted-array intersection (N,) int32 -- the
+    array x array class of the pairwise similarity-join planner."""
+    if _use_pallas(backend):
+        return _array_ops.array_intersect_card(a_vals, a_card,
+                                               b_vals, b_card)
+    return _ref_array_intersect_count(a_vals, a_card, b_vals, b_card)
+
+
+_ref_array_intersect_count = jax.jit(ref.array_intersect_count)
+
+
+def array_pair_masks(a_vals, a_card, b_vals, b_card, *,
+                     backend: Backend | None = None):
+    """Two-sided membership masks + count for a batch of sorted-array
+    pairs: one dispatch feeds AND/OR/XOR/ANDNOT materialization."""
+    if _use_pallas(backend):
+        return _array_ops.array_pair_masks(a_vals, a_card, b_vals, b_card)
+    return ref.array_pair_masks(a_vals, a_card, b_vals, b_card)
+
+
+def array_bitset_probe(vals, card, words, *, backend: Backend | None = None):
+    """Batched array x bitset membership probe (mask over the array's
+    slots + count per row)."""
+    if _use_pallas(backend):
+        return _pair_ops.array_bitset_probe(vals, card, words)
+    return _ref_array_bitset_probe(vals, card, words)
+
+
+_ref_array_bitset_probe = jax.jit(ref.array_bitset_probe)
+
+
+def bitset_pair_op(a, b, opids, *, backend: Backend | None = None):
+    """Mixed-op batched bitset algebra: per-row op ids into
+    ``ref.PAIR_OPS``; returns (words, cards) in one dispatch."""
+    opids = jnp.asarray(opids, jnp.int32)
+    if _use_pallas(backend):
+        return _pair_ops.bitset_pair_op(a, b, opids)
+    return _ref_bitset_pair_op(a, b, opids)
+
+
+def bitset_pair_card(a, b, opids, *, backend: Backend | None = None):
+    """Count-only mixed-op batch (fast counts, paper section 5.9)."""
+    opids = jnp.asarray(opids, jnp.int32)
+    if _use_pallas(backend):
+        return _pair_ops.bitset_pair_card(a, b, opids)
+    return _ref_bitset_pair_card(a, b, opids)
+
+
+_ref_bitset_pair_op = jax.jit(ref.bitset_pair_op)
+_ref_bitset_pair_card = jax.jit(ref.bitset_pair_card)
 
 
 _ref_segment_reduce = jax.jit(

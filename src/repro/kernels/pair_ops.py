@@ -1,0 +1,181 @@
+"""Batched pairwise container kernels: the two-by-two analogue of the
+segmented wide-aggregation engine.
+
+The paper's central performance contribution is *vectorized two-by-two* set
+algebra (sections 4.2-4.5): SIMD intersection, union, difference and
+symmetric difference over container pairs.  The host planner
+(``repro.core.pairwise``) key-merges a batch of bitmap pairs, buckets the
+matched container pairs by type class, and issues ONE dispatch per class
+into the kernels here:
+
+  * ``bitset_pair_op`` -- bitset x bitset (section 4.1.2): stacked word
+    rows, a logical op *id per row* (so one dispatch can run a mixed-op
+    batch), fused with the Harley-Seal cardinality.  ``bitset_pair_card``
+    is the count-only twin (section 5.9: the result words never leave
+    registers -- the Jaccard / cosine / intersects hot path).
+  * ``array_bitset_probe`` -- array x bitset (the asymmetric case of
+    section 4.2): each sorted array value probes the bitset row; the
+    paper's per-value binary search degenerates to a word fetch + bit test
+    in the bitset domain.  On TPU the gather is a one-hot reduction over
+    value tiles (the VPU has no vector gather; the one-hot contraction is
+    the standard idiom).
+
+Array x array pairs ride ``kernels.array_ops`` (the pcmpistrm analogue),
+extended by this PR with a two-sided-mask variant (feeding OR / XOR /
+ANDNOT materialization) and a count-only variant.  Run containers stay on
+the host planner's interval fast paths.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.harley_seal import DEFAULT_BLOCK, harley_seal_reduce
+from repro.kernels.ref import ARRAY_CAP, WORDS
+
+TILE = 512   # values per probe tile; (TILE, WORDS) one-hot = 4 MB of VMEM
+
+
+def _mixed_op(a, b, opid):
+    """Per-row op select: opid broadcasts (block, 1) against (block, WORDS).
+    All four ops are computed and selected -- on the VPU the four logical
+    ops cost less than a branch, exactly the paper's branch-free ethos."""
+    return jnp.where(opid == 0, a & b,
+                     jnp.where(opid == 1, a | b,
+                               jnp.where(opid == 2, a ^ b, a & ~b)))
+
+
+def _pair_op_kernel(opid_ref, a_ref, b_ref, out_ref, card_ref):
+    r = _mixed_op(a_ref[...], b_ref[...], opid_ref[...])
+    out_ref[...] = r
+    bn = r.shape[0]
+    card_ref[...] = harley_seal_reduce(r.reshape(bn, WORDS // 16, 16))[:, None]
+
+
+def _pair_card_kernel(opid_ref, a_ref, b_ref, card_ref):
+    r = _mixed_op(a_ref[...], b_ref[...], opid_ref[...])
+    bn = r.shape[0]
+    card_ref[...] = harley_seal_reduce(r.reshape(bn, WORDS // 16, 16))[:, None]
+
+
+def _pad_rows(x, block, fill=0):
+    n_pad = (-x.shape[0]) % block
+    if not n_pad:
+        return x
+    return jnp.pad(x, ((0, n_pad),) + ((0, 0),) * (x.ndim - 1),
+                   constant_values=fill)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def bitset_pair_op(a: jax.Array, b: jax.Array, opids: jax.Array, *,
+                   block: int = DEFAULT_BLOCK,
+                   interpret: bool | None = None
+                   ) -> tuple[jax.Array, jax.Array]:
+    """(M, WORDS) x2 uint32 + (M,) int32 op ids -> (words, cards).
+
+    One dispatch for an arbitrary mixed-op batch of bitset pairs: op id
+    ``i`` of row ``r`` selects ``PAIR_OPS[i]`` for that row."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n = a.shape[0]
+    a, b = _pad_rows(a, block), _pad_rows(b, block)
+    ops2d = _pad_rows(opids.astype(jnp.int32)[:, None], block)
+    grid = (a.shape[0] // block,)
+    spec = pl.BlockSpec((block, WORDS), lambda i: (i, 0))
+    ospec = pl.BlockSpec((block, 1), lambda i: (i, 0))
+    out, card = pl.pallas_call(
+        _pair_op_kernel,
+        grid=grid,
+        in_specs=[ospec, spec, spec],
+        out_specs=[spec, ospec],
+        out_shape=[
+            jax.ShapeDtypeStruct((a.shape[0], WORDS), jnp.uint32),
+            jax.ShapeDtypeStruct((a.shape[0], 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ops2d, a.astype(jnp.uint32), b.astype(jnp.uint32))
+    return out[:n], card[:n, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def bitset_pair_card(a: jax.Array, b: jax.Array, opids: jax.Array, *,
+                     block: int = DEFAULT_BLOCK,
+                     interpret: bool | None = None) -> jax.Array:
+    """Count-only mixed-op batch: result words stay in registers (paper
+    section 5.9) -- the similarity-join inner loop."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n = a.shape[0]
+    a, b = _pad_rows(a, block), _pad_rows(b, block)
+    ops2d = _pad_rows(opids.astype(jnp.int32)[:, None], block)
+    grid = (a.shape[0] // block,)
+    spec = pl.BlockSpec((block, WORDS), lambda i: (i, 0))
+    ospec = pl.BlockSpec((block, 1), lambda i: (i, 0))
+    card = pl.pallas_call(
+        _pair_card_kernel,
+        grid=grid,
+        in_specs=[ospec, spec, spec],
+        out_specs=ospec,
+        out_shape=jax.ShapeDtypeStruct((a.shape[0], 1), jnp.int32),
+        interpret=interpret,
+    )(ops2d, a.astype(jnp.uint32), b.astype(jnp.uint32))
+    return card[:n, 0]
+
+
+def _probe_kernel(vals_ref, card_ref_in, words_ref, mask_ref, count_ref):
+    vals = vals_ref[...]                             # (1, ARRAY_CAP) int32
+    words = words_ref[...]                           # (1, WORDS) uint32
+    card = card_ref_in[0, 0]
+    pos = jax.lax.broadcasted_iota(jnp.int32, (1, ARRAY_CAP), 1)
+    valid = pos < card
+    v = jnp.where(valid, vals, 0)
+    wcol = jax.lax.broadcasted_iota(jnp.int32, (TILE, WORDS), 1)
+    mask = jnp.zeros((1, ARRAY_CAP), jnp.int32)
+    for i in range(ARRAY_CAP // TILE):
+        vt = jax.lax.dynamic_slice(v, (0, i * TILE), (1, TILE))[0]
+        # one-hot word select: each value hits exactly one word, so the
+        # masked sum IS the gathered word (no vector gather on the VPU)
+        onehot = (wcol == (vt >> 5)[:, None]).astype(jnp.uint32)
+        wsel = (onehot * words).sum(axis=-1)         # (TILE,) uint32
+        bit = (wsel >> (vt & 31).astype(jnp.uint32)) & jnp.uint32(1)
+        mask = jax.lax.dynamic_update_slice(
+            mask, bit.astype(jnp.int32)[None, :], (0, i * TILE))
+    mask = jnp.where(valid, mask, 0)
+    mask_ref[...] = mask
+    count_ref[...] = mask.sum(axis=-1, dtype=jnp.int32)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def array_bitset_probe(vals: jax.Array, card: jax.Array,
+                       words: jax.Array, *,
+                       interpret: bool | None = None
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Batched array x bitset probe.
+
+    vals: (M, ARRAY_CAP) int32 sorted uint16-valued (slots >= card
+    ignored); card: (M,) int32; words: (M, WORDS) uint32 bitset rows.
+    Returns (mask (M, ARRAY_CAP) int32 over the array's slots, count (M,)).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n = vals.shape[0]
+    vspec = pl.BlockSpec((1, ARRAY_CAP), lambda i: (i, 0))
+    wspec = pl.BlockSpec((1, WORDS), lambda i: (i, 0))
+    cspec = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    mask, count = pl.pallas_call(
+        _probe_kernel,
+        grid=(n,),
+        in_specs=[vspec, cspec, wspec],
+        out_specs=[vspec, cspec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, ARRAY_CAP), jnp.int32),
+            jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(vals.astype(jnp.int32), card.astype(jnp.int32)[:, None],
+      words.astype(jnp.uint32))
+    return mask, count[:, 0]

@@ -58,6 +58,32 @@ def bitset_op_card(a: jax.Array, b: jax.Array, op: str) -> jax.Array:
     return bitset_op(a, b, op)[1]
 
 
+PAIR_OPS = ("and", "or", "xor", "andnot")   # index == per-row op id
+
+
+def bitset_pair_op(a: jax.Array, b: jax.Array,
+                   opids: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Mixed-op batched bitset algebra (section 4.1.2 generalized): one
+    dispatch applies a *different* logical op per row.
+
+    a/b: (M, WORDS) uint32; opids: (M,) int32 indexing ``PAIR_OPS``
+    (0 and, 1 or, 2 xor, 3 andnot).  Returns (words, cards)."""
+    a = a.astype(jnp.uint32)
+    b = b.astype(jnp.uint32)
+    sel = opids.astype(jnp.int32)[:, None]
+    r = jnp.where(sel == 0, a & b,
+                  jnp.where(sel == 1, a | b,
+                            jnp.where(sel == 2, a ^ b, a & ~b)))
+    return r, popcount_words(r)
+
+
+def bitset_pair_card(a: jax.Array, b: jax.Array,
+                     opids: jax.Array) -> jax.Array:
+    """Count-only mixed-op batch (the similarity-join hot path: never
+    materializes the result words in HBM)."""
+    return bitset_pair_op(a, b, opids)[1]
+
+
 def array_to_bitset(values: jax.Array, card: jax.Array) -> jax.Array:
     """Sorted uint16-valued (N, ARRAY_CAP) int32 arrays (first ``card`` entries
     valid) -> (N, WORDS) uint32 bitsets.  Oracle for the section 3.2 analogue.
@@ -124,6 +150,61 @@ def array_intersect_mask(a_vals: jax.Array, a_card: jax.Array,
     vb = (jnp.arange(ARRAY_CAP)[None, :] < b_card[:, None])
     eq = (a_vals[:, :, None] == b_vals[:, None, :]) & vb[:, None, :]
     mask = eq.any(axis=-1) & va
+    return mask, mask.sum(axis=-1).astype(jnp.int32)
+
+
+def array_intersect_count(a_vals: jax.Array, a_card: jax.Array,
+                          b_vals: jax.Array, b_card: jax.Array) -> jax.Array:
+    """Memory-lean count-only intersection oracle: a vectorized binary
+    search per A value (O(M * ARRAY_CAP) memory) instead of the
+    ``array_intersect_mask`` all-vs-all cube (O(M * ARRAY_CAP^2)) --
+    the count path must scale to planner-sized batches."""
+    pad = jnp.int32(CONTAINER_BITS)
+    pos = jnp.arange(ARRAY_CAP)[None, :]
+    va = pos < a_card[:, None]
+    b_sorted = jnp.where(pos < b_card[:, None], b_vals, pad)
+
+    def one(b_row, a_row):
+        return jnp.searchsorted(b_row, a_row).astype(jnp.int32)
+
+    idx = jnp.minimum(jax.vmap(one)(b_sorted, a_vals), ARRAY_CAP - 1)
+    hit = (jnp.take_along_axis(b_sorted, idx, axis=1) == a_vals) & va
+    return hit.sum(axis=-1).astype(jnp.int32)
+
+
+def array_pair_masks(a_vals: jax.Array, a_card: jax.Array,
+                     b_vals: jax.Array, b_card: jax.Array
+                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Two-sided all-vs-all membership (sections 4.2-4.5 oracle).
+
+    Like ``array_intersect_mask`` but also emits the B-side mask, so one
+    dispatch feeds every materializing array-array op: AND keeps A's hits,
+    ANDNOT drops them, OR appends B's misses, XOR keeps both sides' misses.
+    Returns (mask_a (M, ARRAY_CAP), mask_b (M, ARRAY_CAP), count (M,))."""
+    va = (jnp.arange(ARRAY_CAP)[None, :] < a_card[:, None])
+    vb = (jnp.arange(ARRAY_CAP)[None, :] < b_card[:, None])
+    eq = ((a_vals[:, :, None] == b_vals[:, None, :])
+          & va[:, :, None] & vb[:, None, :])
+    mask_a = eq.any(axis=-1)
+    mask_b = eq.any(axis=1)
+    return (mask_a.astype(jnp.int32), mask_b.astype(jnp.int32),
+            mask_a.sum(axis=-1).astype(jnp.int32))
+
+
+def array_bitset_probe(vals: jax.Array, card: jax.Array,
+                       words: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Vectorized probe of sorted array values against a bitset row (the
+    asymmetric intersection of section 4.2: binary search degenerates to a
+    direct word fetch + bit test in the bitset domain).
+
+    vals: (M, ARRAY_CAP) int32 sorted uint16-valued (slots >= card ignored);
+    card: (M,) int32; words: (M, WORDS) uint32.  Returns
+    (mask (M, ARRAY_CAP) int32 over the array's slots, count (M,))."""
+    valid = (jnp.arange(ARRAY_CAP)[None, :] < card[:, None])
+    widx = jnp.clip(vals >> 5, 0, WORDS - 1)
+    w = jnp.take_along_axis(words.astype(jnp.uint32), widx, axis=1)
+    bit = (w >> (vals & 31).astype(jnp.uint32)) & jnp.uint32(1)
+    mask = jnp.where(valid, bit.astype(jnp.int32), 0)
     return mask, mask.sum(axis=-1).astype(jnp.int32)
 
 

@@ -1,0 +1,73 @@
+"""Frozen copy of the seed (pre-planner) scalar two-by-two path.
+
+Shared by test_pairwise.py and test_pairwise_properties.py as the
+bit-identity oracle the class-batched planner is checked against.  Kept
+independent of repro.core.bitmap._merge on purpose: the planner now backs
+that method, so the oracle must not route through it."""
+
+from repro.core import RoaringBitmap
+from repro.core import containers as C
+
+
+def seed_merge(a, b, op):
+    """The seed RoaringBitmap._merge: scalar key-merge, one container op
+    per matched key."""
+    fn = C.OPS[op][0]
+    keys, conts = [], []
+    i = j = 0
+    na, nb = len(a.keys), len(b.keys)
+    while i < na and j < nb:
+        ka, kb = a.keys[i], b.keys[j]
+        if ka == kb:
+            c = fn(a.containers[i], b.containers[j])
+            if c.card:
+                keys.append(ka)
+                conts.append(c)
+            i += 1
+            j += 1
+        elif ka < kb:
+            if op in ("or", "xor", "andnot"):
+                keys.append(ka)
+                conts.append(a.containers[i])
+            i += 1
+        else:
+            if op in ("or", "xor"):
+                keys.append(kb)
+                conts.append(b.containers[j])
+            j += 1
+    if op in ("or", "xor", "andnot"):
+        while i < na:
+            keys.append(a.keys[i])
+            conts.append(a.containers[i])
+            i += 1
+    if op in ("or", "xor"):
+        while j < nb:
+            keys.append(b.keys[j])
+            conts.append(b.containers[j])
+            j += 1
+    return RoaringBitmap(keys, conts)
+
+
+def seed_and_card(a, b):
+    """The seed RoaringBitmap.and_card: scalar key-merge fast count."""
+    cnt = 0
+    i = j = 0
+    while i < len(a.keys) and j < len(b.keys):
+        ka, kb = a.keys[i], b.keys[j]
+        if ka == kb:
+            cnt += C.container_and_card(a.containers[i], b.containers[j])
+            i += 1
+            j += 1
+        elif ka < kb:
+            i += 1
+        else:
+            j += 1
+    return cnt
+
+
+def seed_op_card(a, b, op):
+    """Seed count for any op by inclusion-exclusion over seed_and_card."""
+    inter = seed_and_card(a, b)
+    ca, cb = a.cardinality, b.cardinality
+    return {"and": inter, "or": ca + cb - inter,
+            "xor": ca + cb - 2 * inter, "andnot": ca - inter}[op]

@@ -70,6 +70,47 @@ def test_rank_select_roundtrip(rng):
         bm.select(len(sa))
 
 
+def test_rank_select_all_kinds_and_boundaries(rng):
+    # every container kind behind the prefix-cached rank/select
+    parts = [rng.choice(1 << 16, 3000, replace=False),
+             (1 << 16) + rng.choice(1 << 16, 30000, replace=False),
+             np.arange(3 << 16, (3 << 16) + 50000)]
+    vals = np.unique(np.concatenate(parts)).astype(np.uint32)
+    bm = RoaringBitmap.from_values(vals).run_optimize()
+    assert {c.kind for c in bm.containers} == {"array", "bitset", "run"}
+    sa = np.sort(vals)
+    for i in [0, 2999, 3000, 17000, len(sa) - 1]:
+        assert bm.select(i) == int(sa[i])
+        assert bm.rank(int(sa[i])) == i + 1
+    # rank of absent values, chunk gaps, and past-the-end
+    for v in [0, (1 << 16) - 1, (2 << 16) + 7, (3 << 16) + 50000, 1 << 22]:
+        assert bm.rank(v) == int(np.searchsorted(sa, v, side="right"))
+    assert bm.rank(int(sa[0]) - 1) == 0 if sa[0] else True
+
+
+def test_rank_select_cache_invalidation(rng):
+    """add/remove/run_optimize must invalidate the cumulative-cardinality
+    prefix cache (paper section 6 navigation)."""
+    vals = np.unique(rng.integers(0, 1 << 19, 20_000,
+                                  dtype=np.uint32))
+    bm = RoaringBitmap.from_values(vals)
+    n = bm.cardinality                      # builds the cache
+    assert bm.rank(1 << 20) == n
+    new = int(vals[-1]) + 5
+    bm.add(new)
+    assert bm.cardinality == n + 1
+    assert bm.max() == new
+    assert bm.rank(1 << 20) == n + 1
+    bm.remove(new)
+    assert bm.cardinality == n
+    assert bm.select(n - 1) == int(vals[-1])
+    bm.run_optimize()
+    assert bm.rank(int(vals[0])) == 1
+    # adding a value in a NEW chunk shifts every later prefix entry
+    bm.add(0) if 0 not in bm else None
+    assert bm.select(0) == bm.min()
+
+
 def test_serde_roundtrip_all_kinds(rng):
     bm, _ = rand_bm(rng, 100_000)
     bm = bm | RoaringBitmap.from_range(1 << 21, (1 << 21) + 300_000)

@@ -1,0 +1,235 @@
+"""Pairwise planner vs the seed two-by-two path.
+
+Seeded-rng sweeps (the hypothesis twin lives in
+test_pairwise_properties.py) across every container-type pairing --
+array/bitset/run x array/bitset/run, empty, full-chunk, and the 4096/4097
+boundary -- asserting bit-identity of the class-batched planner against a
+frozen copy of the seed scalar ``_merge`` / ``and_card``, plus the
+dispatch-count contract: a batch of M pairs issues O(container-type
+classes) kernel dispatches, not O(M)."""
+
+import numpy as np
+import pytest
+
+from pairwise_oracle import seed_and_card, seed_merge
+
+from repro.core import RoaringBitmap
+from repro.core import pairwise
+
+
+# ---------------------------------------------------------------------------
+# distributions: every chunk kind, plus empty / full / boundary chunks
+# ---------------------------------------------------------------------------
+
+def bm(values):
+    return RoaringBitmap.from_values(np.asarray(list(values), np.uint32))
+
+
+def mixed_kinds(rng, n_chunks=24):
+    """Chunks drawn from {absent, sparse array, dense bitset, runs,
+    full, 4096/4097 boundary} -- every pairing occurs across two draws."""
+    parts = []
+    for c in range(n_chunks):
+        base = c << 16
+        r = rng.random()
+        if r < 0.18:
+            continue                                   # absent chunk
+        if r < 0.38:                                   # sparse array
+            parts.append(base + rng.choice(
+                1 << 16, int(rng.integers(1, 3000)), replace=False))
+        elif r < 0.58:                                 # dense bitset
+            parts.append(base + rng.choice(
+                1 << 16, int(rng.integers(5000, 40000)), replace=False))
+        elif r < 0.78:                                 # runs
+            lo = int(rng.integers(0, 1 << 15))
+            parts.append(np.arange(base + lo,
+                                   base + lo
+                                   + int(rng.integers(64, 30000))))
+        elif r < 0.88:                                 # full chunk
+            parts.append(np.arange(base, base + (1 << 16)))
+        else:                                          # array/bitset edge
+            parts.append(base + rng.choice(
+                1 << 16, 4096 + int(rng.integers(0, 2)), replace=False))
+    if not parts:
+        parts = [np.asarray([0], np.int64)]
+    vals = np.unique(np.concatenate(parts)).astype(np.uint32)
+    return RoaringBitmap.from_values(vals).run_optimize()
+
+
+OPS = ("and", "or", "xor", "andnot")
+
+
+@pytest.mark.parametrize("backend", [None, "ref"])
+def test_merge_one_matches_seed(rng, backend):
+    for _ in range(4):
+        a, b = mixed_kinds(rng), mixed_kinds(rng)
+        for op in OPS:
+            got = pairwise.merge_one(a, b, op, backend=backend)
+            want = seed_merge(a, b, op)
+            assert got == want, (op, backend)
+            for c in got.containers:
+                assert c.card > 0
+                if c.kind == "array":
+                    assert c.card <= 4096
+                    assert np.all(np.diff(
+                        c.values.astype(np.int64)) > 0)
+
+
+def test_merge_edges(rng):
+    e = RoaringBitmap()
+    a = mixed_kinds(rng)
+    assert (a & e).cardinality == 0
+    assert (a | e) == a
+    assert (e - a).cardinality == 0
+    assert (a - e) == a
+    assert (a ^ a).cardinality == 0
+    assert (a & a) == a
+    full = RoaringBitmap.from_range(0, 1 << 18)
+    assert (a | full).cardinality >= full.cardinality
+    assert seed_merge(a, full, "andnot") == (a - full)
+
+
+@pytest.mark.parametrize("backend", [None, "ref"])
+@pytest.mark.parametrize("op", OPS)
+def test_pairwise_card_matches_seed(rng, backend, op):
+    bms = [mixed_kinds(rng, n_chunks=8) for _ in range(6)]
+    pairs = [(bms[i], bms[j]) for i in range(6) for j in range(i, 6)]
+    got = pairwise.pairwise_card(op, pairs, backend=backend)
+    for g, (x, y) in zip(got.tolist(), pairs):
+        inter = seed_and_card(x, y)
+        cx, cy = x.cardinality, y.cardinality
+        want = {"and": inter, "or": cx + cy - inter,
+                "xor": cx + cy - 2 * inter, "andnot": cx - inter}[op]
+        assert g == want
+
+
+def test_pairwise_card_mixed_ops_and_edges(rng):
+    bms = [mixed_kinds(rng, n_chunks=6) for _ in range(4)]
+    pairs = [(bms[i], bms[j]) for i in range(4) for j in range(4)]
+    ops = [OPS[k % 4] for k in range(len(pairs))]
+    got = pairwise.pairwise_card(ops, pairs)
+    for g, (x, y), op in zip(got.tolist(), pairs, ops):
+        inter = seed_and_card(x, y)
+        cx, cy = x.cardinality, y.cardinality
+        want = {"and": inter, "or": cx + cy - inter,
+                "xor": cx + cy - 2 * inter, "andnot": cx - inter}[op]
+        assert g == want
+    assert pairwise.pairwise_card("and", []).size == 0
+    e = RoaringBitmap()
+    assert pairwise.pairwise_card("or", [(e, e)])[0] == 0
+    assert pairwise.pairwise_card(
+        "and", [(bms[0], bms[0])])[0] == bms[0].cardinality
+    with pytest.raises(ValueError):
+        pairwise.pairwise_card("nand", pairs)
+    with pytest.raises(ValueError):
+        pairwise.pairwise_card(["and"], pairs)
+
+
+def test_and_card_public_surface(rng):
+    a, b = mixed_kinds(rng), mixed_kinds(rng)
+    assert a.and_card(b) == seed_and_card(a, b)
+    assert a.or_card(b) == (a | b).cardinality
+    assert a.xor_card(b) == (a ^ b).cardinality
+    assert a.andnot_card(b) == (a - b).cardinality
+    # the tiny-pair host fallback
+    x, y = bm([1, 2, 3]), bm([2, 3, 4, 1 << 17])
+    assert x.and_card(y) == 2
+
+
+def test_jaccard_matrix(rng):
+    bms = [mixed_kinds(rng, n_chunks=6) for _ in range(8)]
+    bms.append(RoaringBitmap())                       # empty row
+    got = RoaringBitmap.jaccard_matrix(bms)
+    n = len(bms)
+    assert got.shape == (n, n)
+    for i in range(n):
+        for j in range(n):
+            want = bms[i].jaccard(bms[j]) if i != j else 1.0
+            assert abs(got[i, j] - want) < 1e-12, (i, j)
+    assert np.array_equal(got, got.T)
+    assert RoaringBitmap.jaccard_matrix([]).shape == (0, 0)
+    assert RoaringBitmap.jaccard_matrix([bms[0]]).shape == (1, 1)
+
+
+def test_dispatch_count_is_per_class_not_per_pair(rng, monkeypatch):
+    """M pairs of mixed-kind bitmaps must issue O(container-type classes)
+    kernel dispatches (the acceptance contract), not O(pairs)."""
+    from repro.kernels import ops as kops
+    calls = []
+    for name in ("bitset_pair_card", "array_intersect_card",
+                 "array_bitset_probe", "bitset_pair_op",
+                 "array_pair_masks", "bitset_op_card"):
+        real = getattr(kops, name)
+
+        def spy(*a, _real=real, _name=name, **k):
+            calls.append(_name)
+            return _real(*a, **k)
+
+        monkeypatch.setattr(kops, name, spy)
+    bms = [mixed_kinds(rng, n_chunks=5) for _ in range(24)]
+    pairs = [(x, y) for i, x in enumerate(bms) for y in bms[i + 1:]]
+    assert len(pairs) == 24 * 23 // 2
+    got = pairwise.pairwise_card("and", pairs, backend="ref")
+    assert len(calls) <= 3, calls                     # one per class, max
+    for g, (x, y) in zip(got.tolist(), pairs):
+        assert g == seed_and_card(x, y)
+
+
+def test_index_similar(rng):
+    from repro.data.index import InvertedIndex
+    docs = [[f"t{t}" for t in rng.choice(12, rng.integers(1, 6),
+                                         replace=False)]
+            for _ in range(400)]
+    idx = InvertedIndex().build(docs)
+    got = idx.similar("t0", top_k=5)
+    assert len(got) == 5
+    want = sorted(((t, idx.jaccard("t0", t)) for t in idx.postings
+                   if t != "t0"), key=lambda kv: -kv[1])[:5]
+    assert [t for t, _ in got] == [t for t, _ in want] or \
+        [round(s, 12) for _, s in got] == [round(s, 12) for _, s in want]
+    for (t, s), (wt, ws) in zip(got, want):
+        assert abs(s - ws) < 1e-12
+    contain = idx.similar("t0", top_k=3, metric="containment")
+    q = idx.postings["t0"]
+    for t, s in contain:
+        assert abs(s - q.and_card(idx.postings[t]) / q.cardinality) < 1e-12
+    with pytest.raises(ValueError):
+        idx.similar("t0", metric="dice")
+
+
+def test_tensor_pairwise_card(rng):
+    from repro.core.tensor import RoaringTensor
+    a_bms = [bm(rng.integers(0, 1 << 18, 20000, dtype=np.uint32))
+             for _ in range(4)]
+    b_bms = [bm(rng.integers(0, 1 << 18, 20000, dtype=np.uint32))
+             for _ in range(4)]
+    ta = RoaringTensor.from_bitmaps(a_bms, capacity=4)
+    tb = RoaringTensor.from_bitmaps(b_bms, capacity=4)
+    ops = ["and", "or", "xor", "andnot"]
+    got = np.asarray(ta.pairwise_card(tb, ops))
+    for i, op in enumerate(ops):
+        x, y = a_bms[i], b_bms[i]
+        inter = seed_and_card(x, y)
+        cx, cy = x.cardinality, y.cardinality
+        want = {"and": inter, "or": cx + cy - inter,
+                "xor": cx + cy - 2 * inter, "andnot": cx - inter}[op]
+        assert int(got[i]) == want, op
+    uniform = np.asarray(ta.pairwise_card(tb, "and"))
+    assert np.array_equal(uniform, np.asarray(ta.and_card(tb)))
+    with pytest.raises(ValueError):
+        ta.pairwise_card(tb, ["and"])
+
+
+def test_result_containers_canonical(rng):
+    """Planner results must obey the seed result-kind policy: binary ops
+    materialize array (card <= 4096) or bitset, never runs; pass-through
+    containers keep their kind."""
+    a, b = mixed_kinds(rng), mixed_kinds(rng)
+    common = set(a.keys) & set(b.keys)
+    for op in OPS:
+        got = pairwise.merge_one(a, b, op)
+        want = seed_merge(a, b, op)
+        for k, c, wc in zip(got.keys, got.containers,
+                            want.containers):
+            if k in common:
+                assert c.kind == wc.kind, (op, k)

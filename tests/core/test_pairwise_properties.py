@@ -1,0 +1,98 @@
+"""Hypothesis property sweeps for the pairwise planner.
+
+Skipped (not errored) when hypothesis is missing, mirroring
+test_properties.py: CI installs it via requirements-ci.txt.
+
+The invariant under test is the acceptance contract: the class-batched
+planner (``pairwise.merge_one`` / ``pairwise_card``) is bit-identical to
+the seed scalar two-by-two path across ALL container-type pairings --
+including empty bitmaps, full chunks, run-heavy inputs, and the 4096/4097
+array<->bitset boundary."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from pairwise_oracle import seed_and_card, seed_merge  # noqa: E402
+
+from repro.core import RoaringBitmap  # noqa: E402
+from repro.core import containers as C  # noqa: E402
+from repro.core import pairwise  # noqa: E402
+
+
+# a chunk spec: (key, kind) where kind picks the container shape
+chunk = st.tuples(
+    st.integers(0, 7),                                  # chunk key
+    st.sampled_from(["array", "dense", "run", "full", "boundary"]),
+    st.integers(0, 2 ** 32 - 1),                        # shape seed
+)
+
+
+def build(chunks):
+    parts = []
+    for key, kind, seed in chunks:
+        rng = np.random.default_rng(seed)
+        base = key << 16
+        if kind == "array":
+            parts.append(base + rng.choice(
+                1 << 16, int(rng.integers(1, 2000)), replace=False))
+        elif kind == "dense":
+            parts.append(base + rng.choice(
+                1 << 16, int(rng.integers(4097, 30000)), replace=False))
+        elif kind == "run":
+            lo = int(rng.integers(0, 1 << 15))
+            parts.append(np.arange(base + lo,
+                                   base + lo + int(rng.integers(64, 20000))))
+        elif kind == "full":
+            parts.append(np.arange(base, base + (1 << 16)))
+        else:                                           # boundary
+            parts.append(base + rng.choice(
+                1 << 16, 4096 + int(rng.integers(0, 2)), replace=False))
+    if not parts:
+        return RoaringBitmap()
+    vals = np.unique(np.concatenate(parts)).astype(np.uint32)
+    return RoaringBitmap.from_values(vals).run_optimize()
+
+
+bitmap_specs = st.lists(chunk, min_size=0, max_size=6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(bitmap_specs, bitmap_specs,
+       st.sampled_from(["and", "or", "xor", "andnot"]))
+def test_merge_one_bit_identical_to_seed(ca, cb, op):
+    a, b = build(ca), build(cb)
+    got = pairwise.merge_one(a, b, op)
+    want = seed_merge(a, b, op)
+    assert got == want
+    for c in got.containers:
+        assert c.card > 0
+        if c.kind == "array":
+            assert c.card <= C.ARRAY_MAX
+
+
+@settings(max_examples=25, deadline=None)
+@given(bitmap_specs, bitmap_specs,
+       st.sampled_from(["and", "or", "xor", "andnot"]))
+def test_pairwise_card_matches_inclusion_exclusion(ca, cb, op):
+    a, b = build(ca), build(cb)
+    got = int(pairwise.pairwise_card(op, [(a, b)])[0])
+    inter = seed_and_card(a, b)
+    cx, cy = a.cardinality, b.cardinality
+    want = {"and": inter, "or": cx + cy - inter,
+            "xor": cx + cy - 2 * inter, "andnot": cx - inter}[op]
+    assert got == want
+    assert got == seed_merge(a, b, op).cardinality
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(bitmap_specs, min_size=0, max_size=4))
+def test_jaccard_matrix_matches_scalar(specs):
+    bms = [build(s) for s in specs]
+    got = pairwise.jaccard_matrix(bms)
+    for i, x in enumerate(bms):
+        for j, y in enumerate(bms):
+            want = 1.0 if i == j else x.jaccard(y)
+            assert abs(got[i, j] - want) < 1e-12

@@ -53,6 +53,13 @@ for i in range(k):
     parts.append(np.arange(lo, lo + 50000, dtype=np.uint32))
     bms.append(bm(np.unique(np.concatenate(parts))))
 
+# AND's dense-segment path needs every chunk's smallest container to be a
+# bitset (arrays anchor the host fast path): 120k values over 2^18 gives
+# ~26k per chunk, and a 4-way intersection stays non-empty (~2k/chunk)
+dense = [bm(np.unique(rng.integers(0, 1 << 18, 120000, dtype=np.uint32)))
+         for _ in range(4)]
+assert all(c.kind == "bitset" for d in dense for c in d.containers)
+
 checks = [
     ("or", aggregate.or_many(bms), aggregate.or_many(bms, mesh=mesh)),
     ("xor", aggregate.xor_many(bms), aggregate.xor_many(bms, mesh=mesh)),
@@ -64,10 +71,16 @@ checks = [
                               mesh=mesh)),
     ("andnot", aggregate.andnot_many(bms[0], bms[1:]),
      aggregate.andnot_many(bms[0], bms[1:], mesh=mesh)),
+    ("and", aggregate.and_many(dense), aggregate.and_many(dense,
+                                                          mesh=mesh)),
 ]
 for name, single, sharded in checks:
     assert single == sharded, name
     assert single.cardinality > 0, name
+
+# mixed kinds: AND goes through host fast paths + sweep; the sharded plan
+# must agree even when the intersection is empty
+assert aggregate.and_many(bms) == aggregate.and_many(bms, mesh=mesh)
 
 rt = RoaringTensor.from_bitmaps(bms)
 assert rt.reduce_or(mesh=mesh).to_bitmaps()[0] == \\
@@ -112,6 +125,11 @@ def test_one_device_mesh_falls_back(rng):
     assert aggregate.or_many(bms, mesh=mesh) == aggregate.or_many(bms)
     assert aggregate.threshold_many(bms, 2, mesh=mesh) == \
         aggregate.threshold_many(bms, 2)
+    dense = [RoaringBitmap.from_values(
+        rng.integers(0, 1 << 18, 120000, dtype=np.uint32))
+        for _ in range(3)]
+    assert aggregate.and_many(dense, mesh=mesh) == \
+        aggregate.and_many(dense)
 
 
 def test_shard_plan_partition():

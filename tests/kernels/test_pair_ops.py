@@ -1,0 +1,116 @@
+"""Batched pairwise kernels (interpret=True) vs ref oracles vs numpy.
+
+Covers the three planner classes: mixed-op bitset rows (op id per row),
+two-sided array masks / count-only intersect, and the array x bitset
+probe."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.array_ops import array_intersect_card, array_pair_masks
+from repro.kernels.pair_ops import (
+    array_bitset_probe, bitset_pair_card, bitset_pair_op,
+)
+
+_NP_OPS = [np.bitwise_and, np.bitwise_or, np.bitwise_xor,
+           lambda x, y: x & ~y]
+
+
+@pytest.mark.parametrize("n", [1, 5, 13])
+def test_bitset_pair_op_mixed_ops(rng, n):
+    a = rng.integers(0, 1 << 32, (n, 2048), dtype=np.uint32)
+    b = rng.integers(0, 1 << 32, (n, 2048), dtype=np.uint32)
+    opids = rng.integers(0, 4, n).astype(np.int32)
+    want = np.stack([_NP_OPS[o](a[i], b[i])
+                     for i, o in enumerate(opids.tolist())])
+    want_c = np.bitwise_count(want).sum(axis=1)
+    w, c = bitset_pair_op(jnp.asarray(a), jnp.asarray(b),
+                          jnp.asarray(opids), interpret=True)
+    assert np.array_equal(np.asarray(w), want)
+    assert np.array_equal(np.asarray(c), want_c)
+    c2 = bitset_pair_card(jnp.asarray(a), jnp.asarray(b),
+                          jnp.asarray(opids), interpret=True)
+    assert np.array_equal(np.asarray(c2), want_c)
+    # oracle agreement
+    ow, oc = ref.bitset_pair_op(jnp.asarray(a), jnp.asarray(b),
+                                jnp.asarray(opids))
+    assert np.array_equal(np.asarray(ow), want)
+    assert np.array_equal(np.asarray(oc), want_c)
+
+
+def test_bitset_pair_op_edge_patterns():
+    pats = np.array([[0] * 2048, [0xFFFFFFFF] * 2048,
+                     [0xFFFFFFFF] * 2048, [1] + [0] * 2047], np.uint32)
+    other = np.array([[0xFFFFFFFF] * 2048, [0] * 2048,
+                      [0xFFFFFFFF] * 2048, [1] + [0] * 2047], np.uint32)
+    opids = np.array([1, 3, 2, 0], np.int32)   # or, andnot, xor, and
+    want = np.stack([_NP_OPS[o](pats[i], other[i])
+                     for i, o in enumerate(opids.tolist())])
+    w, c = bitset_pair_op(jnp.asarray(pats), jnp.asarray(other),
+                          jnp.asarray(opids), interpret=True)
+    assert np.array_equal(np.asarray(w), want)
+    assert np.array_equal(np.asarray(c), np.bitwise_count(want).sum(1))
+
+
+@pytest.mark.parametrize("cards", [
+    [(0, 5), (10, 4000), (3000, 3000), (4096, 1), (1, 1)],
+    [(4096, 4096), (0, 0), (2048, 2048)],
+])
+def test_array_pair_masks_kernel(rng, cards):
+    n = len(cards)
+    A = np.zeros((n, 4096), np.int32)
+    B = np.zeros((n, 4096), np.int32)
+    avs, bvs = [], []
+    for i, (ca, cb) in enumerate(cards):
+        av = np.sort(rng.choice(65536, ca, replace=False)).astype(np.int32)
+        bv = np.sort(rng.choice(65536, cb, replace=False)).astype(np.int32)
+        A[i, :ca] = av
+        B[i, :cb] = bv
+        avs.append(av)
+        bvs.append(bv)
+    ac = np.array([c[0] for c in cards])
+    bc = np.array([c[1] for c in cards])
+    for fn in (array_pair_masks,
+               lambda *a, **k: ref.array_pair_masks(*a)):
+        ma, mb, cnt = fn(jnp.asarray(A), jnp.asarray(ac),
+                         jnp.asarray(B), jnp.asarray(bc), interpret=True)
+        ma, mb, cnt = np.asarray(ma), np.asarray(mb), np.asarray(cnt)
+        for i, (ca, cb) in enumerate(cards):
+            want = np.intersect1d(avs[i], bvs[i])
+            assert cnt[i] == want.size
+            assert np.array_equal(avs[i][ma[i, :ca].astype(bool)], want)
+            assert np.array_equal(bvs[i][mb[i, :cb].astype(bool)], want)
+            assert not ma[i, ca:].any() and not mb[i, cb:].any()
+    cnt2 = array_intersect_card(jnp.asarray(A), jnp.asarray(ac),
+                                jnp.asarray(B), jnp.asarray(bc),
+                                interpret=True)
+    assert np.array_equal(np.asarray(cnt2), cnt)
+
+
+@pytest.mark.parametrize("cards", [[0, 1, 100, 4096], [2048]])
+def test_array_bitset_probe_kernel(rng, cards):
+    n = len(cards)
+    vals = np.zeros((n, 4096), np.int32)
+    vlists = []
+    for i, c in enumerate(cards):
+        v = np.sort(rng.choice(65536, c, replace=False)).astype(np.int32)
+        vals[i, :c] = v
+        vlists.append(v)
+    words = rng.integers(0, 1 << 32, (n, 2048), dtype=np.uint32)
+    got_m, got_c = array_bitset_probe(jnp.asarray(vals),
+                                      jnp.asarray(cards),
+                                      jnp.asarray(words), interpret=True)
+    ref_m, ref_c = ref.array_bitset_probe(jnp.asarray(vals),
+                                          jnp.asarray(cards),
+                                          jnp.asarray(words))
+    assert np.array_equal(np.asarray(got_m), np.asarray(ref_m))
+    assert np.array_equal(np.asarray(got_c), np.asarray(ref_c))
+    for i, c in enumerate(cards):
+        v = vlists[i]
+        want = (((words[i][v >> 5] >> (v & 31).astype(np.uint32)) & 1)
+                .astype(np.int32) if c else np.zeros(0, np.int32))
+        assert np.array_equal(np.asarray(got_m)[i, :c], want)
+        assert int(np.asarray(got_c)[i]) == int(want.sum())
+        assert not np.asarray(got_m)[i, c:].any()
