@@ -62,6 +62,26 @@ def main():
     print(f"weighted score >= 6 over {len(terms)} terms "
           f"(rare terms x3): {hits.cardinality} docs")
 
+    # top-k similarity: "which terms co-occur most with t0?"  The first
+    # call builds the SimilarityEngine's candidate slab (every posting
+    # list promoted to bitset rows, cached across queries); each query is
+    # then ONE fused score+select dispatch on kernel backends, or a
+    # bound-pruned popcount sweep on CPU -- candidates whose cardinality
+    # bound cannot reach the running k-th score are never touched.  All
+    # three metrics derive from the AND count by inclusion-exclusion.
+    t0 = time.perf_counter()
+    top = idx.similar("t0", top_k=5)                   # builds the slab
+    build_ms = (time.perf_counter() - t0) * 1e3
+    print("top-5 jaccard neighbours of t0: "
+          + ", ".join(f"{t}={s:.4f}" for t, s in top))
+    t0 = time.perf_counter()
+    for term in ("t0", "t1", "t2", "t3"):
+        idx.similar(term, top_k=5, metric="cosine")
+    warm_ms = (time.perf_counter() - t0) * 1e3
+    print(f"similar(): slab build+query {build_ms:.2f} ms, then 4 warm "
+          f"cosine queries in {warm_ms:.2f} ms (cached slab, one "
+          "dispatch each on kernel backends)")
+
     # run the same predicates over a Table-3 twin dataset
     sets, universe = generate_dataset(TABLE3[0], seed=0)[:50], \
         TABLE3[0].universe

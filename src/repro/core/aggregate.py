@@ -161,11 +161,7 @@ def _prefer_kernel(backend: str | None) -> bool:
 # promotion helpers (host side of the slab)
 # ---------------------------------------------------------------------------
 
-def _words_row(c: Container) -> np.ndarray:
-    """Container -> (1024,) uint64 bitset words."""
-    if isinstance(c, BitsetContainer):
-        return c.words
-    return c.to_bitset().words
+_words_row = C.container_words64      # container -> (1024,) uint64 words
 
 
 def _array_indicator(arrays: list[ArrayContainer], op: str) -> np.ndarray:

@@ -9,6 +9,10 @@ serialization format.
 
 The top level is scalar python (as in CRoaring the top level is scalar C);
 all heavy lifting happens inside the vectorized container layer.
+
+docs/ARCHITECTURE.md maps every paper section to its module and
+documents the one-dispatch-per-class contract the query surface below
+rides on.
 """
 
 from __future__ import annotations
@@ -29,13 +33,16 @@ __all__ = ["RoaringBitmap"]
 class RoaringBitmap:
     """Compressed set of uint32 values."""
 
-    __slots__ = ("keys", "containers", "_prefix")
+    __slots__ = ("keys", "containers", "_prefix", "_version")
 
     def __init__(self, keys: list[int] | None = None,
                  conts: list[Container] | None = None):
         self.keys: list[int] = keys if keys is not None else []
         self.containers: list[Container] = conts if conts is not None else []
         self._prefix: np.ndarray | None = None    # cumulative cards cache
+        # bumped by every mutator (add/remove/run_optimize): caches over
+        # live bitmaps (SimilarityEngine snapshots) revalidate against it
+        self._version: int = 0
 
     # ------------------------------------------------------------------
     # construction
@@ -164,6 +171,7 @@ class RoaringBitmap:
 
     def add(self, v: int) -> None:
         self._prefix = None                      # invalidate rank cache
+        self._version += 1
         hi, lo = int(v) >> 16, int(v) & 0xFFFF
         i = bisect.bisect_left(self.keys, hi)
         if i < len(self.keys) and self.keys[i] == hi:
@@ -190,6 +198,7 @@ class RoaringBitmap:
 
     def remove(self, v: int) -> None:
         self._prefix = None                      # invalidate rank cache
+        self._version += 1
         hi, lo = int(v) >> 16, int(v) & 0xFFFF
         i = bisect.bisect_left(self.keys, hi)
         if i == len(self.keys) or self.keys[i] != hi:
@@ -250,7 +259,11 @@ class RoaringBitmap:
 
     def and_card(self, other: "RoaringBitmap") -> int:
         """Intersection cardinality without materializing the result
-        (section 5.9), planned as a batch of one pair."""
+        (paper section 5.9), planned as a batch of one pair.
+
+        Returns int.  Complexity: O(matched containers) with at most one
+        kernel dispatch per container-type class (tiny pairs stay on the
+        scalar host merge).  See docs/ARCHITECTURE.md section 2."""
         from repro.core import pairwise
         return int(pairwise.pairwise_card("and", [(self, other)])[0])
 
@@ -287,16 +300,27 @@ class RoaringBitmap:
         """Count-only set algebra over M bitmap pairs in O(container-type
         classes) dispatches (not O(pairs)).
 
-        ``ops`` is one of "and" | "or" | "xor" | "andnot" or a length-M
-        sequence of per-pair op names; ``pairs`` is a sequence of
-        ``(RoaringBitmap, RoaringBitmap)``.  Returns (M,) int64 counts."""
+        Args: ``ops`` is one of "and" | "or" | "xor" | "andnot" or a
+        length-M sequence of per-pair op names; ``pairs`` is a sequence
+        of ``(RoaringBitmap, RoaringBitmap)``; ``backend`` forces the
+        kernel ("pallas"/"ref") or host-twin (CPU default) path.
+
+        Returns (M,) int64 counts.  Complexity: every count derives from
+        the pair's AND cardinality by inclusion-exclusion (paper section
+        5.9); the CPU twins scale with total postings, never postings x
+        pairs.  See docs/ARCHITECTURE.md sections 2-3."""
         from repro.core import pairwise
         return pairwise.pairwise_card(ops, pairs, backend=backend)
 
     @staticmethod
     def jaccard_matrix(bitmaps, *, backend=None) -> np.ndarray:
-        """(N, N) Jaccard similarity matrix: the all-pairs similarity
-        join, batched class-wise over all N*(N-1)/2 pairs."""
+        """(N, N) float64 Jaccard similarity matrix: the all-pairs
+        similarity join, batched class-wise over all N*(N-1)/2 pairs
+        (diagonal is 1.0; empty-vs-empty scores 1.0 by convention).
+        Complexity: O(container-type classes) dispatches regardless of
+        N.  For top-k neighbour queries use
+        ``repro.core.pairwise.SimilarityEngine`` instead -- it never
+        materializes the full matrix."""
         from repro.core import pairwise
         return pairwise.jaccard_matrix(bitmaps, backend=backend)
 
@@ -310,8 +334,15 @@ class RoaringBitmap:
     @staticmethod
     def or_many(bitmaps: list["RoaringBitmap"], *,
                 mesh=None) -> "RoaringBitmap":
-        """Wide union: one segmented-kernel dispatch for any K (one per
-        mesh shard when a multi-device ``mesh`` is given)."""
+        """Wide union (paper section 5.8, ``roaring_bitmap_or_many``).
+
+        Args: ``bitmaps`` any iterable of RoaringBitmap; ``mesh`` an
+        optional multi-device mesh (rows shard round-robin, partials
+        all-reduce with OR -- bit-identical to the 1-device plan).
+
+        Returns a new RoaringBitmap.  Complexity: one segmented-kernel
+        dispatch for any K after the planner's zero-copy / host fast
+        paths (docs/ARCHITECTURE.md section 3 has the full table)."""
         from repro.core import aggregate
         return aggregate.or_many(bitmaps, mesh=mesh)
 
@@ -319,8 +350,13 @@ class RoaringBitmap:
     def and_many(bitmaps: list["RoaringBitmap"], *,
                  mesh=None) -> "RoaringBitmap":
         """Wide intersection with cardinality-ascending key pruning and
-        empty-key early exit (sharded over ``mesh`` when given, with a
-        per-shard occupancy mask guarding the AND identity)."""
+        empty-key early exit at the top level (the paper's AND planning
+        generalized to K inputs).
+
+        Args as ``or_many``; the sharded path exchanges a per-shard
+        occupancy mask so row-less shards contribute the AND identity.
+        Returns a new RoaringBitmap; one dispatch for the dense
+        remainder.  See docs/ARCHITECTURE.md sections 3 and 5."""
         from repro.core import aggregate
         return aggregate.and_many(bitmaps, mesh=mesh)
 
@@ -328,7 +364,7 @@ class RoaringBitmap:
     def xor_many(bitmaps: list["RoaringBitmap"], *,
                  mesh=None) -> "RoaringBitmap":
         """Wide symmetric difference: values present in an odd number of
-        inputs."""
+        inputs.  Args/returns/complexity as ``or_many``."""
         from repro.core import aggregate
         return aggregate.xor_many(bitmaps, mesh=mesh)
 
@@ -336,16 +372,32 @@ class RoaringBitmap:
     def andnot_many(minuend: "RoaringBitmap",
                     subtrahends: list["RoaringBitmap"], *,
                     mesh=None) -> "RoaringBitmap":
-        """Difference chain ``a - (b1 | b2 | ...)`` as one fused plan (the
-        subtrahend union is never materialized)."""
+        """Difference chain ``a - (b1 | b2 | ...)`` as ONE fused plan:
+        the subtrahend union is never materialized (subtrahends OR into
+        VMEM scratch, ANDNOT + popcount fuse into finalization).
+
+        Args: ``minuend`` the kept bitmap, ``subtrahends`` the dropped
+        ones, ``mesh`` as in ``or_many`` (minuend replicated per shard).
+        Returns a new RoaringBitmap; one dispatch for the dense
+        remainder."""
         from repro.core import aggregate
         return aggregate.andnot_many(minuend, subtrahends, mesh=mesh)
 
     @staticmethod
     def threshold_many(bitmaps: list["RoaringBitmap"], t: int, *,
                        weights=None, mesh=None) -> "RoaringBitmap":
-        """T-occurrence query: values whose (optionally per-bitmap
-        weighted) occurrence count reaches ``t``."""
+        """T-occurrence query ("Threshold and Symmetric Functions over
+        Bitmaps", Kaser & Lemire): values whose occurrence count across
+        the inputs reaches ``t``.
+
+        Args: ``t`` runtime threshold (sweeps over the same inputs share
+        one compiled kernel); ``weights`` optional per-bitmap positive
+        int weights (shift-and-add into the bit-sliced counter circuit;
+        weight 1 degenerates to the unweighted plan); ``mesh`` as in
+        ``or_many`` (counters all-gather and add bit-sliced).
+
+        Returns a new RoaringBitmap; one dispatch for the dense
+        remainder regardless of K."""
         from repro.core import aggregate
         return aggregate.threshold_many(bitmaps, t, weights=weights,
                                         mesh=mesh)
@@ -357,6 +409,7 @@ class RoaringBitmap:
     def run_optimize(self) -> "RoaringBitmap":
         self.containers = [optimize(c) for c in self.containers]
         self._prefix = None                      # invalidate rank cache
+        self._version += 1
         return self
 
     def memory_bytes(self) -> int:

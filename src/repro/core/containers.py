@@ -338,6 +338,14 @@ def optimize(c: Container) -> Container:
     return c.to_bitset()
 
 
+def container_words64(c: Container) -> np.ndarray:
+    """Any container -> its (1024,) uint64 bitset-domain words (the
+    shared promotion step of the aggregate / pairwise / top-k planners)."""
+    if isinstance(c, BitsetContainer):
+        return c.words
+    return c.to_bitset().words
+
+
 def _as_array_or_bitset(c: Container) -> Container:
     """Normalize a run container to whichever dense form is cheaper for ops."""
     if isinstance(c, RunContainer):

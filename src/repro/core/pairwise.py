@@ -58,9 +58,10 @@ from repro.core.containers import (
     container_from_values, positions_to_bitset,
 )
 from repro.kernels import ops as kops
-from repro.kernels.ref import ARRAY_CAP, PAIR_OPS, WORDS
+from repro.kernels.ref import ARRAY_CAP, METRICS, PAIR_OPS, WORDS
 
-__all__ = ["pairwise_card", "jaccard_matrix", "merge_one", "OP_IDS"]
+__all__ = ["pairwise_card", "jaccard_matrix", "merge_one", "OP_IDS",
+           "METRICS", "SimilarityEngine"]
 
 OP_IDS = {o: i for i, o in enumerate(PAIR_OPS)}   # the kernels' row op ids
 
@@ -592,6 +593,251 @@ def _bb_counts(xs, ys, backend) -> np.ndarray:
         b64 = np.stack([y.words for y in ys[lo:hi]])
         out[lo:hi] = np.bitwise_count(a64 & b64).sum(axis=1)
     return out
+
+
+# ---------------------------------------------------------------------------
+# top-k similarity engine (device-resident candidate slab + pruning planner)
+# ---------------------------------------------------------------------------
+
+def _scores_host(inter, q_card, cards, metric: str) -> np.ndarray:
+    """Numpy twin of ``kernels.ref.similarity_scores``: float32 with the
+    SAME operation order, so host selection is bit-identical (including
+    tie ordering) to the fused device kernel."""
+    interf = np.asarray(inter).astype(np.float32)
+    qc = np.float32(q_card)
+    oc = np.asarray(cards).astype(np.float32)
+    if metric == "jaccard":
+        denom = qc + oc - interf
+    elif metric == "cosine":
+        denom = np.sqrt(qc * oc)
+    elif metric == "containment":
+        denom = np.broadcast_to(qc, oc.shape)
+    else:
+        raise ValueError(metric)
+    return np.divide(interf, denom, out=np.ones_like(interf),
+                     where=denom > 0)
+
+
+class SimilarityEngine:
+    """Top-k similarity joins against a fixed candidate set, one engine
+    dispatch per query (paper section 5.9 taken to its conclusion: not
+    even the scores round-trip through the host).
+
+    Construction promotes every candidate container to the bitset domain
+    ONCE into a candidate-major row slab over the global chunk-key set --
+    the layout ``kernels/topk_ops.similarity_topk`` consumes -- and keeps
+    a lazily-uploaded device copy, so the per-query work is one fused
+    score+select dispatch (kernel backends) or a pruned vectorized
+    popcount sweep (CPU).  Memory: 8 kB per candidate container (sparse
+    containers inflate to bitset rows; this is a query-serving cache, the
+    stored bitmaps keep their compressed kinds).
+
+    The CPU path is the *candidate-pruning planner* (the galloping/skip
+    analogue of paper section 4.2 lifted to the planner layer): candidate
+    scores are bounded above by evaluating the metric at
+    ``inter = min(|Q|, |C|)``, the k best bounds are scored exactly to
+    establish the running k-th score, and every candidate whose bound
+    cannot reach it is skipped without touching its postings.  The score
+    formula is evaluated in float32 with a fixed operation order on every
+    path (see ``kernels.ref.similarity_scores``), and both selectors
+    break ties toward the lower candidate index, so kernel and host
+    results are bit-identical -- the ``backend=`` switch can never change
+    an answer.  See docs/ARCHITECTURE.md for the module map.
+    """
+
+    def __init__(self, bitmaps):
+        bitmaps = list(bitmaps)
+        self.n = len(bitmaps)
+        self.cards = np.array([bm.cardinality for bm in bitmaps],
+                              np.int64)
+        if self.cards.size and int(self.cards.max()) >= 2**31:
+            # the kernel path carries cardinalities as int32; refuse to
+            # build rather than silently wrap on one backend
+            raise ValueError("candidate cardinality >= 2^31 unsupported")
+        keys = sorted({k for bm in bitmaps for k in bm.keys})
+        self.key_col = {k: i for i, k in enumerate(keys)}
+        self.n_keys = len(keys)
+        rows, row_col = [], []
+        starts = np.zeros(self.n + 1, np.int32)
+        for i, bm in enumerate(bitmaps):
+            for k, c in zip(bm.keys, bm.containers):
+                rows.append(C.container_words64(c))
+                row_col.append(self.key_col[k])
+            starts[i + 1] = len(rows)
+        self.rows = np.stack(rows) if rows else \
+            np.zeros((0, 1024), np.uint64)
+        self.row_col = np.asarray(row_col, np.int32)
+        self.starts = starts
+        seg = int(np.diff(starts).max()) if self.n else 1
+        self.jmax = 1 if seg <= 1 else 1 << (seg - 1).bit_length()
+        self._dev = None                         # lazy device upload
+
+    # -- query preparation ----------------------------------------------
+
+    def _query_words(self, query) -> np.ndarray:
+        """(C, 1024) uint64 host query rows over the global keys.
+        ``query`` is a candidate index (rows gathered from the cached
+        slab) or any RoaringBitmap (keys outside the candidate universe
+        carry no candidate rows and are dropped -- they cannot
+        intersect)."""
+        q64 = np.zeros((max(self.n_keys, 1), 1024), np.uint64)
+        if isinstance(query, (int, np.integer)):
+            s, e = int(self.starts[query]), int(self.starts[query + 1])
+            q64[self.row_col[s:e]] = self.rows[s:e]
+            return q64
+        for k, cont in zip(query.keys, query.containers):
+            col = self.key_col.get(k)
+            if col is not None:
+                q64[col] = C.container_words64(cont)
+        return q64
+
+    def _query_words_dev(self, query):
+        """(C, WORDS) uint32 DEVICE query block with minimal transfer:
+        a member query gathers its rows from the resident slab (nothing
+        crosses the host bridge); a bitmap query ships only its occupied
+        rows and scatters them into place on device."""
+        dev_rows, dev_col, _, _ = self._device()
+        nc = max(self.n_keys, 1)
+        zeros = jnp.zeros((nc, WORDS), jnp.uint32)
+        if isinstance(query, (int, np.integer)):
+            s, e = int(self.starts[query]), int(self.starts[query + 1])
+            if s == e:
+                return zeros
+            return zeros.at[dev_col[s:e]].set(dev_rows[s:e])
+        cols, rows = [], []
+        for k, cont in zip(query.keys, query.containers):
+            col = self.key_col.get(k)
+            if col is not None:
+                cols.append(col)
+                rows.append(C.container_words64(cont))
+        if not cols:
+            return zeros
+        stack = np.stack(rows).view(np.uint32).reshape(-1, WORDS)
+        return zeros.at[jnp.asarray(np.asarray(cols, np.int32))] \
+            .set(jnp.asarray(stack))
+
+    def _device(self):
+        if self._dev is None:
+            self._dev = (
+                jnp.asarray(self.rows.view(np.uint32)
+                            .reshape(-1, WORDS)) if self.rows.size else
+                jnp.zeros((1, WORDS), jnp.uint32),
+                jnp.asarray(self.row_col if self.row_col.size else
+                            np.zeros(1, np.int32)),
+                jnp.asarray(self.starts),
+                jnp.asarray(self.cards.astype(np.int32)),
+            )
+        return self._dev
+
+    # -- the query surface ----------------------------------------------
+
+    def topk(self, query, k: int, metric: str = "jaccard", *,
+             backend: str | None = None
+             ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Top-k most similar candidates to ``query``.
+
+        query:  candidate index (int; excluded from its own result) or a
+                RoaringBitmap.
+        k:      results wanted; clamped to the candidate count.
+        metric: "jaccard" | "cosine" | "containment" (all derived from
+                the AND cardinality by inclusion-exclusion).
+        backend: kernel override; None = fused kernel on TPU, pruned
+                host sweep on CPU.  Results are bit-identical either way.
+
+        Returns (idx (k',) int64, score (k',) float32, inter (k',) int64)
+        best-first; ties at equal score order by ascending index.
+        Complexity: one dispatch over the resident slab (kernel) or
+        O(rows of unpruned candidates) popcounts (host).
+        """
+        if metric not in METRICS:
+            raise ValueError(metric)
+        if isinstance(query, (int, np.integer)):
+            exclude = int(query)
+            if not 0 <= exclude < self.n:
+                raise IndexError(f"candidate index {exclude} out of "
+                                 f"range [0, {self.n})")
+            qc = int(self.cards[exclude])
+        else:
+            exclude = None
+            qc = query.cardinality
+        n_cand = self.n - (1 if exclude is not None else 0)
+        k = min(int(k), n_cand)
+        if k <= 0:
+            return (np.zeros(0, np.int64), np.zeros(0, np.float32),
+                    np.zeros(0, np.int64))
+        if qc >= 2**31:                          # int32 on the kernel path
+            raise ValueError("query cardinality >= 2^31 unsupported")
+        if self.rows.shape[0] == 0:              # all-empty candidates
+            score = _scores_host(np.zeros(self.n, np.int64), qc,
+                                 self.cards, metric)
+            if exclude is not None:
+                score[exclude] = np.float32(-1.0)
+            order = np.argsort(-score, kind="stable")[:k]
+            return (order.astype(np.int64), score[order],
+                    np.zeros(k, np.int64))
+        if _prefer_kernel(backend):
+            dev_rows, dev_col, dev_starts, dev_cards = self._device()
+            idx, score, inter = kops.similarity_topk(
+                dev_rows, dev_col, dev_starts,
+                self._query_words_dev(query),
+                qc, dev_cards, metric=metric, k=k,
+                jmax=self.jmax,
+                exclude=-1 if exclude is None else exclude,
+                backend=backend)
+            return (np.asarray(idx).astype(np.int64),
+                    np.asarray(score),
+                    np.asarray(inter).astype(np.int64))
+        return self._topk_host(self._query_words(query), qc, k, metric,
+                               exclude)
+
+    # -- pruned host path -----------------------------------------------
+
+    def _host_inter(self, sel: np.ndarray, q64: np.ndarray) -> np.ndarray:
+        """Exact intersection cardinalities of the selected candidates:
+        gather their cached rows, AND against the query's key columns,
+        popcount, segment-sum per candidate."""
+        out = np.zeros(sel.size, np.int64)
+        lens = (self.starts[sel + 1] - self.starts[sel]).astype(np.int64)
+        total = int(lens.sum())
+        if total == 0:
+            return out
+        offs = np.repeat(np.cumsum(lens) - lens, lens)
+        ridx = np.arange(total) - offs + np.repeat(
+            self.starts[sel].astype(np.int64), lens)
+        per = np.bitwise_count(
+            self.rows[ridx] & q64[self.row_col[ridx]]).sum(axis=1)
+        np.add.at(out, np.repeat(np.arange(sel.size), lens),
+                  per.astype(np.int64))
+        return out
+
+    def _topk_host(self, q64, qc, k, metric, exclude):
+        """The pruning planner: score upper bounds from cardinalities
+        alone (metric at ``inter = min(|Q|, |C|)`` -- monotone in inter,
+        so a true float32 bound), exact-score the k best bounds to pin
+        the running k-th score, and skip every candidate whose bound
+        falls strictly below it."""
+        ub = _scores_host(np.minimum(qc, self.cards), qc, self.cards,
+                          metric)
+        if exclude is not None:
+            ub[exclude] = np.float32(-1.0)
+        order_ub = np.argsort(-ub, kind="stable")
+        seeds = order_ub[:k]
+        score = np.full(self.n, np.float32(-1.0), np.float32)
+        inter = np.zeros(self.n, np.int64)
+        inter[seeds] = self._host_inter(seeds, q64)
+        score[seeds] = _scores_host(inter[seeds], qc, self.cards[seeds],
+                                    metric)
+        tau = score[seeds].min()                 # running k-th score
+        rest = order_ub[k:]
+        survivors = rest[ub[rest] >= tau]        # bound < tau: skipped
+        if survivors.size:
+            inter[survivors] = self._host_inter(survivors, q64)
+            score[survivors] = _scores_host(
+                inter[survivors], qc, self.cards[survivors], metric)
+        if exclude is not None:
+            score[exclude] = np.float32(-1.0)
+        order = np.argsort(-score, kind="stable")[:k]
+        return order.astype(np.int64), score[order], inter[order]
 
 
 # ---------------------------------------------------------------------------

@@ -21,6 +21,9 @@ logical-op+popcount kernel, then `repack()` re-derives the memory-optimal
 kinds -- mirroring roaring_bitmap_run_optimize.  Keys are aligned with a
 static-capacity sorted merge.  Count-only variants never materialize results
 (paper section 5.9).
+
+docs/ARCHITECTURE.md section 2 lists this class's dispatch bounds next
+to the host planners'.
 """
 
 from __future__ import annotations
@@ -70,8 +73,28 @@ class RoaringTensor:
         return self.keys.shape[1]
 
     def cardinality(self) -> jax.Array:
-        """(B,) total cardinalities."""
+        """(B,) int32 total cardinalities -- a pure reduction over the
+        tracked per-container cards (the paper tracks them; so do we),
+        O(B * C), jit-able, no kernel dispatch."""
         return jnp.where(self.kinds > 0, self.cards, 0).sum(axis=1)
+
+    def take(self, idx) -> "RoaringTensor":
+        """Device gather of batch rows: ``take(idx).keys[i] ==
+        keys[idx[i]]`` for every component array.  jit-able; rows may
+        repeat, so index-driven pair joins never bridge through host
+        lists (see ``pairwise_card``).  Concrete out-of-range indices
+        raise IndexError (jnp.take would silently fill); traced indices
+        cannot be validated and are the caller's contract."""
+        idx = jnp.asarray(idx, jnp.int32)
+        if not isinstance(idx, jax.core.Tracer) and idx.size:
+            iv = np.asarray(idx)
+            if int(iv.min()) < 0 or int(iv.max()) >= self.batch:
+                raise IndexError(
+                    f"batch index out of range [0, {self.batch}): "
+                    f"{int(iv.min())}..{int(iv.max())}")
+        return RoaringTensor(*(jnp.take(x, idx, axis=0)
+                               for x in (self.keys, self.kinds, self.cards,
+                                         self.aux, self.slab)))
 
     def packed_nbytes(self) -> jax.Array:
         """(B,) int32: serialized footprint implied by the container kinds
@@ -257,13 +280,30 @@ class RoaringTensor:
                                       backend=backend).reshape(b, co)
         return cards.sum(axis=1)
 
-    def pairwise_card(self, other: "RoaringTensor", ops,
+    def pairwise_card(self, other: "RoaringTensor", ops, *,
+                      lhs_idx=None, rhs_idx=None,
                       backend: str | None = None) -> jax.Array:
-        """(B,) counts with a per-batch-row op: ``ops`` is one op name or
-        a length-B sequence; the whole batch rides ONE mixed-op kernel
+        """Batched pair counts with a per-pair op, ONE mixed-op kernel
         dispatch (op id per row -- the device twin of the host pairwise
-        planner's bitset class)."""
-        outk, aw, bw, _, _ = self._align(other)
+        planner's bitset class).
+
+        Args: ``ops`` is one op name ("and"|"or"|"xor"|"andnot") or a
+        length-P sequence; ``lhs_idx`` / ``rhs_idx`` are optional (P,)
+        index arrays picking pair rows from ``self`` / ``other`` ON
+        DEVICE (``jnp.take``; no host pair-list bridge), so arbitrary
+        similarity-join pair sets -- including repeated rows -- run
+        against resident tensors.  Omitted, pairs align row-by-row
+        (P = B, requires equal batches).
+
+        Returns (P,) int32 counts.  Complexity: one gather + one fused
+        AND/popcount dispatch over P * (Ca + Cb) container slots.  See
+        docs/ARCHITECTURE.md (paper sections 4.2-4.5 / 5.9)."""
+        a = self if lhs_idx is None else self.take(lhs_idx)
+        b_t = other if rhs_idx is None else other.take(rhs_idx)
+        if a.batch != b_t.batch:
+            raise ValueError(f"pair row counts differ: {a.batch} != "
+                             f"{b_t.batch} (use lhs_idx/rhs_idx)")
+        outk, aw, bw, _, _ = a._align(b_t)
         b, co = outk.shape
         if isinstance(ops, str):
             opids = jnp.full((b,), PAIR_OPS.index(ops), jnp.int32)
@@ -271,7 +311,7 @@ class RoaringTensor:
             opids = jnp.asarray([PAIR_OPS.index(o) for o in ops],
                                 jnp.int32)
             if opids.shape[0] != b:
-                raise ValueError(f"need one op per batch row: "
+                raise ValueError(f"need one op per pair row: "
                                  f"{opids.shape[0]} != {b}")
         cards = kops.bitset_pair_card(
             aw.reshape(b * co, WORDS), bw.reshape(b * co, WORDS),
@@ -279,6 +319,11 @@ class RoaringTensor:
         return cards.sum(axis=1)
 
     def and_card(self, other) -> jax.Array:
+        """(B,) intersection cardinalities, row i vs row i: one count-only
+        mixed-op dispatch, result words never reach HBM (paper section
+        5.9).  ``or_card``/``xor_card``/``andnot_card`` are the
+        inclusion-exclusion siblings; arbitrary pair sets go through
+        ``pairwise_card(lhs_idx=, rhs_idx=)``."""
         return self._binary_card(other, "and")
 
     def or_card(self, other) -> jax.Array:
@@ -291,6 +336,9 @@ class RoaringTensor:
         return self._binary_card(other, "andnot")
 
     def jaccard(self, other) -> jax.Array:
+        """(B,) float32 per-row Jaccard similarities from one count-only
+        dispatch (empty-vs-empty rows score 1.0, matching the host
+        convention)."""
         inter = self.and_card(other).astype(jnp.float32)
         union = (self.cardinality() + other.cardinality()).astype(jnp.float32) \
             - inter
@@ -301,7 +349,10 @@ class RoaringTensor:
     # ====================================================================
 
     def contains(self, queries: jax.Array) -> jax.Array:
-        """(B, Q) uint32 queries -> (B, Q) bool."""
+        """Batched membership (paper section 5.6): (B, Q) uint32 queries
+        -> (B, Q) bool.  Jit-able, no kernel dispatch: a key binary
+        search then the per-kind probe (bitset `bt`, array binary
+        search, run-start binary search), all vectorized over (B, Q)."""
         hi = (queries >> 16).astype(jnp.int32)
         lo = (queries & 0xFFFF).astype(jnp.int32)
         ks = jnp.where(self.kinds > 0, self.keys, SENTINEL)

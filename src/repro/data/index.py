@@ -11,11 +11,24 @@ from repro.core import RoaringBitmap
 
 
 class InvertedIndex:
+    """Term -> document-id postings on Roaring bitmaps.
+
+    Every query routes through a batched planner: the boolean surface
+    (``query_and`` .. ``query_andnot``) plans ONE segmented-kernel
+    dispatch per query via ``repro.core.aggregate``; the similarity
+    surface (``similar``) runs on a cached ``SimilarityEngine`` slab,
+    one fused score+select dispatch per query on kernel backends.  See
+    docs/ARCHITECTURE.md for the paper-section -> module map."""
+
     def __init__(self):
         self.postings: dict[str, RoaringBitmap] = {}
         self.n_docs = 0
+        # cached (snapshot, terms, SimilarityEngine); the snapshot
+        # revalidates against direct postings edits -- see _sim_engine
+        self._sim = None
 
     def add_document(self, doc_id: int, terms) -> None:
+        self._sim = None                          # postings changed
         self.n_docs = max(self.n_docs, doc_id + 1)
         for t in set(terms):
             bm = self.postings.get(t)
@@ -25,6 +38,7 @@ class InvertedIndex:
 
     def build(self, docs: list[list[str]]) -> "InvertedIndex":
         # columnar build: term -> sorted doc ids, one from_values each
+        self._sim = None
         by_term: dict[str, list[int]] = {}
         for i, terms in enumerate(docs):
             for t in set(terms):
@@ -36,6 +50,7 @@ class InvertedIndex:
         return self
 
     def optimize(self):
+        self._sim = None
         for bm in self.postings.values():
             bm.run_optimize()
         return self
@@ -48,6 +63,9 @@ class InvertedIndex:
     # wide-aggregation planner (repro.core.aggregate): one fused kernel
     # dispatch per query regardless of the number of terms.
     def query_and(self, *terms) -> RoaringBitmap:
+        """Documents matching ALL ``terms``: one fused dispatch with
+        cardinality-ascending pruning (docs/ARCHITECTURE.md section 3).
+        Unknown terms are empty postings, so the result is empty."""
         return RoaringBitmap.and_many([self._get(t) for t in terms])
 
     def query_or(self, *terms) -> RoaringBitmap:
@@ -76,38 +94,57 @@ class InvertedIndex:
     def jaccard(self, a: str, b: str) -> float:
         return self._get(a).jaccard(self._get(b))
 
-    def similar(self, term: str, top_k: int = 10,
-                metric: str = "jaccard") -> list[tuple[str, float]]:
-        """Top-k terms most similar to ``term`` -- a similarity join over
-        every posting list, planned by the batched pairwise engine as one
-        AND-count dispatch per container-type class instead of one
-        per pair ("beyond unions and intersections", Kaser & Lemire).
+    def _sim_engine(self):
+        """Cached similarity engine over every posting list, rebuilt
+        lazily after any postings mutation.  Mutations through the index
+        API drop the cache eagerly; direct edits of the public
+        ``postings`` dict (replaced bitmaps, new terms, point updates)
+        are caught by an O(terms) snapshot of term names plus each
+        bitmap's identity, mutation counter (``RoaringBitmap._version``,
+        bumped by every add/remove/run_optimize), and cardinality.
+        Only hand-assembled aliasing -- a DIFFERENT bitmap object
+        recycled at the same address with equal version and cardinality
+        -- could escape revalidation."""
+        snap = tuple((t, id(bm), bm._version, bm.cardinality)
+                     for t, bm in self.postings.items())
+        if self._sim is None or self._sim[0] != snap:
+            from repro.core.pairwise import SimilarityEngine
+            terms = list(self.postings)
+            self._sim = (snap, terms,
+                         SimilarityEngine(self.postings[t] for t in terms))
+        return self._sim[1], self._sim[2]
 
-        ``metric`` is "jaccard" (|A∩B| / |A∪B|), "cosine"
+    def similar(self, term: str, top_k: int = 10,
+                metric: str = "jaccard", *,
+                backend: str | None = None) -> list[tuple[str, float]]:
+        """Top-k terms most similar to ``term``: one fused score+select
+        kernel dispatch over a device-resident candidate slab (kernel
+        backends) or a bound-pruned vectorized sweep (CPU) -- see
+        ``repro.core.pairwise.SimilarityEngine`` and docs/ARCHITECTURE.md.
+        The slab is cached across queries and rebuilt after mutations.
+
+        Args: ``term`` query term (an unknown term queries as an empty
+        posting list); ``top_k`` results wanted (clamped to the term
+        count); ``metric`` is "jaccard" (|A∩B| / |A∪B|), "cosine"
         (|A∩B| / sqrt(|A||B|)) or "containment" (|A∩B| / |A|, the query
-        side).  Returns [(term, score)] sorted best-first."""
-        if metric not in ("jaccard", "cosine", "containment"):
+        side); ``backend`` forces the kernel ("pallas"/"ref") or host
+        (CPU default) path -- results are bit-identical either way.
+
+        Returns [(term, score)] best-first; score ties order by index
+        insertion order.  Complexity: one dispatch per query; host path
+        skips every candidate whose cardinality bound cannot reach the
+        running k-th score."""
+        from repro.core.pairwise import METRICS
+        if metric not in METRICS:
             raise ValueError(metric)
-        q = self._get(term)
-        others = [t for t in self.postings if t != term]
-        if not others:
-            return []
-        pairs = [(q, self.postings[t]) for t in others]
-        inter = RoaringBitmap.pairwise_card("and", pairs) \
-            .astype(np.float64)
-        qc = float(q.cardinality)
-        oc = np.array([self.postings[t].cardinality for t in others],
-                      np.float64)
-        if metric == "jaccard":
-            denom = qc + oc - inter
-        elif metric == "cosine":
-            denom = np.sqrt(qc * oc)
+        terms, eng = self._sim_engine()
+        if term in self.postings:
+            query = terms.index(term)
         else:
-            denom = np.full_like(oc, qc)
-        score = np.divide(inter, denom, out=np.ones_like(inter),
-                          where=denom > 0)
-        order = np.argsort(-score, kind="stable")[:top_k]
-        return [(others[i], float(score[i])) for i in order.tolist()]
+            query = self._get(term)
+        idx, score, _ = eng.topk(query, top_k, metric, backend=backend)
+        return [(terms[i], float(s)) for i, s in zip(idx.tolist(),
+                                                     score.tolist())]
 
     def memory_bytes(self) -> int:
         return sum(bm.memory_bytes() for bm in self.postings.values())

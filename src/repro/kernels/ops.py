@@ -21,6 +21,7 @@ from repro.kernels import harley_seal as _hs
 from repro.kernels import pair_ops as _pair_ops
 from repro.kernels import ref
 from repro.kernels import segment_ops as _segment_ops
+from repro.kernels import topk_ops as _topk_ops
 
 Backend = str
 _DEFAULT: Backend = "auto"
@@ -148,6 +149,28 @@ def bitset_pair_card(a, b, opids, *, backend: Backend | None = None):
 
 _ref_bitset_pair_op = jax.jit(ref.bitset_pair_op)
 _ref_bitset_pair_card = jax.jit(ref.bitset_pair_card)
+
+
+def similarity_topk(rows, row_col, starts, q_words, q_card, cards, *,
+                    metric: str, k: int, jmax: int, exclude=-1,
+                    backend: Backend | None = None):
+    """Fused similarity top-k: score a query against T device-resident
+    candidates and select the best k in ONE dispatch (score + select never
+    leave the device; only k indices/scores return).  See
+    kernels/topk_ops.py for the layout and docs/ARCHITECTURE.md for where
+    this sits in the paper map."""
+    exclude = jnp.asarray(exclude, jnp.int32)
+    if _use_pallas(backend):
+        return _topk_ops.similarity_topk(rows, row_col, starts, q_words,
+                                         q_card, cards, exclude,
+                                         metric=metric, k=k, jmax=jmax)
+    return _ref_similarity_topk(rows, row_col, starts, q_words,
+                                jnp.asarray(q_card, jnp.int32),
+                                cards, exclude, metric=metric, k=k)
+
+
+_ref_similarity_topk = jax.jit(ref.similarity_topk,
+                               static_argnames=("metric", "k"))
 
 
 _ref_segment_reduce = jax.jit(

@@ -208,6 +208,84 @@ def array_bitset_probe(vals: jax.Array, card: jax.Array,
     return mask, mask.sum(axis=-1).astype(jnp.int32)
 
 
+METRICS = ("jaccard", "cosine", "containment")   # index == metric id
+
+
+def similarity_scores(inter: jax.Array, q_card: jax.Array,
+                      cards: jax.Array, metric: str) -> jax.Array:
+    """Similarity scores from intersection cardinalities, float32.
+
+    All three metrics derive from the AND cardinality by inclusion-
+    exclusion ("beyond unions and intersections", Kaser & Lemire):
+    jaccard = |A∩B| / |A∪B|, cosine = |A∩B| / sqrt(|A||B|),
+    containment = |A∩B| / |A| (the query side).  A zero denominator
+    scores 1.0 (the host convention).  The formula is evaluated in
+    float32 with a fixed operation order so the device kernel, the jnp
+    oracle, and the numpy host twin (core.pairwise._scores_host) produce
+    bit-identical scores -- top-k tie ordering depends on it."""
+    interf = inter.astype(jnp.float32)
+    qc = q_card.astype(jnp.float32)
+    oc = cards.astype(jnp.float32)
+    if metric == "jaccard":
+        denom = qc + oc - interf
+    elif metric == "cosine":
+        denom = jnp.sqrt(qc * oc)
+    elif metric == "containment":
+        denom = jnp.broadcast_to(qc, oc.shape)
+    else:
+        raise ValueError(metric)
+    return jnp.where(denom > 0, interf / denom, jnp.float32(1.0))
+
+
+def topk_select(score: jax.Array, inter: jax.Array,
+                k: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Iterative first-max top-k selection (the threshold-refinement
+    pass): k rounds of argmax, ties resolved to the LOWEST index --
+    exactly the order of a stable host argsort on the negated scores.
+    Returns (idx (k,) int32, score (k,) float32, inter (k,) int32)."""
+    idxs, scores, inters = [], [], []
+    for _ in range(k):
+        j = jnp.argmax(score)                   # first occurrence wins
+        idxs.append(j.astype(jnp.int32))
+        scores.append(score[j])
+        inters.append(inter[j].astype(jnp.int32))
+        score = score.at[j].set(jnp.float32(-2.0))
+    return jnp.stack(idxs), jnp.stack(scores), jnp.stack(inters)
+
+
+def similarity_topk(rows: jax.Array, row_col: jax.Array, starts: jax.Array,
+                    q_words: jax.Array, q_card: jax.Array, cards: jax.Array,
+                    exclude: jax.Array, *, metric: str, k: int
+                    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused similarity scoring + top-k selection oracle (one jit).
+
+    rows:    (N, WORDS) uint32 candidate container rows, candidate-major
+             (rows of candidate t occupy starts[t]:starts[t+1]).
+    row_col: (N,) int32 column of each row's chunk key in ``q_words``.
+    starts:  (T + 1,) int32 per-candidate row offsets.
+    q_words: (C, WORDS) uint32 query containers in bitset domain, one row
+             per global chunk key (zeros where the query has no container).
+    q_card / cards: query / per-candidate (T,) cardinalities, int32.
+    exclude: runtime int32 candidate index whose score is forced to -1
+             (the query itself in an index join); -1 excludes nothing.
+
+    Returns (idx (k,) int32, score (k,) float32, inter (k,) int32),
+    best-first, ties at equal score resolved to the lowest index."""
+    rows = rows.astype(jnp.uint32)
+    t = starts.shape[0] - 1
+    per_row = popcount_words(rows & q_words[row_col])
+    # per-segment sum, NOT a global prefix: the grand total of
+    # intersection bits across all candidates can overflow int32 even
+    # though each candidate's own count cannot
+    seg_id = jnp.searchsorted(starts[1:], jnp.arange(per_row.shape[0]),
+                              side="right")
+    inter = jax.ops.segment_sum(per_row, seg_id, num_segments=t) \
+        .astype(jnp.int32)
+    score = similarity_scores(inter, q_card, cards, metric)
+    score = jnp.where(jnp.arange(t) == exclude, jnp.float32(-1.0), score)
+    return topk_select(score, inter, k)
+
+
 def merge_sorted(a_vals: jax.Array, a_card: jax.Array,
                  b_vals: jax.Array, b_card: jax.Array,
                  cap: int = 2 * ARRAY_CAP) -> tuple[jax.Array, jax.Array]:

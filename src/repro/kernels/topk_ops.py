@@ -1,0 +1,172 @@
+"""Device-resident fused top-k similarity kernel.
+
+The paper's fast-count argument (section 5.9: the logical op and the
+popcount must happen while the words sit in vector registers) extends to
+similarity joins: the *scores* never need to leave the device either.
+This module fuses the whole ``InvertedIndex.similar`` hot path --
+AND-cardinality scoring of a query bitmap against T candidate bitmaps,
+metric evaluation (jaccard / cosine / containment by inclusion-exclusion
+over the AND count), and the k-selection -- into ONE engine dispatch, so
+only k indices and k scores ever cross back to the host.
+
+Layout (prepared once by ``core.pairwise.SimilarityEngine`` and cached on
+device -- the serving contract):
+
+  * ``rows``    (N, WORDS) uint32: every candidate container promoted to
+    the bitset domain, candidate-major (candidate t owns rows
+    ``starts[t]:starts[t+1]``; ragged, described by scalar-prefetched
+    offsets exactly like ``segment_ops``).
+  * ``row_col`` (N,) int32: which global chunk key each row belongs to --
+    the scoring step ANDs row r with ``q_words[row_col[r]]``, so a query
+    that lacks the key contributes zero automatically.
+  * ``q_words`` (C, WORDS) uint32: the query's containers scattered over
+    the global key columns.  This is the ONLY per-query device transfer
+    (C * 8 kB); the candidate slab stays resident.
+
+Two Pallas stages compose inside one jit (one XLA dispatch at runtime):
+
+  1. ``_score_kernel`` -- grid (T, jmax): per-row AND + Harley-Seal
+     popcount accumulates each candidate's intersection cardinality in a
+     VMEM scalar (the revisited-output pattern of ``segment_ops``); the
+     segment's last step evaluates the float32 metric score.
+  2. ``_select_kernel`` -- a threshold-refinement pass: k rounds of
+     (max, first-index-of-max) over the score vector held in VMEM,
+     masking each winner.  Ties at equal score resolve to the LOWEST
+     candidate index -- bit-identical to a stable host argsort of the
+     negated scores, which is what the host planner runs off-device.
+
+``kernels.ref.similarity_topk`` is the pure-jnp oracle; the score formula
+itself lives in ``kernels.ref.similarity_scores`` with a fixed float32
+operation order shared by the kernel, the oracle, and the numpy host twin
+so all three paths select identically.  See docs/ARCHITECTURE.md
+(sections 4.2/5.9 row of the paper map).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.harley_seal import harley_seal_reduce
+from repro.kernels.ref import METRICS, WORDS, similarity_scores
+
+
+def _score_kernel(starts_ref, col_ref, cards_ref, misc_ref, row_ref, q_ref,
+                  score_ref, inter_ref, acc_ref, *, metric, jmax):
+    t = pl.program_id(0)
+    j = pl.program_id(1)
+    seg_len = starts_ref[t + 1] - starts_ref[t]
+    x = jnp.where(j < seg_len, row_ref[...] & q_ref[...], jnp.uint32(0))
+    pc = harley_seal_reduce(x.reshape(1, WORDS // 16, 16))[:, None]
+
+    @pl.when(j == 0)
+    def _():
+        acc_ref[...] = pc
+
+    @pl.when(j > 0)
+    def _():
+        acc_ref[...] = acc_ref[...] + pc
+
+    @pl.when(j == jmax - 1)
+    def _():
+        inter = acc_ref[0, 0]
+        # THE score formula (ref.similarity_scores): one definition
+        # serves the oracle, the kernel, and (via its numpy twin) the
+        # host planner, so tie order can never drift between paths
+        s = similarity_scores(inter, misc_ref[0], cards_ref[t], metric)
+        s = jnp.where(t == misc_ref[1], jnp.float32(-1.0), s)
+        score_ref[...] = s.reshape(1, 1)
+        inter_ref[...] = inter.reshape(1, 1)
+
+
+def _select_kernel(score_ref, inter_ref, idx_ref, sco_ref, int_ref, *, k):
+    """Threshold-refinement k-selection: k rounds of (max, first index of
+    max) with the winner masked out -- first-max-wins reproduces the
+    stable host argsort tie order (lowest index first)."""
+    s = score_ref[...]                           # (1, T)
+    n = s.shape[1]
+    cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    for i in range(k):
+        m = jnp.max(s)
+        j = jnp.min(jnp.where(s == m, cols, n))
+        hit = cols == j
+        idx_ref[0, i] = j
+        sco_ref[0, i] = m
+        int_ref[0, i] = jnp.sum(jnp.where(hit, inter_ref[...], 0))
+        s = jnp.where(hit, jnp.float32(-2.0), s)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("metric", "k", "jmax", "interpret"))
+def similarity_topk(rows: jax.Array, row_col: jax.Array, starts: jax.Array,
+                    q_words: jax.Array, q_card: jax.Array, cards: jax.Array,
+                    exclude: jax.Array = -1, *, metric: str, k: int,
+                    jmax: int, interpret: bool | None = None
+                    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused score + k-select over a device-resident candidate slab.
+
+    rows:    (N, WORDS) uint32 candidate container rows, candidate-major.
+    row_col: (N,) int32 global-key column of each row (indexes q_words).
+    starts:  (T + 1,) int32 per-candidate row offsets (ragged segments).
+    q_words: (C, WORDS) uint32 query bitset rows over the global keys.
+    q_card:  scalar int32 query cardinality; cards: (T,) int32.
+    exclude: runtime int32 candidate index scored -1 (-1: none).
+    metric:  "jaccard" | "cosine" | "containment" (static).
+    k, jmax: static selection size / max rows per candidate.
+
+    Returns (idx (k,) int32, score (k,) float32, inter (k,) int32),
+    best-first, ties to the lowest index.  One dispatch end-to-end.
+    """
+    assert metric in METRICS, metric
+    assert k >= 1 and jmax >= 1
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n = rows.shape[0]
+    t = starts.shape[0] - 1
+    starts = starts.astype(jnp.int32)
+    misc = jnp.stack([jnp.asarray(q_card, jnp.int32),
+                      jnp.asarray(exclude, jnp.int32)])
+
+    def row_index(ti, j, st, col, cd, ms):
+        return (jnp.minimum(st[ti] + j, n - 1), 0)
+
+    def q_index(ti, j, st, col, cd, ms):
+        return (col[jnp.minimum(st[ti] + j, n - 1)], 0)
+
+    score, inter = pl.pallas_call(
+        functools.partial(_score_kernel, metric=metric, jmax=jmax),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=(t, jmax),
+            in_specs=[pl.BlockSpec((1, WORDS), row_index),
+                      pl.BlockSpec((1, WORDS), q_index)],
+            out_specs=[
+                pl.BlockSpec((1, 1), lambda ti, j, st, col, cd, ms: (ti, 0)),
+                pl.BlockSpec((1, 1), lambda ti, j, st, col, cd, ms: (ti, 0)),
+            ],
+            scratch_shapes=[pltpu.VMEM((1, 1), jnp.int32)],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((t, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((t, 1), jnp.int32)],
+        interpret=interpret,
+    )(starts, row_col.astype(jnp.int32), cards.astype(jnp.int32), misc,
+      rows.astype(jnp.uint32), q_words.astype(jnp.uint32))
+
+    idx, sco, intr = pl.pallas_call(
+        functools.partial(_select_kernel, k=k),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((1, t), lambda i: (0, 0)),
+                  pl.BlockSpec((1, t), lambda i: (0, 0))],
+        out_specs=[pl.BlockSpec((1, k), lambda i: (0, 0)),
+                   pl.BlockSpec((1, k), lambda i: (0, 0)),
+                   pl.BlockSpec((1, k), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((1, k), jnp.int32),
+                   jax.ShapeDtypeStruct((1, k), jnp.float32),
+                   jax.ShapeDtypeStruct((1, k), jnp.int32)],
+        interpret=interpret,
+    )(score.reshape(1, t), inter.reshape(1, t))
+    return idx[0], sco[0], intr[0]
