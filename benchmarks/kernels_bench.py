@@ -432,3 +432,103 @@ def wide_ops_sharded(rows, quick: bool = False) -> list[dict]:
                 r["n_devices"] = n_dev
             records += recs
     return records
+
+
+# ---------------------------------------------------------------------------
+# query_throughput suite: the continuous query server's coalesced
+# multi-query dispatch vs a sequential per-query loop on the same kernel
+# backend -- the PR 6 serving contract (>= 3x at 1024 concurrent).
+# ---------------------------------------------------------------------------
+
+def _serving_postings(n_terms: int = 64, seed: int = 29):
+    """Dense single-chunk bitset postings: every boolean plan carries
+    kernel segments (no host fast-path short circuits), so the bench
+    isolates dispatch amortization -- the thing coalescing buys."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for r in range(n_terms):
+        size = min(50_000, int(6000 + 40_000 / (r + 1) ** 0.7))
+        vals = rng.choice(1 << 16, size, replace=False).astype(np.uint32)
+        out[f"t{r}"] = RoaringBitmap.from_values(vals)
+    return out
+
+
+def _serving_queries(n_queries: int, n_terms: int, seed: int = 31):
+    """Deterministic mixed stream: all five boolean classes plus 1/16
+    similarity top-k (the production mix named in docs/ARCHITECTURE.md's
+    serving section)."""
+    from repro.serve import Query
+
+    rng = np.random.default_rng(seed)
+    names = [f"t{i}" for i in range(n_terms)]
+    queries = []
+    for i in range(n_queries):
+        if i % 16 == 15:
+            queries.append(Query.similar(
+                names[int(rng.integers(n_terms))], k=10))
+            continue
+        kind = ("and", "or", "xor", "andnot",
+                "threshold")[int(rng.integers(5))]
+        terms = tuple(names[j] for j in rng.choice(
+            n_terms, int(rng.integers(2, 6)), replace=False))
+        if kind == "threshold":
+            queries.append(Query.threshold(
+                terms, int(rng.integers(1, len(terms) + 1))))
+        else:
+            queries.append(Query(kind, terms))
+    return queries
+
+
+def query_throughput(rows, quick: bool = False) -> list[dict]:
+    """Server-coalesced dispatch vs sequential per-query kernel loop.
+
+    ``k`` is the concurrency (queued queries per tick).  Both sides run
+    the SAME "ref" kernel backend and the same warm similarity slab; the
+    seed side executes one plan per query (one dispatch each), the wide
+    side submits everything to a ``QueryServer`` and drains it (one
+    dispatch per op class per tick).  ``correct`` asserts the server's
+    results are bit-identical to the sequential loop.  The acceptance
+    contract lives in the k=1024 row: speedup >= 3x."""
+    from repro.core import aggregate
+    from repro.data.index import InvertedIndex
+    from repro.serve import QueryServer
+
+    n_terms = 64
+    ix = InvertedIndex()
+    ix.postings = _serving_postings(n_terms)
+    ix.n_docs = 1 << 16
+    terms_list, eng = ix._sim_engine()       # warm slab: serving contract
+    records = []
+    concs = (64,) if quick else (1, 64, 1024)
+    repeats = 3 if quick else 5
+    for conc in concs:
+        queries = _serving_queries(conc, n_terms)
+
+        def sequential(queries=queries):
+            out = []
+            for q in queries:
+                if q.kind == "similar":
+                    idx, score, _ = eng.topk(
+                        terms_list.index(q.terms[0]), q.k, q.metric,
+                        backend="ref")
+                    out.append([(terms_list[i], float(s))
+                                for i, s in zip(idx.tolist(),
+                                                score.tolist())])
+                else:
+                    plan = aggregate.plan_wide(
+                        q.kind, [ix._get(t) for t in q.terms], q.t,
+                        q.weights, backend="ref")
+                    out.append(aggregate._finish(plan, "ref", None))
+            return out
+
+        def served(queries=queries, conc=conc):
+            srv = QueryServer(ix, backend="ref", max_batch=conc,
+                              max_queue=conc)
+            tickets = [srv.submit(q) for q in queries]
+            srv.run_until_idle()
+            return [t.result.value for t in tickets]
+
+        records += _run_benches(rows, "server",
+                                [("query_throughput", sequential, served)],
+                                "mixed", conc, repeats)
+    return records

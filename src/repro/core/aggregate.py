@@ -60,6 +60,8 @@ A one-device mesh falls back transparently to the single-dispatch path.
 
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 import jax
@@ -76,7 +78,8 @@ from repro.kernels.ref import WORDS
 from repro.kernels.segment_ops import counter_planes
 
 __all__ = ["or_many", "and_many", "xor_many", "andnot_many",
-           "threshold_many", "set_default_mesh"]
+           "threshold_many", "set_default_mesh", "WidePlan", "plan_wide",
+           "execute_plans", "execute_plan_host"]
 
 def set_default_mesh(mesh) -> None:
     """Install a mesh used by every wide aggregate that is not given an
@@ -343,29 +346,41 @@ def _repack_segments(seg_keys, words, cards) -> dict[int, Container]:
     return out
 
 
-def _dispatch(seg_keys: list[int], seg_rows: list[list[np.ndarray]],
-              op: str, threshold: int, backend,
+def _dispatch(seg_keys: list, seg_rows: list[list[np.ndarray]],
+              op: str, threshold, backend,
               seg_weights: list[list[int]] | None = None,
-              mesh=None) -> dict[int, Container]:
+              mesh=None) -> dict:
     """Stack per-segment rows into one slab, reduce in one kernel call,
     repack each segment's (words, card) into the optimal container kind.
     With a multi-device mesh, rows shard across the mesh axis instead
-    (see ``_shard_reduce``)."""
+    (see ``_shard_reduce``).
+
+    ``seg_keys`` are opaque hashable identities (plain chunk keys for one
+    query; ``(query, chunk-key)`` tuples on the coalesced multi-query
+    path).  ``threshold`` is an int, or -- for op "threshold" -- a
+    per-segment sequence aligned with ``seg_keys`` (each coalesced query
+    carries its own T into the same dispatch)."""
     if not seg_keys:
         return {}
+    tvec = None if isinstance(threshold, (int, np.integer)) else \
+        [int(x) for x in threshold]
+
+    def _t(i: int) -> int:
+        return tvec[i] if tvec is not None else threshold
+
     # peel single-row segments: reducing one row is the identity (a lone
     # minuend for "andnot"; for "threshold" the row survives iff its own
     # weight reaches t), so a host popcount beats the pad/stack/transfer
     # of a kernel dispatch.  This is the small-K hot path: collapsed
     # array groups contribute exactly one indicator row per key.
-    peeled: dict[int, Container] = {}
+    peeled: dict = {}
     keep = [i for i, rows in enumerate(seg_rows) if len(rows) > 1]
     if len(keep) != len(seg_keys):
         for i, (key, rows) in enumerate(zip(seg_keys, seg_rows)):
             if len(rows) != 1:
                 continue
             if op == "threshold" and \
-                    (seg_weights[i][0] if seg_weights else 1) < threshold:
+                    (seg_weights[i][0] if seg_weights else 1) < _t(i):
                 continue
             card = int(np.bitwise_count(rows[0]).sum())
             if card:
@@ -374,51 +389,88 @@ def _dispatch(seg_keys: list[int], seg_rows: list[list[np.ndarray]],
         seg_rows = [seg_rows[i] for i in keep]
         if seg_weights is not None:
             seg_weights = [seg_weights[i] for i in keep]
+        if tvec is not None:
+            tvec = [tvec[i] for i in keep]
         if not seg_keys:
             return peeled
     mesh = _resolve_mesh(mesh)
-    lens = [len(r) for r in seg_rows]
-    slab64 = np.stack([w for rows in seg_rows for w in rows])
-    n = slab64.shape[0]
-    slab32 = slab64.view(np.uint32).reshape(n, WORDS)
-    planes = None
-    wbits = 1
-    if op == "threshold" and seg_weights is not None:
-        planes = _planes_for([sum(w) for w in seg_weights], threshold)
-        wbits = max(int(w).bit_length() for ws in seg_weights for w in ws)
     if mesh is not None and _mesh_size(mesh) > 1:
+        lens = [len(r) for r in seg_rows]
+        slab64 = np.stack([w for rows in seg_rows for w in rows])
+        slab32 = slab64.view(np.uint32).reshape(slab64.shape[0], WORDS)
+        tmax = max(tvec) if tvec is not None else threshold
+        planes = None
+        if op == "threshold" and seg_weights is not None:
+            planes = _planes_for([sum(w) for w in seg_weights], tmax)
+        t_arg = threshold if tvec is None else np.asarray(tvec, np.int32)
         words, cards = _shard_reduce(
-            jnp.asarray(slab32), lens, seg_weights, op, threshold,
-            backend, mesh, planes=planes)
+            jnp.asarray(slab32), lens, seg_weights, op, t_arg,
+            backend, mesh, planes=planes, tmax=tmax)
         peeled.update(_repack_segments(seg_keys, words, cards))
         return peeled
-    starts = np.zeros(len(lens) + 1, np.int32)
-    starts[1:] = np.cumsum(lens)
-    weights = None
-    if seg_weights is not None:
-        weights = np.concatenate(
-            [np.asarray(w, np.int32) for w in seg_weights])
-    # pad rows / segments / depth to powers of two so jit and kernel
-    # specializations are reused across calls
-    n_pad = _pow2(n)
-    if n_pad != n:
-        slab32 = np.concatenate(
-            [slab32, np.zeros((n_pad - n, WORDS), np.uint32)])
-        if weights is not None:
+    # bucket segments by padded depth: the reduce materializes an
+    # (S, jmax, WORDS) gather, so one deep segment would inflate every
+    # shallow coalesced query's compute to the global jmax.  Per-depth
+    # kernel calls (<= log2 of the deepest segment, each at its own
+    # power-of-two depth) keep the multi-query amortization without the
+    # padding tax.  Small batches stay in ONE global-depth call: below
+    # ~64 segments the extra dispatches cost more than the padding they
+    # avoid (measured in the query_throughput bench at 64 concurrent).
+    by_depth: dict[int, list[int]] = {}
+    if len(seg_rows) >= 64:
+        for i, rows in enumerate(seg_rows):
+            by_depth.setdefault(_pow2(len(rows)), []).append(i)
+    else:
+        by_depth[_pow2(max(len(r) for r in seg_rows))] = \
+            list(range(len(seg_rows)))
+    for jmax, idxs in sorted(by_depth.items()):
+        rows_g = [seg_rows[i] for i in idxs]
+        lens = [len(r) for r in rows_g]
+        slab64 = np.stack([w for rows in rows_g for w in rows])
+        n = slab64.shape[0]
+        slab32 = slab64.view(np.uint32).reshape(n, WORDS)
+        wts_g = None if seg_weights is None else \
+            [seg_weights[i] for i in idxs]
+        tv_g = None if tvec is None else [tvec[i] for i in idxs]
+        planes = None
+        wbits = 1
+        if op == "threshold" and wts_g is not None:
+            planes = _planes_for([sum(w) for w in wts_g],
+                                 max(tv_g) if tv_g is not None
+                                 else threshold)
+            wbits = max(int(w).bit_length() for ws in wts_g for w in ws)
+        t_arg = threshold if tv_g is None else np.asarray(tv_g, np.int32)
+        starts = np.zeros(len(lens) + 1, np.int32)
+        starts[1:] = np.cumsum(lens)
+        weights = None
+        if wts_g is not None:
             weights = np.concatenate(
-                [weights, np.ones(n_pad - n, np.int32)])
-    s = len(lens)
-    s_pad = _pow2(s)
-    if s_pad != s:
-        starts = np.concatenate(
-            [starts, np.full(s_pad - s, starts[-1], np.int32)])
-    jmax = _pow2(max(lens))
-    words, cards = kops.segment_reduce(
-        jnp.asarray(slab32), jnp.asarray(starts), op, jmax=jmax,
-        threshold=threshold,
-        weights=None if weights is None else jnp.asarray(weights),
-        planes=planes, wbits=wbits, backend=backend)
-    peeled.update(_repack_segments(seg_keys, words[:s], cards[:s]))
+                [np.asarray(w, np.int32) for w in wts_g])
+        # pad rows / segments to powers of two so jit and kernel
+        # specializations are reused across calls
+        n_pad = _pow2(n)
+        if n_pad != n:
+            slab32 = np.concatenate(
+                [slab32, np.zeros((n_pad - n, WORDS), np.uint32)])
+            if weights is not None:
+                weights = np.concatenate(
+                    [weights, np.ones(n_pad - n, np.int32)])
+        s = len(lens)
+        s_pad = _pow2(s)
+        if s_pad != s:
+            starts = np.concatenate(
+                [starts, np.full(s_pad - s, starts[-1], np.int32)])
+            if tv_g is not None:
+                # padded segments are empty (zero rows): their T is inert
+                t_arg = np.concatenate(
+                    [t_arg, np.ones(s_pad - s, np.int32)])
+        words, cards = kops.segment_reduce(
+            jnp.asarray(slab32), jnp.asarray(starts), op, jmax=jmax,
+            threshold=t_arg if tv_g is None else jnp.asarray(t_arg),
+            weights=None if weights is None else jnp.asarray(weights),
+            planes=planes, wbits=wbits, backend=backend)
+        peeled.update(_repack_segments(
+            [seg_keys[i] for i in idxs], words[:s], cards[:s]))
     return peeled
 
 
@@ -454,7 +506,8 @@ def _shard_plan(seg_sizes: list[int], d: int, op: str,
 
 def _shard_reduce(slab: jax.Array, seg_sizes: list[int],
                   seg_weights: list[list[int]] | None, op: str,
-                  threshold: int, backend, mesh, planes: int | None = None):
+                  threshold, backend, mesh, planes: int | None = None,
+                  tmax: int | None = None):
     """Sharded segmented reduce: split rows across the mesh axis, reduce
     per shard with the SAME segment kernel, all-reduce the partials.
 
@@ -495,7 +548,8 @@ def _shard_reduce(slab: jax.Array, seg_sizes: list[int],
     if op == "threshold" and planes is None:
         planes = _planes_for(
             seg_sizes if seg_weights is None else
-            [sum(w) for w in seg_weights], threshold)
+            [sum(w) for w in seg_weights],
+            tmax if tmax is not None else threshold)
     slab_all = jnp.take(slab.astype(jnp.uint32),
                         jnp.asarray(ids_all.reshape(-1)),
                         axis=0).reshape(d, n_pad, WORDS)
@@ -510,7 +564,7 @@ def _shard_reduce(slab: jax.Array, seg_sizes: list[int],
             tot = allp[0]
             for i in range(1, d):
                 tot = kref.bitsliced_add(tot, allp[i])
-            words = kref.counters_ge(tot, jnp.int32(threshold))
+            words = kref.counters_ge(tot, jnp.asarray(threshold, jnp.int32))
         elif op == "and":
             pw, _ = kops.segment_reduce(slab_l, starts_l, op, jmax=jmax,
                                         backend=backend)
@@ -545,17 +599,161 @@ def _shard_reduce(slab: jax.Array, seg_sizes: list[int],
 
 
 # ---------------------------------------------------------------------------
+# query plans: planning separated from dispatch so N queries can coalesce
+# into ONE dispatch per op class (the query server's engine tick)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class WidePlan:
+    """One wide aggregate, planned but not yet dispatched.
+
+    ``merged`` holds every chunk the host fast paths already resolved
+    (zero-copy pass-throughs, run sweeps, bincount groups); ``seg_keys`` /
+    ``seg_rows`` describe the dense remainder awaiting the slab kernel.
+    ``execute_plans`` coalesces many plans into one ``segment_reduce``
+    dispatch per op class -- a query id is just another segment
+    coordinate -- and ``execute_plan_host`` is the numpy-only twin the
+    query server degrades to when a kernel batch fails (bit-identical by
+    construction: same rows, same repack)."""
+    op: str                               # dispatch class (OPS member)
+    threshold: int                        # per-plan T (0 off-threshold)
+    merged: dict[int, Container]          # host-resolved chunks
+    seg_keys: list[int]                   # chunk key per pending segment
+    seg_rows: list[list[np.ndarray]]      # uint64 rows per pending segment
+    seg_weights: list[list[int]] | None = None
+
+    def slab_bytes(self) -> int:
+        """Bytes this plan contributes to a coalesced slab (the admission
+        queue's max-bytes accounting)."""
+        return sum(len(r) for r in self.seg_rows) * 8192
+
+
+def plan_wide(op: str, bitmaps, t: int = 0, weights=None, *,
+              backend: str | None = None) -> WidePlan:
+    """Plan one wide aggregate without dispatching it.
+
+    ``op`` is "or" | "and" | "xor" | "andnot" | "threshold"; for "andnot"
+    the FIRST bitmap is the minuend and the rest are subtrahends; for
+    "threshold", ``t`` / ``weights`` follow ``threshold_many`` (t == 1
+    degenerates to an "or" plan and coalesces with the or class).
+    Validation errors (bad op, t < 1, bad weights) raise here, at
+    admission time -- never inside a dispatch batch."""
+    bitmaps = list(bitmaps)
+    if op == "or":
+        return _plan_or(bitmaps, backend)
+    if op == "xor":
+        return _plan_xor(bitmaps, backend)
+    if op == "and":
+        return _plan_and(bitmaps, backend)
+    if op == "andnot":
+        if not bitmaps:
+            raise ValueError("andnot needs at least the minuend")
+        return _plan_andnot(bitmaps[0], bitmaps[1:], backend)
+    if op == "threshold":
+        return _plan_threshold(bitmaps, t, weights, backend)
+    raise ValueError(f"unknown wide op {op!r}")
+
+
+def _finish(plan: WidePlan, backend, mesh):
+    merged = dict(plan.merged)
+    merged.update(_dispatch(plan.seg_keys, plan.seg_rows, plan.op,
+                            plan.threshold, backend,
+                            seg_weights=plan.seg_weights, mesh=mesh))
+    return _build(merged)
+
+
+def execute_plans(plans, *, backend: str | None = None,
+                  mesh=None) -> list:
+    """Execute many ``WidePlan``s with ONE slab dispatch per op class.
+
+    Every plan's pending segments join one slab per op (threshold plans
+    ride together via per-segment T -- see ``kernels.ops.segment_reduce``),
+    so a batch of N queries costs O(op classes) dispatches, not O(N).
+    Returns one RoaringBitmap per plan, bit-identical to finishing each
+    plan alone: segment results are independent by construction, and the
+    repack path is shared."""
+    plans = list(plans)
+    results = [dict(p.merged) for p in plans]
+    by_op: dict[str, list[int]] = {}
+    for i, p in enumerate(plans):
+        if p.seg_keys:
+            by_op.setdefault(p.op, []).append(i)
+    for op, idxs in by_op.items():
+        keys: list = []
+        rows: list[list[np.ndarray]] = []
+        wts: list[list[int]] = []
+        ts: list[int] = []
+        any_w = any(plans[i].seg_weights is not None for i in idxs)
+        for i in idxs:
+            p = plans[i]
+            keys.extend((i, k) for k in p.seg_keys)
+            rows.extend(p.seg_rows)
+            ts.extend([p.threshold] * len(p.seg_keys))
+            if any_w:
+                wts.extend(p.seg_weights if p.seg_weights is not None
+                           else [[1] * len(r) for r in p.seg_rows])
+        out = _dispatch(keys, rows, op,
+                        ts if op == "threshold" else 0, backend,
+                        seg_weights=wts if any_w else None, mesh=mesh)
+        for (i, k), cont in out.items():
+            results[i][k] = cont
+    return [_build(r) for r in results]
+
+
+def execute_plan_host(plan: WidePlan):
+    """Numpy-only execution of one plan: the query server's graceful-
+    degradation path when a kernel batch keeps failing.
+
+    Reduces each pending segment's uint64 rows with exact host bit math
+    (the same rows the slab dispatch would consume) and repacks through
+    the same ``optimize(C._result_from_bitset(...))`` path, so the result
+    is bit-identical to the kernel plan -- only slower.  Touches no jax
+    API at all."""
+    merged = dict(plan.merged)
+    for i, (key, seg) in enumerate(zip(plan.seg_keys, plan.seg_rows)):
+        stack = np.stack(seg)                       # (R, 1024) uint64
+        if plan.op == "or":
+            w = np.bitwise_or.reduce(stack, axis=0)
+        elif plan.op == "and":
+            w = np.bitwise_and.reduce(stack, axis=0)
+        elif plan.op == "xor":
+            w = np.bitwise_xor.reduce(stack, axis=0)
+        elif plan.op == "andnot":
+            w = stack[0]
+            if stack.shape[0] > 1:
+                w = w & ~np.bitwise_or.reduce(stack[1:], axis=0)
+        elif plan.op == "threshold":
+            bits = np.unpackbits(stack.view(np.uint8), axis=1,
+                                 bitorder="little").astype(np.int64)
+            if plan.seg_weights is not None:
+                bits *= np.asarray(plan.seg_weights[i],
+                                   np.int64)[:, None]
+            keepbits = bits.sum(axis=0) >= plan.threshold
+            w = np.packbits(keepbits, bitorder="little").view(np.uint64)
+        else:
+            raise ValueError(plan.op)
+        card = int(np.bitwise_count(w).sum())
+        if card:
+            merged[key] = optimize(C._result_from_bitset(w.copy(), card))
+    return _build(merged)
+
+
+# ---------------------------------------------------------------------------
 # public wide aggregates
 # ---------------------------------------------------------------------------
 
 def or_many(bitmaps, *, backend: str | None = None, mesh=None):
     """Union of K bitmaps in one kernel dispatch (paper section 5.8);
     with a multi-device ``mesh``, one sharded dispatch per shard."""
-    bitmaps = list(bitmaps)
-    if not bitmaps:
-        return _bitmap_cls()()
-    if len(bitmaps) == 1:
-        return _shallow(bitmaps[0])
+    return _finish(plan_wide("or", bitmaps, backend=backend), backend,
+                   mesh)
+
+
+def _plan_or(bitmaps, backend) -> WidePlan:
+    if len(bitmaps) <= 1:
+        return WidePlan("or", 0,
+                        dict(zip(bitmaps[0].keys, bitmaps[0].containers))
+                        if bitmaps else {}, [], [])
     prefer_kernel = _prefer_kernel(backend)
     groups = _group(bitmaps)
     merged: dict[int, Container] = {}
@@ -590,18 +788,21 @@ def or_many(bitmaps, *, backend: str | None = None, mesh=None):
         seg_keys.append(k)
         seg_rows.append(rows)
     merged.update(_sweep_run_groups(run_groups, "or", 0))
-    merged.update(_dispatch(seg_keys, seg_rows, "or", 0, backend, mesh=mesh))
-    return _build(merged)
+    return WidePlan("or", 0, merged, seg_keys, seg_rows)
 
 
 def xor_many(bitmaps, *, backend: str | None = None, mesh=None):
     """Wide symmetric difference: a value survives iff it occurs in an odd
     number of inputs (K-ary XOR)."""
-    bitmaps = list(bitmaps)
-    if not bitmaps:
-        return _bitmap_cls()()
-    if len(bitmaps) == 1:
-        return _shallow(bitmaps[0])
+    return _finish(plan_wide("xor", bitmaps, backend=backend), backend,
+                   mesh)
+
+
+def _plan_xor(bitmaps, backend) -> WidePlan:
+    if len(bitmaps) <= 1:
+        return WidePlan("xor", 0,
+                        dict(zip(bitmaps[0].keys, bitmaps[0].containers))
+                        if bitmaps else {}, [], [])
     groups = _group(bitmaps)
     merged: dict[int, Container] = {}
     seg_keys: list[int] = []
@@ -627,9 +828,7 @@ def xor_many(bitmaps, *, backend: str | None = None, mesh=None):
         seg_keys.append(k)
         seg_rows.append(rows)
     merged.update(_sweep_run_groups(run_groups, "xor", 0))
-    merged.update(_dispatch(seg_keys, seg_rows, "xor", 0, backend,
-                            mesh=mesh))
-    return _build(merged)
+    return WidePlan("xor", 0, merged, seg_keys, seg_rows)
 
 
 def and_many(bitmaps, *, backend: str | None = None, mesh=None):
@@ -642,17 +841,21 @@ def and_many(bitmaps, *, backend: str | None = None, mesh=None):
     exchanges an occupancy mask with its partial, so shards holding no
     rows of a segment contribute the all-ones identity instead of the
     kernel's empty-segment zeros (see ``_shard_reduce``)."""
-    bitmaps = list(bitmaps)
-    if not bitmaps:
-        return _bitmap_cls()()
-    if len(bitmaps) == 1:
-        return _shallow(bitmaps[0])
+    return _finish(plan_wide("and", bitmaps, backend=backend), backend,
+                   mesh)
+
+
+def _plan_and(bitmaps, backend) -> WidePlan:
+    if len(bitmaps) <= 1:
+        return WidePlan("and", 0,
+                        dict(zip(bitmaps[0].keys, bitmaps[0].containers))
+                        if bitmaps else {}, [], [])
     order = sorted(bitmaps, key=lambda b: b.cardinality)
     common = set(order[0].keys)
     for bm in order[1:]:
         common &= set(bm.keys)
         if not common:
-            return _bitmap_cls()()                 # empty-key early exit
+            return WidePlan("and", 0, {}, [], [])  # empty-key early exit
     lookup = [dict(zip(bm.keys, bm.containers)) for bm in bitmaps]
     merged: dict[int, Container] = {}
     seg_keys: list[int] = []
@@ -680,9 +883,7 @@ def and_many(bitmaps, *, backend: str | None = None, mesh=None):
         seg_keys.append(k)
         seg_rows.append([_words_row(c) for c in g])
     merged.update(_sweep_run_groups(run_groups, "and", 0))
-    merged.update(_dispatch(seg_keys, seg_rows, "and", 0, backend,
-                            mesh=mesh))
-    return _build(merged)
+    return WidePlan("and", 0, merged, seg_keys, seg_rows)
 
 
 def andnot_many(minuend, subtrahends, *, backend: str | None = None,
@@ -695,9 +896,15 @@ def andnot_many(minuend, subtrahends, *, backend: str | None = None,
     Keys absent from every subtrahend pass through zero-copy; keys whose
     subtrahend group contains a full chunk drop immediately; array-probe
     and interval-sweep fast paths mirror the other aggregates."""
-    subtrahends = list(subtrahends)
+    return _finish(plan_wide("andnot", [minuend, *subtrahends],
+                             backend=backend), backend, mesh)
+
+
+def _plan_andnot(minuend, subtrahends, backend) -> WidePlan:
     if not subtrahends:
-        return _shallow(minuend)
+        return WidePlan("andnot", 0,
+                        dict(zip(minuend.keys, minuend.containers)),
+                        [], [])
     sub_groups = _group(subtrahends)
     merged: dict[int, Container] = {}
     seg_keys: list[int] = []
@@ -737,9 +944,7 @@ def andnot_many(minuend, subtrahends, *, backend: str | None = None,
         seg_keys.append(k)
         seg_rows.append(rows)
     merged.update(_sweep_run_groups(run_groups, "andnot", 0))
-    merged.update(_dispatch(seg_keys, seg_rows, "andnot", 0, backend,
-                            mesh=mesh))
-    return _build(merged)
+    return WidePlan("andnot", 0, merged, seg_keys, seg_rows)
 
 
 def _check_weights(weights, k: int) -> list[int] | None:
@@ -771,18 +976,22 @@ def threshold_many(bitmaps, t: int, *, weights=None,
     bit-sliced counter circuit (weight 1 everywhere degenerates to the
     unweighted plan, bit for bit).  Keys whose total attainable weight
     stays below ``t`` are pruned on the host."""
-    bitmaps = list(bitmaps)
+    return _finish(plan_wide("threshold", bitmaps, t, weights,
+                             backend=backend), backend, mesh)
+
+
+def _plan_threshold(bitmaps, t, weights, backend) -> WidePlan:
     t = int(t)
     if t < 1:
         raise ValueError(f"threshold must be >= 1, got {t}")
     weights = _check_weights(weights, len(bitmaps))
     if not bitmaps or (weights is None and t > len(bitmaps)) or \
             (weights is not None and t > sum(weights)):
-        return _bitmap_cls()()
+        return WidePlan("threshold", t, {}, [], [])
     if t == 1:
-        return or_many(bitmaps, backend=backend, mesh=mesh)
+        return _plan_or(bitmaps, backend)          # coalesces with "or"
     if weights is not None:
-        return _threshold_weighted(bitmaps, t, weights, backend, mesh)
+        return _plan_threshold_weighted(bitmaps, t, weights, backend)
     groups = _group(bitmaps)
     merged: dict[int, Container] = {}
     seg_keys: list[int] = []
@@ -803,12 +1012,11 @@ def threshold_many(bitmaps, t: int, *, weights=None,
         seg_keys.append(k)
         seg_rows.append([_words_row(c) for c in g])
     merged.update(_sweep_run_groups(run_groups, "threshold", t))
-    merged.update(_dispatch(seg_keys, seg_rows, "threshold", t, backend,
-                            mesh=mesh))
-    return _build(merged)
+    return WidePlan("threshold", t, merged, seg_keys, seg_rows)
 
 
-def _threshold_weighted(bitmaps, t: int, weights: list[int], backend, mesh):
+def _plan_threshold_weighted(bitmaps, t: int, weights: list[int],
+                             backend) -> WidePlan:
     """Weighted threshold body: identical planning shape, with per-member
     weights threaded through the sweep, the bincount fast path, and the
     kernel's shift-and-add counter circuit."""
@@ -843,6 +1051,4 @@ def _threshold_weighted(bitmaps, t: int, weights: list[int], backend, mesh):
         seg_rows.append([_words_row(c) for c, _ in g])
         seg_wts.append([w for _, w in g])
     merged.update(_sweep_run_groups(run_groups, "threshold", t))
-    merged.update(_dispatch(seg_keys, seg_rows, "threshold", t, backend,
-                            seg_weights=seg_wts, mesh=mesh))
-    return _build(merged)
+    return WidePlan("threshold", t, merged, seg_keys, seg_rows, seg_wts)

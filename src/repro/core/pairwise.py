@@ -48,8 +48,11 @@ are already vectorized.
 
 from __future__ import annotations
 
+import functools
+
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import containers as C
@@ -58,6 +61,7 @@ from repro.core.containers import (
     container_from_values, positions_to_bitset,
 )
 from repro.kernels import ops as kops
+from repro.kernels import ref as _refk
 from repro.kernels.ref import ARRAY_CAP, METRICS, PAIR_OPS, WORDS
 
 __all__ = ["pairwise_card", "jaccard_matrix", "merge_one", "OP_IDS",
@@ -716,6 +720,40 @@ class SimilarityEngine:
         return zeros.at[jnp.asarray(np.asarray(cols, np.int32))] \
             .set(jnp.asarray(stack))
 
+    def _query_words_dev_batch(self, queries):
+        """(B, C, WORDS) uint32 DEVICE query block for a whole batch in
+        TWO scatters (one gathering member queries' rows from the
+        resident slab, one shipping bitmap queries' occupied rows) --
+        the per-query ``_query_words_dev`` loop costs one jit dispatch
+        per query, which dominates coalesced similarity batches."""
+        dev_rows, dev_col, _, _ = self._device()
+        nc = max(self.n_keys, 1)
+        block = jnp.zeros((len(queries), nc, WORDS), jnp.uint32)
+        mem_b, mem_r = [], []            # member queries: slab row ids
+        bm_b, bm_c, bm_rows = [], [], []  # bitmap queries: host words
+        for b, q in enumerate(queries):
+            if isinstance(q, (int, np.integer)):
+                s, e = int(self.starts[q]), int(self.starts[q + 1])
+                mem_b.extend([b] * (e - s))
+                mem_r.extend(range(s, e))
+                continue
+            for k, cont in zip(q.keys, q.containers):
+                col = self.key_col.get(k)
+                if col is not None:
+                    bm_b.append(b)
+                    bm_c.append(col)
+                    bm_rows.append(C.container_words64(cont))
+        if mem_r:
+            r = jnp.asarray(np.asarray(mem_r, np.int32))
+            block = block.at[jnp.asarray(np.asarray(mem_b, np.int32)),
+                             dev_col[r]].set(dev_rows[r])
+        if bm_b:
+            stack = np.stack(bm_rows).view(np.uint32).reshape(-1, WORDS)
+            block = block.at[jnp.asarray(np.asarray(bm_b, np.int32)),
+                             jnp.asarray(np.asarray(bm_c, np.int32))
+                             ].set(jnp.asarray(stack))
+        return block
+
     def _device(self):
         if self._dev is None:
             self._dev = (
@@ -742,7 +780,9 @@ class SimilarityEngine:
         metric: "jaccard" | "cosine" | "containment" (all derived from
                 the AND cardinality by inclusion-exclusion).
         backend: kernel override; None = fused kernel on TPU, pruned
-                host sweep on CPU.  Results are bit-identical either way.
+                host sweep on CPU; "host" forces the jax-free host sweep
+                (the query server's degradation path).  Results are
+                bit-identical on every path.
 
         Returns (idx (k',) int64, score (k',) float32, inter (k',) int64)
         best-first; ties at equal score order by ascending index.
@@ -775,7 +815,7 @@ class SimilarityEngine:
             order = np.argsort(-score, kind="stable")[:k]
             return (order.astype(np.int64), score[order],
                     np.zeros(k, np.int64))
-        if _prefer_kernel(backend):
+        if backend != "host" and _prefer_kernel(backend):
             dev_rows, dev_col, dev_starts, dev_cards = self._device()
             idx, score, inter = kops.similarity_topk(
                 dev_rows, dev_col, dev_starts,
@@ -789,6 +829,65 @@ class SimilarityEngine:
                     np.asarray(inter).astype(np.int64))
         return self._topk_host(self._query_words(query), qc, k, metric,
                                exclude)
+
+    def topk_batch(self, queries, k: int, metric: str = "jaccard", *,
+                   backend: str | None = None) -> list:
+        """Batched ``topk``: score many queries against the SAME resident
+        candidate slab (the query server's similarity coalescing path).
+
+        On the jnp-oracle kernel backend every query sharing an effective
+        ``k`` lowers to ONE vmapped score+select dispatch over the cached
+        slab; the Pallas kernel and the pruned host sweep fall back to a
+        per-query loop that still shares every cached structure.  Returns
+        ``[self.topk(q, k, metric) for q in queries]`` bit for bit on
+        every path (asserted by the test suite)."""
+        queries = list(queries)
+        if metric not in METRICS:
+            raise ValueError(metric)
+        out: list = [None] * len(queries)
+        batch: dict[int, list[int]] = {}          # effective k -> indices
+        use_vmap = (backend != "host" and _prefer_kernel(backend)
+                    and not kops._use_pallas(backend)
+                    and self.rows.shape[0] > 0)
+        for i, q in enumerate(queries):
+            if not use_vmap:
+                out[i] = self.topk(q, k, metric, backend=backend)
+                continue
+            n_cand = self.n - (1 if isinstance(q, (int, np.integer))
+                               else 0)
+            kk = min(int(k), n_cand)
+            if kk <= 0:
+                out[i] = self.topk(q, k, metric, backend=backend)
+            else:
+                batch.setdefault(kk, []).append(i)
+        for kk, idxs in batch.items():
+            dev_rows, dev_col, dev_starts, dev_cards = self._device()
+            q_card, excl = [], []
+            for i in idxs:
+                q = queries[i]
+                if isinstance(q, (int, np.integer)):
+                    if not 0 <= int(q) < self.n:
+                        raise IndexError(f"candidate index {int(q)} out "
+                                         f"of range [0, {self.n})")
+                    qc, ex = int(self.cards[int(q)]), int(q)
+                else:
+                    qc, ex = q.cardinality, -1
+                if qc >= 2**31:
+                    raise ValueError(
+                        "query cardinality >= 2^31 unsupported")
+                q_card.append(qc)
+                excl.append(ex)
+            idx, score, inter = _batched_topk(metric, kk)(
+                dev_rows, dev_col, dev_starts,
+                self._query_words_dev_batch([queries[i] for i in idxs]),
+                jnp.asarray(q_card, jnp.int32), dev_cards,
+                jnp.asarray(excl, jnp.int32))
+            idx = np.asarray(idx).astype(np.int64)
+            score = np.asarray(score)
+            inter = np.asarray(inter).astype(np.int64)
+            for j, i in enumerate(idxs):
+                out[i] = (idx[j], score[j], inter[j])
+        return out
 
     # -- pruned host path -----------------------------------------------
 
@@ -838,6 +937,15 @@ class SimilarityEngine:
             score[exclude] = np.float32(-1.0)
         order = np.argsort(-score, kind="stable")[:k]
         return order.astype(np.int64), score[order], inter[order]
+
+
+@functools.lru_cache(maxsize=64)
+def _batched_topk(metric: str, k: int):
+    """One jit'd vmap of the similarity oracle per (metric, k) class:
+    in_axes batch the query block / cardinality / exclusion index while
+    the resident candidate slab broadcasts."""
+    fn = functools.partial(_refk.similarity_topk, metric=metric, k=k)
+    return jax.jit(jax.vmap(fn, in_axes=(None, None, None, 0, 0, None, 0)))
 
 
 # ---------------------------------------------------------------------------

@@ -3,20 +3,31 @@
 in-memory and serialized sizes are nearly identical).
 
 Layout (little-endian):
-    magic   4 bytes  b"RJ01"
+    magic   4 bytes  b"RJ02"
+    crc     uint32   CRC-32 (zlib) of every byte after this field
     n       uint32   number of containers
-    keys    n x uint16
+    keys    n x uint16     (strictly increasing)
     kinds   n x uint8      (1 array / 2 bitset / 3 run)
     cards   n x uint16     (cardinality - 1; a container is never empty)
     payloads, per container:
-      array : card x uint16 values
-      bitset: 1024 x uint64 words
+      array : card x uint16 values (strictly increasing)
+      bitset: 1024 x uint64 words  (popcount must equal card)
       run   : uint16 n_runs, then n_runs x (uint16 start, uint16 length)
+              (runs disjoint, ascending, in-bounds; lengths sum to card)
+
+Robustness contract: ``deserialize`` of ANY corrupted buffer raises
+``ValueError`` -- never a crash, hang, or a silently-wrong bitmap.  Two
+layers enforce it: the CRC rejects every byte flip up front (CRC-32
+catches all error bursts <= 32 bits, so every single-byte corruption),
+and structural validation (sorted keys, per-kind payload invariants,
+card cross-checks, no trailing bytes) rejects buffers that were built
+wrong rather than damaged in flight.
 """
 
 from __future__ import annotations
 
 import struct
+import zlib
 
 import numpy as np
 
@@ -25,12 +36,12 @@ from repro.core.containers import (
     ArrayContainer, BitsetContainer, RunContainer, BITSET_WORDS,
 )
 
-MAGIC = b"RJ01"
+MAGIC = b"RJ02"
 
 
 def serialize(bm: RoaringBitmap) -> bytes:
     n = len(bm.keys)
-    parts = [MAGIC, struct.pack("<I", n)]
+    parts = [struct.pack("<I", n)]
     parts.append(np.asarray(bm.keys, dtype=np.uint16).tobytes())
     kinds, cards = [], []
     for c in bm.containers:
@@ -47,7 +58,8 @@ def serialize(bm: RoaringBitmap) -> bytes:
             runs = c.runs.astype(np.uint16)
             parts.append(struct.pack("<H", runs.shape[0]))
             parts.append(runs.tobytes())
-    return b"".join(parts)
+    body = b"".join(parts)
+    return MAGIC + struct.pack("<I", zlib.crc32(body)) + body
 
 
 def _need(buf: bytes, off: int, nbytes: int, what: str) -> None:
@@ -61,11 +73,14 @@ def _need(buf: bytes, off: int, nbytes: int, what: str) -> None:
 
 def deserialize(buf: bytes) -> RoaringBitmap:
     buf = bytes(buf)
-    _need(buf, 0, 8, "header")
+    _need(buf, 0, 12, "header")
     if buf[:4] != MAGIC:
-        raise ValueError("bad magic; not an RJ01 roaring payload")
-    (n,) = struct.unpack_from("<I", buf, 4)
-    off = 8
+        raise ValueError("bad magic; not an RJ02 roaring payload")
+    (crc,) = struct.unpack_from("<I", buf, 4)
+    if zlib.crc32(buf[8:]) != crc:
+        raise ValueError("checksum mismatch; corrupt roaring payload")
+    (n,) = struct.unpack_from("<I", buf, 8)
+    off = 12
     _need(buf, off, 5 * n, f"directory of {n} container(s)")
     keys = np.frombuffer(buf, dtype=np.uint16, count=n, offset=off)
     off += 2 * n
@@ -73,6 +88,8 @@ def deserialize(buf: bytes) -> RoaringBitmap:
     off += n
     cards = np.frombuffer(buf, dtype=np.uint16, count=n, offset=off)
     off += 2 * n
+    if n > 1 and not (keys[1:] > keys[:-1]).all():
+        raise ValueError("container keys not strictly increasing")
     out_keys, out_conts = [], []
     for i in range(n):
         card = int(cards[i]) + 1
@@ -81,12 +98,20 @@ def deserialize(buf: bytes) -> RoaringBitmap:
             _need(buf, off, 2 * card, f"array container {i} ({card} values)")
             vals = np.frombuffer(buf, dtype=np.uint16, count=card, offset=off)
             off += 2 * card
+            if card > 1 and not (vals[1:] > vals[:-1]).all():
+                raise ValueError(
+                    f"array container {i}: values not strictly increasing")
             out_conts.append(ArrayContainer(vals.copy()))
         elif kind == 2:
             _need(buf, off, 8 * BITSET_WORDS, f"bitset container {i}")
             words = np.frombuffer(buf, dtype=np.uint64,
                                   count=BITSET_WORDS, offset=off)
             off += 8 * BITSET_WORDS
+            pop = int(np.bitwise_count(words).sum())
+            if pop != card:
+                raise ValueError(
+                    f"bitset container {i}: stored cardinality {card} "
+                    f"!= popcount {pop}")
             out_conts.append(BitsetContainer(words.copy(), card))
         elif kind == 3:
             _need(buf, off, 2, f"run count of container {i}")
@@ -96,10 +121,25 @@ def deserialize(buf: bytes) -> RoaringBitmap:
             runs = np.frombuffer(buf, dtype=np.uint16, count=2 * nr,
                                  offset=off).reshape(nr, 2)
             off += 4 * nr
+            starts = runs[:, 0].astype(np.int64)
+            ends = starts + runs[:, 1].astype(np.int64)
+            if nr == 0 or (ends > 0xFFFF).any() or \
+                    (nr > 1 and (starts[1:] <= ends[:-1] + 1).any()):
+                raise ValueError(
+                    f"run container {i}: runs not disjoint ascending "
+                    f"in-bounds intervals")
+            if int((ends - starts + 1).sum()) != card:
+                raise ValueError(
+                    f"run container {i}: stored cardinality {card} "
+                    f"!= run length total")
             out_conts.append(RunContainer(runs.astype(np.int32)))
         else:
             raise ValueError(f"bad container kind {kind}")
         out_keys.append(int(keys[i]))
+    if off != len(buf):
+        raise ValueError(
+            f"trailing garbage: {len(buf) - off} byte(s) past the last "
+            f"container payload")
     return RoaringBitmap(out_keys, out_conts)
 
 

@@ -18,7 +18,21 @@ class InvertedIndex:
     dispatch per query via ``repro.core.aggregate``; the similarity
     surface (``similar``) runs on a cached ``SimilarityEngine`` slab,
     one fused score+select dispatch per query on kernel backends.  See
-    docs/ARCHITECTURE.md for the paper-section -> module map."""
+    docs/ARCHITECTURE.md for the paper-section -> module map.
+
+    Unknown-term / empty-input contract (uniform across EVERY query
+    entry point, relied on by the query server's admission path):
+    a term absent from the index queries as an EMPTY posting list --
+    never a ``KeyError`` -- and an empty term list yields an empty
+    result.  Consequences: ``query_and``/``query_or``/``query_xor``
+    with no or only-unknown terms return the empty bitmap;
+    ``query_andnot`` with an unknown ``keep`` is empty and unknown
+    ``drops`` subtract nothing; ``query_threshold`` prunes unknown
+    terms' (zero) contributions; ``count_and`` returns 0;
+    ``jaccard`` follows the set convention (two empty sets -> 1.0,
+    empty vs non-empty -> 0.0); ``similar`` scores an unknown term as
+    an empty query (all scores 0) and returns a full-length, validly
+    ordered list."""
 
     def __init__(self):
         self.postings: dict[str, RoaringBitmap] = {}
@@ -57,6 +71,8 @@ class InvertedIndex:
 
     # query surface ------------------------------------------------------
     def _get(self, term: str) -> RoaringBitmap:
+        """Postings for ``term``; an unknown term is an empty posting
+        list (the class-level contract: no KeyError, ever)."""
         return self.postings.get(term, RoaringBitmap())
 
     # query_and/query_or/query_xor/query_threshold all route through the

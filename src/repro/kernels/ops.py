@@ -186,8 +186,9 @@ def segment_reduce(slab, starts, op: str, *, jmax: int, threshold: int = 0,
     """Segmented K-way OR/AND/XOR/ANDNOT/threshold reduce fused with
     cardinality: one dispatch for an arbitrary number of bitmaps (wide
     aggregation, paper section 5.8).  See kernels/segment_ops.py for the
-    layout.  ``threshold`` is a runtime scalar: T-sweeps share one
-    compilation.  ``weights`` (N,) int32 weight threshold rows (``wbits``
+    layout.  ``threshold`` is a runtime scalar (T-sweeps share one
+    compilation) or a (S,) per-segment vector (coalesced multi-query
+    batches).  ``weights`` (N,) int32 weight threshold rows (``wbits``
     static bit width, ``planes`` static counter width)."""
     t = jnp.asarray(threshold, jnp.int32)
     if weights is not None:

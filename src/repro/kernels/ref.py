@@ -360,6 +360,9 @@ def segment_reduce(slab: jax.Array, starts: jax.Array, op: str, *,
     op "andnot" treats each segment's FIRST row as the minuend and the rest
     as subtrahends: row0 & ~(row1 | row2 | ...).  ``weights`` (N,) int32 are
     per-row occurrence weights for op "threshold" (default 1 per row).
+    ``threshold`` is a runtime scalar OR a (S,) int32 vector of per-segment
+    thresholds (the multi-query coalescing path: every queued T-occurrence
+    query becomes one segment group of the same dispatch).
     """
     slab = slab.astype(jnp.uint32)
     starts = starts.astype(jnp.int32)
@@ -375,11 +378,14 @@ def segment_reduce(slab: jax.Array, starts: jax.Array, op: str, *,
         else:
             w = weights.astype(jnp.int32)[jnp.minimum(row, n - 1)]
         w = jnp.where(valid, w, 0)
+        t = jnp.asarray(threshold, jnp.int32)
+        if t.ndim == 1:
+            t = t[:, None]                                # (S, 1) vs (S, WORDS)
         out = jnp.zeros((g.shape[0], WORDS), jnp.uint32)
         for b in range(32):
             cnt = (((g >> jnp.uint32(b)) & jnp.uint32(1)).astype(jnp.int32)
                    * w[..., None]).sum(axis=1)
-            hit = (cnt >= threshold).astype(jnp.uint32)
+            hit = (cnt >= t).astype(jnp.uint32)
             out = out | (hit << jnp.uint32(b))
     elif op == "andnot":
         g = jnp.where(valid[..., None], g, jnp.uint32(0))
@@ -461,11 +467,15 @@ def bitsliced_add(a: jax.Array, b: jax.Array) -> jax.Array:
 
 def counters_ge(planes_arr: jax.Array, t: jax.Array) -> jax.Array:
     """Bitwise magnitude comparator: positions whose bit-sliced count is
-    >= t.  planes_arr: (..., planes, WORDS) uint32; t: runtime int32 scalar.
+    >= t.  planes_arr: (..., planes, WORDS) uint32; t: runtime int32
+    scalar, or a (S,) vector of per-segment thresholds against a
+    (S, planes, WORDS) counter set (the coalesced multi-query path).
     Returns (..., WORDS) uint32 result words."""
     full = jnp.uint32(0xFFFFFFFF)
     n_planes = planes_arr.shape[-2]
     t = jnp.asarray(t, jnp.int32)
+    if t.ndim == 1:
+        t = t[:, None]                       # broadcast over the word lanes
     gt = jnp.zeros_like(planes_arr[..., 0, :])
     eq = jnp.full_like(gt, full)
     for i in reversed(range(n_planes)):

@@ -155,9 +155,10 @@ def _threshold_kernel(starts_ref, t_ref, w_ref, slab_ref, out_ref, card_ref,
     @pl.when(j == jmax - 1)
     def _():
         # bitwise magnitude comparator: count >= T, MSB first.  T arrives at
-        # runtime (scalar prefetch), so threshold sweeps share one compile;
-        # its bit i becomes an all-ones/all-zeros lane mask.
-        t = t_ref[0]
+        # runtime (scalar prefetch) PER SEGMENT, so threshold sweeps share
+        # one compile and coalesced multi-query batches carry each query's
+        # own T; its bit i becomes an all-ones/all-zeros lane mask.
+        t = t_ref[s]
         gt = jnp.zeros((1, WORDS), jnp.uint32)
         eq = jnp.full((1, WORDS), _FULL)
         for i in reversed(range(planes)):
@@ -185,8 +186,11 @@ def segment_reduce(slab: jax.Array, starts: jax.Array, op: str, *,
     op:     "or" | "and" | "xor" | "andnot" | "threshold".  "andnot" treats
             each segment's first row as the minuend: row0 & ~OR(rest).
     jmax:   static upper bound on segment length (>= max(diff(starts))).
-    threshold: T for op="threshold"; a runtime scalar, so sweeping T over
-            the same inputs reuses one compilation.
+    threshold: T for op="threshold"; a runtime scalar (sweeping T over the
+            same inputs reuses one compilation) or a (S,) int32 vector of
+            per-segment thresholds -- the multi-query coalescing path,
+            where every queued T-occurrence query contributes its own
+            segments to one dispatch.
     weights: (N,) int32 per-row occurrence weights for op="threshold"
             (default: 1 per row).  ``wbits`` is the static bit width of the
             largest weight and ``planes`` the static counter width; both
@@ -202,7 +206,9 @@ def segment_reduce(slab: jax.Array, starts: jax.Array, op: str, *,
     n = slab.shape[0]
     s = starts.shape[0] - 1
     starts = starts.astype(jnp.int32)
-    tval = jnp.asarray(threshold, jnp.int32).reshape(1)
+    # (S,) per-segment thresholds; a scalar T broadcasts to every segment
+    tval = jnp.broadcast_to(
+        jnp.asarray(threshold, jnp.int32).reshape(-1), (s,))
     if weights is None:
         wval = jnp.ones((n,), jnp.int32)
     else:

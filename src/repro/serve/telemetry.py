@@ -1,16 +1,73 @@
-"""MoE routing telemetry on Roaring sets (paper section 5.9 fast counts).
+"""Serving telemetry: per-ticket query timings for the continuous query
+server, plus MoE routing telemetry on Roaring sets (paper section 5.9
+fast counts).
 
-Per training/serving step, each expert's routed-token-id set is a Roaring
-bitmap; load balance, expert overlap (Jaccard), and drift between steps
-(symmetric difference) are the paper's count-only operations -- computed
-without materializing intermediate sets.
+Query-server side: every resolved ticket carries a ``QueryTelemetry``
+(queue time, dispatch latency, retries, degradation flags) and the
+server aggregates a running ``ServerStats`` -- the observability
+contract the fault-injection tests assert against.
+
+MoE side: per training/serving step, each expert's routed-token-id set
+is a Roaring bitmap; load balance, expert overlap (Jaccard), and drift
+between steps (symmetric difference) are the paper's count-only
+operations -- computed without materializing intermediate sets.
 """
 
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from repro.core import RoaringBitmap
+
+
+@dataclasses.dataclass
+class QueryTelemetry:
+    """Per-ticket timing and failure-handling record, attached to every
+    resolved ticket (including structured rejections)."""
+    submitted_at: float = 0.0
+    dispatched_at: float | None = None      # None: never reached dispatch
+    resolved_at: float = 0.0
+    batch_size: int = 0                     # tickets in the ticket's batch
+    retries: int = 0                        # failed kernel attempts
+    splits: int = 0                         # alloc-pressure batch splits
+    replans: int = 0                        # slab-mismatch re-plans
+    degraded: bool = False                  # resolved on the host path
+
+    @property
+    def queue_time(self) -> float:
+        """Admission -> dispatch (or rejection) wait."""
+        end = (self.dispatched_at if self.dispatched_at is not None
+               else self.resolved_at)
+        return end - self.submitted_at
+
+    @property
+    def latency(self) -> float:
+        """Admission -> resolution, the caller-visible total."""
+        return self.resolved_at - self.submitted_at
+
+
+@dataclasses.dataclass
+class ServerStats:
+    """Monotone counters over a server's lifetime (``QueryServer.stats``
+    returns a snapshot copy)."""
+    submitted: int = 0
+    rejected_overloaded: int = 0
+    rejected_invalid: int = 0
+    resolved_ok: int = 0
+    resolved_error: int = 0
+    deadline_expired: int = 0
+    ticks: int = 0
+    batches: int = 0
+    dispatch_retries: int = 0
+    batch_splits: int = 0
+    replans: int = 0
+    host_fallbacks: int = 0
+    max_batch: int = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
 
 
 def routing_sets(expert_idx: np.ndarray, n_experts: int) -> list[RoaringBitmap]:

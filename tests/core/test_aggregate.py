@@ -307,3 +307,107 @@ def test_index_query_threshold(rng):
     for d in range(len(docs)):
         n_match = sum(t in docs[d] for t in terms)
         assert (d in got) == (n_match >= 3)
+
+
+# ---------------------------------------------------------------------------
+# multi-query planning (plan_wide / execute_plans / execute_plan_host)
+# ---------------------------------------------------------------------------
+
+def _random_query(rng, dist):
+    """One random wide query as (op, bitmaps, t, weights)."""
+    k = int(rng.integers(2, 7))
+    vals = dist(rng, k)
+    bms = [bm(v) for v in vals]
+    op = ["or", "and", "xor", "andnot", "threshold"][int(rng.integers(5))]
+    t, w = 0, None
+    if op == "threshold":
+        t = int(rng.integers(1, k + 1))
+        if rng.random() < 0.5:
+            w = [int(x) for x in rng.integers(1, 5, k)]
+    return op, bms, t, w
+
+
+def _direct(op, bms, t, w, backend):
+    if op == "or":
+        return aggregate.or_many(bms, backend=backend)
+    if op == "and":
+        return aggregate.and_many(bms, backend=backend)
+    if op == "xor":
+        return aggregate.xor_many(bms, backend=backend)
+    if op == "andnot":
+        return aggregate.andnot_many(bms[0], bms[1:], backend=backend)
+    return aggregate.threshold_many(bms, t, weights=w, backend=backend)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_execute_plans_coalesced_bit_identical(seed):
+    """N queries coalesced into one dispatch per op class must equal N
+    direct executions exactly -- container kinds included (a query id is
+    just another segment coordinate)."""
+    rng = np.random.default_rng(seed)
+    dists = [dense_runs, sparse_arrays, boundary_4096, disjoint_keys]
+    queries = [_random_query(rng, dists[i % 4]) for i in range(12)]
+    plans = [aggregate.plan_wide(op, b, t, w, backend="ref")
+             for op, b, t, w in queries]
+    batch = aggregate.execute_plans(plans, backend="ref")
+    for got, (op, b, t, w) in zip(batch, queries):
+        want = _direct(op, b, t, w, "ref")
+        assert got == want, op
+        assert [c.kind for c in got.containers] == \
+               [c.kind for c in want.containers], op
+
+
+@pytest.mark.parametrize("seed", [3, 4])
+def test_execute_plan_host_is_bit_identical_and_jax_free(seed):
+    """The degradation path: numpy-only execution of a plan matches the
+    kernel dispatch bit for bit (same rows, same repack)."""
+    rng = np.random.default_rng(seed)
+    dists = [dense_runs, sparse_arrays, boundary_4096, disjoint_keys]
+    for i in range(8):
+        op, b, t, w = _random_query(rng, dists[i % 4])
+        host = aggregate.execute_plan_host(
+            aggregate.plan_wide(op, b, t, w, backend="ref"))
+        want = _direct(op, b, t, w, "ref")
+        assert host == want, op
+        assert [c.kind for c in host.containers] == \
+               [c.kind for c in want.containers], op
+
+
+def test_per_segment_thresholds_share_one_dispatch(rng):
+    """Threshold queries with DIFFERENT t values coalesce into one
+    dispatch via the kernel's per-segment threshold vector."""
+    k = 6
+    vals = dense_runs(rng, k)
+    bms = [bm(v) for v in vals]
+    plans = [aggregate.plan_wide("threshold", bms, t, backend="ref")
+             for t in range(2, k + 1)]
+    batch = aggregate.execute_plans(plans, backend="ref")
+    sets = [set(np.concatenate(vals).tolist()) for _ in range(1)]
+    counts = Counter()
+    for v in vals:
+        counts.update(v.tolist())
+    for t, got in zip(range(2, k + 1), batch):
+        want = {x for x, c in counts.items() if c >= t}
+        assert set(got.to_array().tolist()) == want, t
+
+
+def test_plan_wide_validates_at_admission():
+    with pytest.raises(ValueError, match="threshold"):
+        aggregate.plan_wide("threshold", [bm([1])], 0)
+    with pytest.raises(ValueError, match="weight"):
+        aggregate.plan_wide("threshold", [bm([1]), bm([2])], 1,
+                            weights=[1])
+    with pytest.raises(ValueError, match="minuend"):
+        aggregate.plan_wide("andnot", [])
+    with pytest.raises(ValueError, match="unknown wide op"):
+        aggregate.plan_wide("nand", [bm([1])])
+
+
+def test_plan_slab_bytes_accounting(rng):
+    a = bm(np.arange(0, 50000, dtype=np.uint32))          # bitset/run mix
+    b_ = bm(np.arange(25000, 70000, dtype=np.uint32))
+    plan = aggregate.plan_wide("or", [a, b_], backend="ref")
+    assert plan.slab_bytes() == \
+        sum(len(r) for r in plan.seg_rows) * 8192
+    empty = aggregate.plan_wide("or", [], backend="ref")
+    assert empty.slab_bytes() == 0

@@ -144,3 +144,46 @@ def test_memory_bytes_ordering(rng):
     bm, ref = rand_bm(rng, 1000, 1 << 26)
     bitset_bytes = (1 << 26) // 8
     assert bm.memory_bytes() < bitset_bytes / 100
+
+
+def test_version_bumps_on_every_observable_mutation(rng):
+    """Mutation-counter audit (serving caches revalidate against
+    ``_version``): any observable change through a mutating API must
+    change ``_version``, across every container-kind transition a
+    seeded random workload can drive.  The full mutator surface is
+    ``add`` / ``remove`` / ``run_optimize`` -- the set operators return
+    new bitmaps -- so stale SimilarityEngine slabs are impossible."""
+    bm = RoaringBitmap.from_values(
+        rng.choice(1 << 18, size=6000, replace=False).astype(np.uint32))
+    seen = set(bm.to_array().tolist())
+    for _ in range(400):
+        v = int(rng.integers(0, 1 << 18))
+        before = (bm._version, bm.cardinality)
+        if rng.random() < 0.5:
+            changed = v not in seen
+            bm.add(v)
+            seen.add(v)
+        else:
+            changed = v in seen
+            bm.remove(v)
+            seen.discard(v)
+        assert bm.cardinality == len(seen)
+        if changed:
+            assert bm._version != before[0], \
+                "observable mutation left _version unchanged"
+    v0 = bm._version
+    bm.run_optimize()                         # repacks containers
+    assert bm._version != v0
+    assert set(bm.to_array().tolist()) == seen
+
+
+def test_version_survives_copy_isolation(rng):
+    """Mutating a copy must never be observable through the original
+    (copy-on-write contract backing zero-copy wide aggregation)."""
+    bm = RoaringBitmap.from_values(np.arange(10000, dtype=np.uint32))
+    cp = bm.copy()
+    v0 = bm._version
+    cp.add(200_000)
+    cp.remove(5)
+    assert bm._version == v0
+    assert 5 in bm and 200_000 not in bm

@@ -78,23 +78,98 @@ def test_truncation_every_boundary_raises_value_error(rng, trial):
 
 def test_truncation_message_is_clear(rng):
     payload = serialize(_mixed_bitmap(rng))
-    with pytest.raises(ValueError, match="truncated roaring payload"):
+    # a truncated body fails the checksum before any structural parse
+    with pytest.raises(ValueError, match="checksum mismatch"):
         deserialize(payload[:len(payload) - 1])
     with pytest.raises(ValueError, match="header"):
-        deserialize(MAGIC)                    # magic only, no count
+        deserialize(MAGIC)                    # magic only, no crc/count
+
+
+def _refresh_crc(payload: bytearray) -> bytes:
+    """Recompute the RJ02 checksum so structural validation (not the
+    CRC) is what rejects a hand-corrupted payload."""
+    import struct
+    import zlib
+    payload[4:8] = struct.pack("<I", zlib.crc32(bytes(payload[8:])))
+    return bytes(payload)
 
 
 def test_bad_magic_and_bad_kind():
     with pytest.raises(ValueError, match="magic"):
-        deserialize(b"XXXX" + b"\x00" * 8)
+        deserialize(b"XXXX" + b"\x00" * 12)
     x = bm([1, 2, 3])
     payload = bytearray(serialize(x))
-    # kinds live right after the 2-byte key directory
-    payload[8 + 2] = 9
+    # kinds live right after the 2-byte key directory (header is
+    # magic 4 + crc 4 + count 4, one key here)
+    payload[12 + 2] = 9
     with pytest.raises(ValueError, match="kind"):
+        deserialize(_refresh_crc(payload))
+
+
+def test_checksum_guards_structural_fields():
+    """Any bare byte flip -- even one that would still parse -- is
+    caught by the CRC before structural validation runs."""
+    payload = bytearray(serialize(bm([1, 2, 3])))
+    payload[12] ^= 0xFF                       # flip a key byte
+    with pytest.raises(ValueError, match="checksum mismatch"):
         deserialize(bytes(payload))
 
 
 def test_empty_buffer():
     with pytest.raises(ValueError):
         deserialize(b"")
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_random_byte_flip_sweep_always_value_error(seed):
+    """Robustness contract: ANY single-byte corruption of a valid
+    payload must raise ValueError -- never crash, hang, or return a
+    silently-wrong bitmap.  The CRC layer guarantees single-byte flips
+    are always detected (CRC-32 catches every burst <= 32 bits)."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    x = _mixed_bitmap(rng)
+    payload = bytes(serialize(x))
+    positions = rng.choice(len(payload), size=min(len(payload), 200),
+                           replace=False)
+    for pos in positions.tolist():
+        flip = int(rng.integers(1, 256))      # never a no-op flip
+        corrupt = bytearray(payload)
+        corrupt[pos] ^= flip
+        with pytest.raises(ValueError):
+            deserialize(bytes(corrupt))
+
+
+def test_structural_validation_behind_valid_crc(rng):
+    """Defense in depth: payloads with a VALID checksum but broken
+    structure (built wrong, not damaged in flight) still raise."""
+    import struct
+
+    x = _mixed_bitmap(rng)
+    base = serialize(x)
+    n = struct.unpack_from("<I", base, 8)[0]
+    # unsorted keys: swap the first two directory entries
+    if n >= 2:
+        p = bytearray(base)
+        p[12:14], p[14:16] = p[14:16], p[12:14]
+        with pytest.raises(ValueError):
+            deserialize(_refresh_crc(p))
+    # trailing garbage past the last payload byte
+    p = bytearray(base + b"\x00\x07")
+    with pytest.raises(ValueError, match="trailing"):
+        deserialize(_refresh_crc(p))
+
+
+def test_bitset_card_cross_check(rng):
+    """A bitset whose stored cardinality disagrees with its popcount is
+    rejected (that mismatch is exactly a 'silently wrong' bitmap)."""
+    import struct
+
+    vals = rng.choice(1 << 16, size=5000, replace=False).astype(np.uint32)
+    x = bm(vals.tolist())                     # one bitset container
+    assert x.containers[0].kind == "bitset"
+    p = bytearray(serialize(x))
+    # cards directory entry (one container): magic4+crc4+n4+key2+kind1
+    struct.pack_into("<H", p, 15, 4999 - 1)
+    with pytest.raises(ValueError, match="popcount"):
+        deserialize(_refresh_crc(p))

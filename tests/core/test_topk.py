@@ -194,3 +194,39 @@ def test_pruning_never_changes_results(rng):
             assert np.array_equal(idx_h, idx_r), (qi, metric)
             assert np.array_equal(sc_h, sc_r), (qi, metric)
             assert np.array_equal(in_h, in_r), (qi, metric)
+
+
+@pytest.mark.parametrize("metric", sorted(METRICS))
+def test_topk_batch_matches_per_query_topk(rng, metric):
+    """The server's similarity coalescing path: a vmapped batch on the
+    kernel backend and the host loop must both equal per-query ``topk``
+    exactly (indices, float32 scores, intersections)."""
+    cands = [RoaringBitmap.from_values(
+        rng.choice(1 << 17, int(rng.integers(30, 3000)),
+                   replace=False).astype(np.uint32)) for _ in range(25)]
+    eng = SimilarityEngine(cands)
+    queries = [0, 7, 24,
+               RoaringBitmap.from_values(
+                   rng.choice(1 << 17, 500,
+                              replace=False).astype(np.uint32)),
+               RoaringBitmap()]
+    for backend in ("ref", None, "host"):
+        got = eng.topk_batch(queries, 6, metric, backend=backend)
+        for q, (gi, gs, gn) in zip(queries, got):
+            wi, ws, wn = eng.topk(q, 6, metric, backend=backend)
+            assert np.array_equal(gi, wi)
+            assert np.array_equal(gs, ws)
+            assert np.array_equal(gn, wn)
+
+
+def test_topk_batch_edge_cases(rng):
+    eng = SimilarityEngine([RoaringBitmap.from_values(
+        np.arange(100, dtype=np.uint32))])
+    # member query of a 1-candidate engine: nothing left after exclusion
+    out = eng.topk_batch([0], 5, backend="ref")
+    assert out[0][0].size == 0
+    assert eng.topk_batch([], 5, backend="ref") == []
+    with pytest.raises(ValueError):
+        eng.topk_batch([0], 5, metric="bogus", backend="ref")
+    with pytest.raises(IndexError):
+        eng.topk_batch([3], 5, backend="ref")

@@ -1,0 +1,97 @@
+"""Unknown-term / empty-input contract, parametrized over EVERY
+``InvertedIndex`` query entry point (the class docstring's promise: a
+documented empty result, never a ``KeyError``).
+
+The query server admits queries without checking term existence, so
+this contract is what keeps unknown terms a data condition rather than
+a failure mode.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import RoaringBitmap
+from repro.data.index import InvertedIndex
+
+GHOST = "no-such-term"
+
+
+@pytest.fixture(scope="module")
+def index():
+    rng = np.random.default_rng(5)
+    vocab = [f"w{i}" for i in range(20)]
+    docs = [[vocab[j] for j in
+             rng.choice(20, size=int(rng.integers(2, 8)), replace=False)]
+            for _ in range(500)]
+    return InvertedIndex().build(docs)
+
+
+# every entry point, exercised with only-unknown terms: (name, call)
+UNKNOWN_CALLS = [
+    ("query_and", lambda ix: ix.query_and(GHOST)),
+    ("query_and_mixed", lambda ix: ix.query_and("w0", GHOST)),
+    ("query_or", lambda ix: ix.query_or(GHOST, GHOST + "2")),
+    ("query_xor", lambda ix: ix.query_xor(GHOST, GHOST + "2")),
+    ("query_andnot_keep", lambda ix: ix.query_andnot(GHOST, "w0")),
+    ("query_threshold", lambda ix: ix.query_threshold([GHOST, GHOST], 1)),
+    ("query_threshold_weighted",
+     lambda ix: ix.query_threshold([GHOST, GHOST], 2, weights=[2, 3])),
+]
+
+
+@pytest.mark.parametrize("name,call", UNKNOWN_CALLS,
+                         ids=[n for n, _ in UNKNOWN_CALLS])
+def test_unknown_terms_give_empty_bitmap(index, name, call):
+    out = call(index)
+    assert isinstance(out, RoaringBitmap)
+    assert out.cardinality == 0
+
+
+EMPTY_CALLS = [
+    ("query_and", lambda ix: ix.query_and()),
+    ("query_or", lambda ix: ix.query_or()),
+    ("query_xor", lambda ix: ix.query_xor()),
+    ("query_andnot_no_drops", lambda ix: ix.query_andnot(GHOST)),
+    ("query_threshold", lambda ix: ix.query_threshold([], 1)),
+]
+
+
+@pytest.mark.parametrize("name,call", EMPTY_CALLS,
+                         ids=[n for n, _ in EMPTY_CALLS])
+def test_empty_inputs_give_empty_bitmap(index, name, call):
+    out = call(index)
+    assert isinstance(out, RoaringBitmap)
+    assert out.cardinality == 0
+
+
+def test_unknown_drops_subtract_nothing(index):
+    assert index.query_andnot("w0", GHOST) == index.query_or("w0")
+
+
+def test_counts_and_scores_on_unknown_terms(index):
+    assert index.count_and(GHOST, "w0") == 0
+    assert index.count_and(GHOST, GHOST) == 0
+    assert index.jaccard(GHOST, "w0") == 0.0
+    assert index.jaccard(GHOST, GHOST) == 1.0    # two empty sets
+
+
+def test_similar_unknown_term_scores_empty_query(index):
+    out = index.similar(GHOST, top_k=5)
+    assert len(out) == 5                          # clamped to vocab only
+    assert all(s == 0.0 for _, s in out)
+    assert all(t in index.postings for t, _ in out)
+
+
+def test_similar_on_empty_index():
+    ix = InvertedIndex()
+    assert ix.similar(GHOST, top_k=3) == []
+    assert ix.query_or(GHOST).cardinality == 0
+
+
+def test_no_entry_point_raises_keyerror(index):
+    """The blanket promise, stated as code: no query-surface call with
+    unknown terms may raise."""
+    for _, call in UNKNOWN_CALLS + EMPTY_CALLS:
+        call(index)
+    index.similar(GHOST, top_k=2, metric="cosine")
+    index.similar(GHOST, top_k=2, metric="containment")
