@@ -4,6 +4,7 @@ Host path:   RoaringBitmap (dynamic containers, paper-faithful semantics)
 Device path: RoaringTensor (fixed-capacity slab layout for jit/pjit)
 """
 
+from repro.core.arena import ArenaStats, BitmapArena
 from repro.core.bitmap import RoaringBitmap
 from repro.core.builder import (
     complement, flip_range, from_dense, from_indices, to_dense,

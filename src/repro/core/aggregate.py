@@ -189,6 +189,42 @@ def _indicator_row(arrays: list[ArrayContainer], op: str) -> np.ndarray:
                        bitorder="little").view(np.uint64)
 
 
+def _row_ref(c: Container, arena):
+    """Slab-row reference for one container: the arena row id (int) when
+    the container is resident, else its promoted (1024,) uint64 words.
+    ``_dispatch`` gathers int refs on-device (zero PCIe) and stages only
+    the ndarray refs per call (see core/arena.py)."""
+    if arena is not None:
+        rid = arena.lookup(c)
+        if rid is not None:
+            return rid
+    return _words_row(c)
+
+
+def _array_rows(arrays: list[ArrayContainer], op: str, arena) -> list:
+    """Slab rows for one group's array containers.  Without an arena the
+    group collapses into a single indicator row (host bincount).  With an
+    arena, resident arrays keep their individual device rows -- reducing
+    them row-wise is bit-identical to the collapsed indicator for "or" /
+    "xor" (parity per value is associative) -- and only the cold remainder
+    collapses into one staged indicator row."""
+    if not arrays:
+        return []
+    if arena is None:
+        return [_indicator_row(arrays, op)]
+    rows: list = []
+    cold: list[ArrayContainer] = []
+    for a in arrays:
+        rid = arena.lookup(a)
+        if rid is not None:
+            rows.append(rid)
+        else:
+            cold.append(a)
+    if cold:
+        rows.append(_indicator_row(cold, op))
+    return rows
+
+
 def _from_indicator(ind: np.ndarray) -> Container | None:
     """(CHUNK,) 0/1 indicator -> optimal container (None when empty)."""
     card = int(ind.sum())
@@ -349,7 +385,7 @@ def _repack_segments(seg_keys, words, cards) -> dict[int, Container]:
 def _dispatch(seg_keys: list, seg_rows: list[list[np.ndarray]],
               op: str, threshold, backend,
               seg_weights: list[list[int]] | None = None,
-              mesh=None) -> dict:
+              mesh=None, arena=None) -> dict:
     """Stack per-segment rows into one slab, reduce in one kernel call,
     repack each segment's (words, card) into the optimal container kind.
     With a multi-device mesh, rows shard across the mesh axis instead
@@ -359,7 +395,10 @@ def _dispatch(seg_keys: list, seg_rows: list[list[np.ndarray]],
     query; ``(query, chunk-key)`` tuples on the coalesced multi-query
     path).  ``threshold`` is an int, or -- for op "threshold" -- a
     per-segment sequence aligned with ``seg_keys`` (each coalesced query
-    carries its own T into the same dispatch)."""
+    carries its own T into the same dispatch).  With an ``arena``
+    (core/arena.py), row entries may be int slab-row ids: those gather
+    from the resident device slab (no per-call staging) and only ndarray
+    rows ride a staged block appended after it."""
     if not seg_keys:
         return {}
     tvec = None if isinstance(threshold, (int, np.integer)) else \
@@ -372,12 +411,16 @@ def _dispatch(seg_keys: list, seg_rows: list[list[np.ndarray]],
     # minuend for "andnot"; for "threshold" the row survives iff its own
     # weight reaches t), so a host popcount beats the pad/stack/transfer
     # of a kernel dispatch.  This is the small-K hot path: collapsed
-    # array groups contribute exactly one indicator row per key.
+    # array groups contribute exactly one indicator row per key.  Arena-
+    # resident singletons (int row ids) are NOT peeled: their words are
+    # already on device, so the device gather beats pulling them back to
+    # the host just to popcount.
     peeled: dict = {}
-    keep = [i for i, rows in enumerate(seg_rows) if len(rows) > 1]
+    keep = [i for i, rows in enumerate(seg_rows)
+            if len(rows) > 1 or not isinstance(rows[0], np.ndarray)]
     if len(keep) != len(seg_keys):
         for i, (key, rows) in enumerate(zip(seg_keys, seg_rows)):
-            if len(rows) != 1:
+            if len(rows) != 1 or not isinstance(rows[0], np.ndarray):
                 continue
             if op == "threshold" and \
                     (seg_weights[i][0] if seg_weights else 1) < _t(i):
@@ -395,6 +438,12 @@ def _dispatch(seg_keys: list, seg_rows: list[list[np.ndarray]],
             return peeled
     mesh = _resolve_mesh(mesh)
     if mesh is not None and _mesh_size(mesh) > 1:
+        if arena is not None:
+            # the sharded path re-slices rows across devices; resolve
+            # resident ids through the host mirror (same bytes)
+            seg_rows = [[r if isinstance(r, np.ndarray) else
+                         arena.host_row(r) for r in rows]
+                        for rows in seg_rows]
         lens = [len(r) for r in seg_rows]
         slab64 = np.stack([w for rows in seg_rows for w in rows])
         slab32 = slab64.view(np.uint32).reshape(slab64.shape[0], WORDS)
@@ -426,9 +475,7 @@ def _dispatch(seg_keys: list, seg_rows: list[list[np.ndarray]],
     for jmax, idxs in sorted(by_depth.items()):
         rows_g = [seg_rows[i] for i in idxs]
         lens = [len(r) for r in rows_g]
-        slab64 = np.stack([w for rows in rows_g for w in rows])
-        n = slab64.shape[0]
-        slab32 = slab64.view(np.uint32).reshape(n, WORDS)
+        n = sum(lens)
         wts_g = None if seg_weights is None else \
             [seg_weights[i] for i in idxs]
         tv_g = None if tvec is None else [tvec[i] for i in idxs]
@@ -449,12 +496,9 @@ def _dispatch(seg_keys: list, seg_rows: list[list[np.ndarray]],
         # pad rows / segments to powers of two so jit and kernel
         # specializations are reused across calls
         n_pad = _pow2(n)
-        if n_pad != n:
-            slab32 = np.concatenate(
-                [slab32, np.zeros((n_pad - n, WORDS), np.uint32)])
-            if weights is not None:
-                weights = np.concatenate(
-                    [weights, np.ones(n_pad - n, np.int32)])
+        if weights is not None and n_pad != n:
+            weights = np.concatenate(
+                [weights, np.ones(n_pad - n, np.int32)])
         s = len(lens)
         s_pad = _pow2(s)
         if s_pad != s:
@@ -464,14 +508,58 @@ def _dispatch(seg_keys: list, seg_rows: list[list[np.ndarray]],
                 # padded segments are empty (zero rows): their T is inert
                 t_arg = np.concatenate(
                     [t_arg, np.ones(s_pad - s, np.int32)])
-        words, cards = kops.segment_reduce(
-            jnp.asarray(slab32), jnp.asarray(starts), op, jmax=jmax,
-            threshold=t_arg if tv_g is None else jnp.asarray(t_arg),
-            weights=None if weights is None else jnp.asarray(weights),
-            planes=planes, wbits=wbits, backend=backend)
+        t_kw = t_arg if tv_g is None else jnp.asarray(t_arg)
+        w_kw = None if weights is None else jnp.asarray(weights)
+        if arena is None:
+            slab64 = np.stack([w for rows in rows_g for w in rows])
+            slab32 = slab64.view(np.uint32).reshape(n, WORDS)
+            if n_pad != n:
+                slab32 = np.concatenate(
+                    [slab32, np.zeros((n_pad - n, WORDS), np.uint32)])
+            words, cards = kops.segment_reduce(
+                jnp.asarray(slab32), jnp.asarray(starts), op, jmax=jmax,
+                threshold=t_kw, weights=w_kw,
+                planes=planes, wbits=wbits, backend=backend)
+        else:
+            table, ids = _stage_arena_rows(arena, rows_g, n_pad)
+            words, cards = kops.segment_reduce_rows(
+                table, ids, jnp.asarray(starts), op, jmax=jmax,
+                threshold=t_kw, weights=w_kw,
+                planes=planes, wbits=wbits, backend=backend)
         peeled.update(_repack_segments(
             [seg_keys[i] for i in idxs], words[:s], cards[:s]))
     return peeled
+
+
+def _stage_arena_rows(arena, rows_g: list[list], n_pad: int):
+    """Turn one depth bucket's row refs into ``segment_reduce_rows``
+    inputs: resident ids index the arena's device slab directly; cold
+    ndarray rows stage into a pow2-padded host block appended after it.
+    Padding ids point at row 0, the arena's reserved all-zero row (the
+    kernel masks padding by segment length anyway).  Warm queries hit
+    the ``host == []`` branch: the only host->device traffic is the id
+    vector itself."""
+    table = arena.device_slab()
+    base = int(table.shape[0])
+    ids: list[int] = []
+    host: list[np.ndarray] = []
+    for rows in rows_g:
+        for r in rows:
+            if isinstance(r, np.ndarray):
+                ids.append(base + len(host))
+                host.append(r)
+            else:
+                ids.append(int(r))
+    ids.extend([0] * (n_pad - len(ids)))
+    if host:
+        h_pad = _pow2(len(host))
+        hb = np.zeros((h_pad, 1024), np.uint64)
+        hb[: len(host)] = np.stack(host)
+        table = jnp.concatenate(
+            [table, jnp.asarray(hb.view(np.uint32).reshape(h_pad, WORDS))])
+        arena.stats.host_rows_staged += len(host)
+    arena.stats.device_gathers += 1
+    return table, jnp.asarray(np.asarray(ids, np.int32))
 
 
 def _shard_plan(seg_sizes: list[int], d: int, op: str,
@@ -614,13 +702,19 @@ class WidePlan:
     dispatch per op class -- a query id is just another segment
     coordinate -- and ``execute_plan_host`` is the numpy-only twin the
     query server degrades to when a kernel batch fails (bit-identical by
-    construction: same rows, same repack)."""
+    construction: same rows, same repack).
+
+    With an ``arena`` (core/arena.py), ``seg_rows`` entries may be int
+    device-slab row ids instead of promoted uint64 rows: those never
+    cross PCIe at dispatch.  ``execute_plans`` only coalesces plans that
+    share the same arena (or its absence)."""
     op: str                               # dispatch class (OPS member)
     threshold: int                        # per-plan T (0 off-threshold)
     merged: dict[int, Container]          # host-resolved chunks
     seg_keys: list[int]                   # chunk key per pending segment
-    seg_rows: list[list[np.ndarray]]      # uint64 rows per pending segment
+    seg_rows: list[list]                  # uint64 row | arena row id each
     seg_weights: list[list[int]] | None = None
+    arena: object | None = None           # BitmapArena owning the id rows
 
     def slab_bytes(self) -> int:
         """Bytes this plan contributes to a coalesced slab (the admission
@@ -629,7 +723,7 @@ class WidePlan:
 
 
 def plan_wide(op: str, bitmaps, t: int = 0, weights=None, *,
-              backend: str | None = None) -> WidePlan:
+              backend: str | None = None, arena=None) -> WidePlan:
     """Plan one wide aggregate without dispatching it.
 
     ``op`` is "or" | "and" | "xor" | "andnot" | "threshold"; for "andnot"
@@ -637,20 +731,27 @@ def plan_wide(op: str, bitmaps, t: int = 0, weights=None, *,
     "threshold", ``t`` / ``weights`` follow ``threshold_many`` (t == 1
     degenerates to an "or" plan and coalesces with the or class).
     Validation errors (bad op, t < 1, bad weights) raise here, at
-    admission time -- never inside a dispatch batch."""
+    admission time -- never inside a dispatch batch.
+
+    ``arena``: a ``core.arena.BitmapArena``; containers already resident
+    in it plan as device-slab row ids (no promotion, no staging at
+    dispatch).  Containers the arena does not know stage per-call exactly
+    as without one -- results are bit-identical either way, residency is
+    purely a transfer optimization (adopt bitmaps first to get warm
+    plans)."""
     bitmaps = list(bitmaps)
     if op == "or":
-        return _plan_or(bitmaps, backend)
+        return _plan_or(bitmaps, backend, arena)
     if op == "xor":
-        return _plan_xor(bitmaps, backend)
+        return _plan_xor(bitmaps, backend, arena)
     if op == "and":
-        return _plan_and(bitmaps, backend)
+        return _plan_and(bitmaps, backend, arena)
     if op == "andnot":
         if not bitmaps:
             raise ValueError("andnot needs at least the minuend")
-        return _plan_andnot(bitmaps[0], bitmaps[1:], backend)
+        return _plan_andnot(bitmaps[0], bitmaps[1:], backend, arena)
     if op == "threshold":
-        return _plan_threshold(bitmaps, t, weights, backend)
+        return _plan_threshold(bitmaps, t, weights, backend, arena)
     raise ValueError(f"unknown wide op {op!r}")
 
 
@@ -658,7 +759,8 @@ def _finish(plan: WidePlan, backend, mesh):
     merged = dict(plan.merged)
     merged.update(_dispatch(plan.seg_keys, plan.seg_rows, plan.op,
                             plan.threshold, backend,
-                            seg_weights=plan.seg_weights, mesh=mesh))
+                            seg_weights=plan.seg_weights, mesh=mesh,
+                            arena=plan.arena))
     return _build(merged)
 
 
@@ -674,13 +776,13 @@ def execute_plans(plans, *, backend: str | None = None,
     repack path is shared."""
     plans = list(plans)
     results = [dict(p.merged) for p in plans]
-    by_op: dict[str, list[int]] = {}
+    by_op: dict[tuple, list[int]] = {}       # (op, arena identity) class
     for i, p in enumerate(plans):
         if p.seg_keys:
-            by_op.setdefault(p.op, []).append(i)
-    for op, idxs in by_op.items():
+            by_op.setdefault((p.op, id(p.arena)), []).append(i)
+    for (op, _), idxs in by_op.items():
         keys: list = []
-        rows: list[list[np.ndarray]] = []
+        rows: list[list] = []
         wts: list[list[int]] = []
         ts: list[int] = []
         any_w = any(plans[i].seg_weights is not None for i in idxs)
@@ -694,7 +796,8 @@ def execute_plans(plans, *, backend: str | None = None,
                            else [[1] * len(r) for r in p.seg_rows])
         out = _dispatch(keys, rows, op,
                         ts if op == "threshold" else 0, backend,
-                        seg_weights=wts if any_w else None, mesh=mesh)
+                        seg_weights=wts if any_w else None, mesh=mesh,
+                        arena=plans[idxs[0]].arena)
         for (i, k), cont in out.items():
             results[i][k] = cont
     return [_build(r) for r in results]
@@ -708,9 +811,13 @@ def execute_plan_host(plan: WidePlan):
     (the same rows the slab dispatch would consume) and repacks through
     the same ``optimize(C._result_from_bitset(...))`` path, so the result
     is bit-identical to the kernel plan -- only slower.  Touches no jax
-    API at all."""
+    API at all: arena row ids resolve through the arena's authoritative
+    HOST mirror, never the device slab."""
     merged = dict(plan.merged)
     for i, (key, seg) in enumerate(zip(plan.seg_keys, plan.seg_rows)):
+        if plan.arena is not None:
+            seg = [r if isinstance(r, np.ndarray)
+                   else plan.arena.host_row(r) for r in seg]
         stack = np.stack(seg)                       # (R, 1024) uint64
         if plan.op == "or":
             w = np.bitwise_or.reduce(stack, axis=0)
@@ -742,14 +849,17 @@ def execute_plan_host(plan: WidePlan):
 # public wide aggregates
 # ---------------------------------------------------------------------------
 
-def or_many(bitmaps, *, backend: str | None = None, mesh=None):
+def or_many(bitmaps, *, backend: str | None = None, mesh=None,
+            arena=None):
     """Union of K bitmaps in one kernel dispatch (paper section 5.8);
-    with a multi-device ``mesh``, one sharded dispatch per shard."""
-    return _finish(plan_wide("or", bitmaps, backend=backend), backend,
-                   mesh)
+    with a multi-device ``mesh``, one sharded dispatch per shard.
+    ``arena``: resident containers dispatch from the device slab without
+    per-call staging (see ``plan_wide``)."""
+    return _finish(plan_wide("or", bitmaps, backend=backend,
+                             arena=arena), backend, mesh)
 
 
-def _plan_or(bitmaps, backend) -> WidePlan:
+def _plan_or(bitmaps, backend, arena=None) -> WidePlan:
     if len(bitmaps) <= 1:
         return WidePlan("or", 0,
                         dict(zip(bitmaps[0].keys, bitmaps[0].containers))
@@ -783,22 +893,24 @@ def _plan_or(bitmaps, backend) -> WidePlan:
                 if c is not None:
                     merged[k] = c
                 continue
-        rows = [_indicator_row(arrays, "or")] if arrays else []
-        rows.extend(_words_row(c) for c in others)
+        rows = _array_rows(arrays, "or", arena)
+        rows.extend(_row_ref(c, arena) for c in others)
         seg_keys.append(k)
         seg_rows.append(rows)
     merged.update(_sweep_run_groups(run_groups, "or", 0))
-    return WidePlan("or", 0, merged, seg_keys, seg_rows)
+    return WidePlan("or", 0, merged, seg_keys, seg_rows, arena=arena)
 
 
-def xor_many(bitmaps, *, backend: str | None = None, mesh=None):
+def xor_many(bitmaps, *, backend: str | None = None, mesh=None,
+             arena=None):
     """Wide symmetric difference: a value survives iff it occurs in an odd
-    number of inputs (K-ary XOR)."""
-    return _finish(plan_wide("xor", bitmaps, backend=backend), backend,
-                   mesh)
+    number of inputs (K-ary XOR).  ``arena``: resident containers dispatch
+    from the device slab without per-call staging (see ``plan_wide``)."""
+    return _finish(plan_wide("xor", bitmaps, backend=backend,
+                             arena=arena), backend, mesh)
 
 
-def _plan_xor(bitmaps, backend) -> WidePlan:
+def _plan_xor(bitmaps, backend, arena=None) -> WidePlan:
     if len(bitmaps) <= 1:
         return WidePlan("xor", 0,
                         dict(zip(bitmaps[0].keys, bitmaps[0].containers))
@@ -823,15 +935,16 @@ def _plan_xor(bitmaps, backend) -> WidePlan:
             if c is not None:
                 merged[k] = c
             continue
-        rows = [_indicator_row(arrays, "xor")] if arrays else []
-        rows.extend(_words_row(c) for c in others)
+        rows = _array_rows(arrays, "xor", arena)
+        rows.extend(_row_ref(c, arena) for c in others)
         seg_keys.append(k)
         seg_rows.append(rows)
     merged.update(_sweep_run_groups(run_groups, "xor", 0))
-    return WidePlan("xor", 0, merged, seg_keys, seg_rows)
+    return WidePlan("xor", 0, merged, seg_keys, seg_rows, arena=arena)
 
 
-def and_many(bitmaps, *, backend: str | None = None, mesh=None):
+def and_many(bitmaps, *, backend: str | None = None, mesh=None,
+             arena=None):
     """Intersection of K bitmaps: cardinality-ascending key pruning with
     empty-key early exit, array-anchored host filtering for sparse groups,
     one kernel dispatch for the dense remainder.
@@ -840,12 +953,14 @@ def and_many(bitmaps, *, backend: str | None = None, mesh=None):
     axis like the other aggregates: each shard ANDs its local rows and
     exchanges an occupancy mask with its partial, so shards holding no
     rows of a segment contribute the all-ones identity instead of the
-    kernel's empty-segment zeros (see ``_shard_reduce``)."""
-    return _finish(plan_wide("and", bitmaps, backend=backend), backend,
-                   mesh)
+    kernel's empty-segment zeros (see ``_shard_reduce``).  ``arena``:
+    resident containers dispatch from the device slab without per-call
+    staging (see ``plan_wide``)."""
+    return _finish(plan_wide("and", bitmaps, backend=backend,
+                             arena=arena), backend, mesh)
 
 
-def _plan_and(bitmaps, backend) -> WidePlan:
+def _plan_and(bitmaps, backend, arena=None) -> WidePlan:
     if len(bitmaps) <= 1:
         return WidePlan("and", 0,
                         dict(zip(bitmaps[0].keys, bitmaps[0].containers))
@@ -881,13 +996,13 @@ def _plan_and(bitmaps, backend) -> WidePlan:
                 merged[k] = ArrayContainer(vals)
             continue
         seg_keys.append(k)
-        seg_rows.append([_words_row(c) for c in g])
+        seg_rows.append([_row_ref(c, arena) for c in g])
     merged.update(_sweep_run_groups(run_groups, "and", 0))
-    return WidePlan("and", 0, merged, seg_keys, seg_rows)
+    return WidePlan("and", 0, merged, seg_keys, seg_rows, arena=arena)
 
 
 def andnot_many(minuend, subtrahends, *, backend: str | None = None,
-                mesh=None):
+                mesh=None, arena=None):
     """Difference chain ``a - (b1 | b2 | ...)`` as ONE plan: subtrahends
     OR-reduce segment-wise and a fused ANDNOT finalizes in the kernel
     ("Compressed bitmap indexes: beyond unions and intersections",
@@ -895,12 +1010,15 @@ def andnot_many(minuend, subtrahends, *, backend: str | None = None,
 
     Keys absent from every subtrahend pass through zero-copy; keys whose
     subtrahend group contains a full chunk drop immediately; array-probe
-    and interval-sweep fast paths mirror the other aggregates."""
+    and interval-sweep fast paths mirror the other aggregates.
+    ``arena``: resident containers dispatch from the device slab without
+    per-call staging (see ``plan_wide``)."""
     return _finish(plan_wide("andnot", [minuend, *subtrahends],
-                             backend=backend), backend, mesh)
+                             backend=backend, arena=arena), backend,
+                   mesh)
 
 
-def _plan_andnot(minuend, subtrahends, backend) -> WidePlan:
+def _plan_andnot(minuend, subtrahends, backend, arena=None) -> WidePlan:
     if not subtrahends:
         return WidePlan("andnot", 0,
                         dict(zip(minuend.keys, minuend.containers)),
@@ -937,14 +1055,13 @@ def _plan_andnot(minuend, subtrahends, backend) -> WidePlan:
             continue
         arrays = [x for x in g if isinstance(x, ArrayContainer)]
         others = [x for x in g if not isinstance(x, ArrayContainer)]
-        rows = [_words_row(c)]                     # minuend is row 0
-        if arrays:
-            rows.append(_indicator_row(arrays, "or"))
-        rows.extend(_words_row(x) for x in others)
+        rows = [_row_ref(c, arena)]                # minuend is row 0
+        rows.extend(_array_rows(arrays, "or", arena))
+        rows.extend(_row_ref(x, arena) for x in others)
         seg_keys.append(k)
         seg_rows.append(rows)
     merged.update(_sweep_run_groups(run_groups, "andnot", 0))
-    return WidePlan("andnot", 0, merged, seg_keys, seg_rows)
+    return WidePlan("andnot", 0, merged, seg_keys, seg_rows, arena=arena)
 
 
 def _check_weights(weights, k: int) -> list[int] | None:
@@ -967,7 +1084,7 @@ def _check_weights(weights, k: int) -> list[int] | None:
 
 
 def threshold_many(bitmaps, t: int, *, weights=None,
-                   backend: str | None = None, mesh=None):
+                   backend: str | None = None, mesh=None, arena=None):
     """T-occurrence query: values whose (weighted) occurrence count over
     the K inputs reaches ``t`` (Kaser & Lemire's threshold function; T=1 is
     union, unweighted T=K intersection).
@@ -975,12 +1092,15 @@ def threshold_many(bitmaps, t: int, *, weights=None,
     ``weights`` are per-bitmap positive integers added into the same
     bit-sliced counter circuit (weight 1 everywhere degenerates to the
     unweighted plan, bit for bit).  Keys whose total attainable weight
-    stays below ``t`` are pruned on the host."""
+    stays below ``t`` are pruned on the host.  ``arena``: resident
+    containers dispatch from the device slab without per-call staging
+    (see ``plan_wide``)."""
     return _finish(plan_wide("threshold", bitmaps, t, weights,
-                             backend=backend), backend, mesh)
+                             backend=backend, arena=arena), backend,
+                   mesh)
 
 
-def _plan_threshold(bitmaps, t, weights, backend) -> WidePlan:
+def _plan_threshold(bitmaps, t, weights, backend, arena=None) -> WidePlan:
     t = int(t)
     if t < 1:
         raise ValueError(f"threshold must be >= 1, got {t}")
@@ -989,9 +1109,10 @@ def _plan_threshold(bitmaps, t, weights, backend) -> WidePlan:
             (weights is not None and t > sum(weights)):
         return WidePlan("threshold", t, {}, [], [])
     if t == 1:
-        return _plan_or(bitmaps, backend)          # coalesces with "or"
+        return _plan_or(bitmaps, backend, arena)   # coalesces with "or"
     if weights is not None:
-        return _plan_threshold_weighted(bitmaps, t, weights, backend)
+        return _plan_threshold_weighted(bitmaps, t, weights, backend,
+                                        arena)
     groups = _group(bitmaps)
     merged: dict[int, Container] = {}
     seg_keys: list[int] = []
@@ -1010,13 +1131,14 @@ def _plan_threshold(bitmaps, t, weights, backend) -> WidePlan:
                 merged[k] = c
             continue
         seg_keys.append(k)
-        seg_rows.append([_words_row(c) for c in g])
+        seg_rows.append([_row_ref(c, arena) for c in g])
     merged.update(_sweep_run_groups(run_groups, "threshold", t))
-    return WidePlan("threshold", t, merged, seg_keys, seg_rows)
+    return WidePlan("threshold", t, merged, seg_keys, seg_rows,
+                    arena=arena)
 
 
 def _plan_threshold_weighted(bitmaps, t: int, weights: list[int],
-                             backend) -> WidePlan:
+                             backend, arena=None) -> WidePlan:
     """Weighted threshold body: identical planning shape, with per-member
     weights threaded through the sweep, the bincount fast path, and the
     kernel's shift-and-add counter circuit."""
@@ -1048,7 +1170,8 @@ def _plan_threshold_weighted(bitmaps, t: int, weights: list[int],
                 merged[k] = c
             continue
         seg_keys.append(k)
-        seg_rows.append([_words_row(c) for c, _ in g])
+        seg_rows.append([_row_ref(c, arena) for c, _ in g])
         seg_wts.append([w for _, w in g])
     merged.update(_sweep_run_groups(run_groups, "threshold", t))
-    return WidePlan("threshold", t, merged, seg_keys, seg_rows, seg_wts)
+    return WidePlan("threshold", t, merged, seg_keys, seg_rows, seg_wts,
+                    arena=arena)

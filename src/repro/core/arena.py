@@ -1,0 +1,270 @@
+"""Device-resident bitmap arena: promote containers ONCE, query forever.
+
+Every kernel path in this repo used to re-stage containers from host
+numpy into a fresh padded slab on each call (``aggregate._dispatch``
+pad/stack/transfer, ``pairwise`` per-class staging).  ``BitmapArena``
+fixes that on the hot path: container rows are promoted once into a
+device-resident slab, a host-side directory maps container objects to
+slab rows, and warm queries move only row *ids*, segment offsets, and
+results over PCIe -- never container payloads.
+
+Layout and lifecycle (see docs/MEMORY.md for diagrams):
+
+* **Host mirror** ``_host`` -- ``(capacity, 1024)`` uint64, the
+  authoritative copy.  Row 0 is permanently reserved all-zero so kernel
+  paths can pad ragged segments with id 0.
+* **Device slab** ``_dev`` -- ``(capacity, 2048)`` uint32 ``jax`` array,
+  uploaded lazily on the first :meth:`device_slab` call.  Edits batch
+  into ONE scatter (``slab.at[ids].set(rows)``); the functional update
+  allocates a fresh device buffer, so in-flight dispatches that captured
+  the previous slab stay valid -- copy-on-write for free.
+* **Directory** -- ``id(container) -> row``.  Correctness is structural,
+  not generational: ``RoaringBitmap`` mutators replace container objects
+  copy-on-write (the PR 6 ``_version`` audit), so a stale bitmap's new
+  containers simply *miss* the lookup and are staged from host --
+  bit-identical either way.  The per-bitmap ``_version`` snapshot only
+  decides *when* :meth:`adopt` re-walks a bitmap; rows shared between
+  bitmaps are refcounted.
+
+Typical use::
+
+    arena = BitmapArena()
+    arena.adopt_many(bitmaps)                    # promote once
+    or_many(bitmaps, arena=arena)                # warm: zero row uploads
+    bitmaps[0].add(7)                            # host edit
+    arena.adopt(bitmaps[0])                      # patches 1 row, 1 scatter
+
+Complexity: :meth:`adopt` is O(changed containers) host work plus one
+O(changed rows) device scatter; :meth:`lookup` is a dict hit; warm
+dispatch gathers rows on-device (no PCIe).  ``docs/ARCHITECTURE.md`` §7
+covers the data flow, ``docs/MEMORY.md`` the memory lifecycle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import containers as C
+from repro.kernels.ref import WORDS
+
+
+@dataclasses.dataclass
+class ArenaStats:
+    """Monotone transfer/patch counters -- the observability contract the
+    zero-transfer tests assert against.
+
+    ``rows_uploaded`` counts every container row that crossed host ->
+    device (initial slab upload + incremental patches); a warm re-query
+    must leave it unchanged.  ``host_rows_staged`` is bumped by
+    ``aggregate._dispatch`` for each non-resident row it had to stage
+    per-call (an arena *miss*).  ``device_gathers`` counts dispatches
+    that gathered resident rows on-device (zero PCIe for those rows).
+    """
+
+    rows_promoted: int = 0      # container -> word-row promotions (host)
+    rows_uploaded: int = 0      # rows that crossed host -> device
+    rows_patched: int = 0       # scatter updates to already-device rows
+    rows_freed: int = 0         # rows released back to the free list
+    revalidations: int = 0      # adopt() calls that found a stale version
+    device_gathers: int = 0     # on-device row gathers (no PCIe)
+    host_rows_staged: int = 0   # per-call staged rows (arena misses)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class _Entry:
+    """Per-registered-bitmap directory entry (strong refs keep ``id``
+    keys valid for the arena's lifetime)."""
+    bm: object
+    version: int
+    conts: dict            # chunk key -> container object at last adopt
+
+
+class BitmapArena:
+    """Device-resident container slab with generation-tracked
+    incremental maintenance.  See the module docstring for the layout;
+    ``docs/MEMORY.md`` walks the full lifecycle.
+
+    Args:
+        capacity: initial row capacity (grows by doubling; device growth
+            concatenates zero rows on-device, never re-uploads).
+    """
+
+    def __init__(self, capacity: int = 64):
+        cap = max(int(capacity), 2)
+        self._host = np.zeros((cap, 1024), np.uint64)
+        self._n = 1                       # row 0 reserved all-zero
+        self._free: list[int] = []
+        self._dev = None                  # lazy (capacity, WORDS) uint32
+        self._dirty: list[int] = []       # host rows not yet scattered
+        self._entries: dict[int, _Entry] = {}   # id(bm) -> _Entry
+        self._row_of: dict[int, int] = {}       # id(container) -> row
+        self._ref: dict[int, int] = {}          # row -> refcount
+        self.stats = ArenaStats()
+
+    # -- directory ----------------------------------------------------
+
+    def lookup(self, cont) -> int | None:
+        """Row id for a *container object*, or None if not resident.
+
+        Container identity IS the generation check: mutators replace
+        container objects, so edited-but-not-readopted containers miss.
+        """
+        return self._row_of.get(id(cont))
+
+    def resident(self, bm) -> bool:
+        """True iff ``bm`` is registered at its current ``_version``."""
+        e = self._entries.get(id(bm))
+        return e is not None and e.version == bm._version
+
+    @property
+    def n_rows(self) -> int:
+        """Allocated rows (including reserved row 0)."""
+        return self._n - len(self._free)
+
+    @property
+    def capacity(self) -> int:
+        """Slab row capacity (doubles on growth; 8 KiB per row)."""
+        return self._host.shape[0]
+
+    # -- adoption / incremental maintenance ---------------------------
+
+    def adopt(self, bm) -> int:
+        """Register ``bm`` (or revalidate its generation), promoting only
+        containers that changed since the last adopt.
+
+        Returns the number of rows promoted/re-promoted (0 when the
+        version snapshot matches -- the warm no-op).  Dirty rows are
+        batched; the single device scatter happens lazily at the next
+        :meth:`device_slab` / :meth:`sync`.
+        """
+        e = self._entries.get(id(bm))
+        if e is not None and e.version == bm._version:
+            return 0
+        if e is None:
+            e = _Entry(bm, -1, {})
+            self._entries[id(bm)] = e
+        else:
+            self.stats.revalidations += 1
+        cur = dict(zip(bm.keys, bm.containers))
+        for k, old in list(e.conts.items()):
+            if cur.get(k) is old:
+                continue
+            self._release_cont(old)
+            del e.conts[k]
+        changed = 0
+        for k, c in cur.items():
+            if e.conts.get(k) is c:
+                continue
+            self._register_cont(c)
+            e.conts[k] = c
+            changed += 1
+        e.version = bm._version
+        return changed
+
+    def adopt_many(self, bitmaps) -> int:
+        """:meth:`adopt` each bitmap; returns total rows promoted."""
+        return sum(self.adopt(bm) for bm in bitmaps)
+
+    def revalidate(self) -> int:
+        """Re-adopt every registered bitmap whose version moved (the
+        query server's ``slab_mismatch`` rung).  Returns rows patched."""
+        return sum(self.adopt(e.bm) for e in list(self._entries.values()))
+
+    def release(self, bm) -> None:
+        """Drop ``bm`` from the arena, freeing rows not shared with
+        other registered bitmaps."""
+        e = self._entries.pop(id(bm), None)
+        if e is None:
+            return
+        for c in e.conts.values():
+            self._release_cont(c)
+
+    def _register_cont(self, c) -> int:
+        rid = self._row_of.get(id(c))
+        if rid is not None:
+            self._ref[rid] += 1
+            return rid
+        rid = self._alloc()
+        self._host[rid] = C.container_words64(c)
+        self._row_of[id(c)] = rid
+        self._ref[rid] = 1
+        self.stats.rows_promoted += 1
+        if self._dev is not None:
+            self._dirty.append(rid)
+        return rid
+
+    def _release_cont(self, c) -> None:
+        rid = self._row_of.get(id(c))
+        if rid is None:
+            return
+        self._ref[rid] -= 1
+        if self._ref[rid] == 0:
+            del self._ref[rid]
+            del self._row_of[id(c)]
+            self._free.append(rid)
+            self.stats.rows_freed += 1
+
+    def _alloc(self) -> int:
+        if self._free:
+            return self._free.pop()
+        if self._n == self._host.shape[0]:
+            self._grow()
+        rid = self._n
+        self._n += 1
+        return rid
+
+    def _grow(self) -> None:
+        cap = self._host.shape[0] * 2
+        host = np.zeros((cap, 1024), np.uint64)
+        host[: self._n] = self._host[: self._n]
+        self._host = host
+        if self._dev is not None:
+            # Grow on-device: existing rows never cross PCIe again.
+            pad = jnp.zeros((cap - self._dev.shape[0], WORDS), jnp.uint32)
+            self._dev = jnp.concatenate([self._dev, pad])
+
+    # -- host/device views --------------------------------------------
+
+    def host_row(self, rid: int) -> np.ndarray:
+        """(1024,) uint64 view of one row in the host mirror."""
+        return self._host[int(rid)]
+
+    def host_rows(self, ids) -> np.ndarray:
+        """Gather ``ids`` rows from the host mirror (copy).  Same bytes
+        as re-promoting the containers, so host twins stay bit-identical
+        without re-running promotion."""
+        return self._host[np.asarray(ids, np.int64)]
+
+    def device_slab(self):
+        """The resident ``(capacity, 2048)`` uint32 slab, uploading lazily
+        on first call and flushing pending edits in ONE scatter after.
+
+        The scatter is a functional update (fresh buffer): dispatches
+        already in flight keep their captured slab -- copy-on-write.
+        """
+        if self._dev is None:
+            self._dev = jnp.asarray(
+                self._host.view(np.uint32).reshape(-1, WORDS))
+            self.stats.rows_uploaded += self._n
+            self._dirty = []
+        elif self._dirty:
+            ids = np.array(sorted(set(self._dirty)), np.int32)
+            rows = np.ascontiguousarray(self._host[ids])
+            rows32 = rows.view(np.uint32).reshape(len(ids), WORDS)
+            self._dev = self._dev.at[jnp.asarray(ids)].set(
+                jnp.asarray(rows32))
+            self.stats.rows_uploaded += len(ids)
+            self.stats.rows_patched += len(ids)
+            self._dirty = []
+        return self._dev
+
+    def sync(self) -> None:
+        """Flush pending patches (uploading the slab if it never was)
+        and block until the device copy is ready (benchmark fencing)."""
+        self.device_slab().block_until_ready()

@@ -333,59 +333,66 @@ class RoaringBitmap:
 
     @staticmethod
     def or_many(bitmaps: list["RoaringBitmap"], *,
-                mesh=None) -> "RoaringBitmap":
+                mesh=None, arena=None) -> "RoaringBitmap":
         """Wide union (paper section 5.8, ``roaring_bitmap_or_many``).
 
         Args: ``bitmaps`` any iterable of RoaringBitmap; ``mesh`` an
         optional multi-device mesh (rows shard round-robin, partials
-        all-reduce with OR -- bit-identical to the 1-device plan).
+        all-reduce with OR -- bit-identical to the 1-device plan);
+        ``arena`` an optional ``core.arena.BitmapArena`` -- containers
+        already adopted dispatch from the resident device slab with no
+        per-call staging (docs/MEMORY.md), bit-identical either way.
 
         Returns a new RoaringBitmap.  Complexity: one segmented-kernel
         dispatch for any K after the planner's zero-copy / host fast
         paths (docs/ARCHITECTURE.md section 3 has the full table)."""
         from repro.core import aggregate
-        return aggregate.or_many(bitmaps, mesh=mesh)
+        return aggregate.or_many(bitmaps, mesh=mesh, arena=arena)
 
     @staticmethod
     def and_many(bitmaps: list["RoaringBitmap"], *,
-                 mesh=None) -> "RoaringBitmap":
+                 mesh=None, arena=None) -> "RoaringBitmap":
         """Wide intersection with cardinality-ascending key pruning and
         empty-key early exit at the top level (the paper's AND planning
         generalized to K inputs).
 
-        Args as ``or_many``; the sharded path exchanges a per-shard
-        occupancy mask so row-less shards contribute the AND identity.
-        Returns a new RoaringBitmap; one dispatch for the dense
-        remainder.  See docs/ARCHITECTURE.md sections 3 and 5."""
+        Args as ``or_many`` (including ``arena``); the sharded path
+        exchanges a per-shard occupancy mask so row-less shards
+        contribute the AND identity.  Returns a new RoaringBitmap; one
+        dispatch for the dense remainder.  See docs/ARCHITECTURE.md
+        sections 3 and 5."""
         from repro.core import aggregate
-        return aggregate.and_many(bitmaps, mesh=mesh)
+        return aggregate.and_many(bitmaps, mesh=mesh, arena=arena)
 
     @staticmethod
     def xor_many(bitmaps: list["RoaringBitmap"], *,
-                 mesh=None) -> "RoaringBitmap":
+                 mesh=None, arena=None) -> "RoaringBitmap":
         """Wide symmetric difference: values present in an odd number of
-        inputs.  Args/returns/complexity as ``or_many``."""
+        inputs.  Args/returns/complexity as ``or_many`` (including
+        ``arena``)."""
         from repro.core import aggregate
-        return aggregate.xor_many(bitmaps, mesh=mesh)
+        return aggregate.xor_many(bitmaps, mesh=mesh, arena=arena)
 
     @staticmethod
     def andnot_many(minuend: "RoaringBitmap",
                     subtrahends: list["RoaringBitmap"], *,
-                    mesh=None) -> "RoaringBitmap":
+                    mesh=None, arena=None) -> "RoaringBitmap":
         """Difference chain ``a - (b1 | b2 | ...)`` as ONE fused plan:
         the subtrahend union is never materialized (subtrahends OR into
         VMEM scratch, ANDNOT + popcount fuse into finalization).
 
         Args: ``minuend`` the kept bitmap, ``subtrahends`` the dropped
-        ones, ``mesh`` as in ``or_many`` (minuend replicated per shard).
-        Returns a new RoaringBitmap; one dispatch for the dense
-        remainder."""
+        ones, ``mesh`` / ``arena`` as in ``or_many`` (minuend replicated
+        per shard).  Returns a new RoaringBitmap; one dispatch for the
+        dense remainder."""
         from repro.core import aggregate
-        return aggregate.andnot_many(minuend, subtrahends, mesh=mesh)
+        return aggregate.andnot_many(minuend, subtrahends, mesh=mesh,
+                                     arena=arena)
 
     @staticmethod
     def threshold_many(bitmaps: list["RoaringBitmap"], t: int, *,
-                       weights=None, mesh=None) -> "RoaringBitmap":
+                       weights=None, mesh=None,
+                       arena=None) -> "RoaringBitmap":
         """T-occurrence query ("Threshold and Symmetric Functions over
         Bitmaps", Kaser & Lemire): values whose occurrence count across
         the inputs reaches ``t``.
@@ -393,14 +400,15 @@ class RoaringBitmap:
         Args: ``t`` runtime threshold (sweeps over the same inputs share
         one compiled kernel); ``weights`` optional per-bitmap positive
         int weights (shift-and-add into the bit-sliced counter circuit;
-        weight 1 degenerates to the unweighted plan); ``mesh`` as in
-        ``or_many`` (counters all-gather and add bit-sliced).
+        weight 1 degenerates to the unweighted plan); ``mesh`` /
+        ``arena`` as in ``or_many`` (counters all-gather and add
+        bit-sliced).
 
         Returns a new RoaringBitmap; one dispatch for the dense
         remainder regardless of K."""
         from repro.core import aggregate
         return aggregate.threshold_many(bitmaps, t, weights=weights,
-                                        mesh=mesh)
+                                        mesh=mesh, arena=arena)
 
     # ------------------------------------------------------------------
     # maintenance (paper: run_optimize / shrink_to_fit)

@@ -647,10 +647,30 @@ class SimilarityEngine:
     break ties toward the lower candidate index, so kernel and host
     results are bit-identical -- the ``backend=`` switch can never change
     an answer.  See docs/ARCHITECTURE.md for the module map.
+
+    With an ``arena`` (core/arena.py) the candidate slab becomes an
+    **arena view**: candidates are adopted into the shared arena, the
+    engine stores slab row ids instead of owning a private copy, and the
+    device slab is a device-side gather from the arena's resident rows
+    (the host ``rows`` mirror is gathered from the arena's host mirror --
+    same bytes, so host and kernel paths stay bit-identical).  A postings
+    edit then costs one :meth:`refresh` -- the arena repatches only the
+    changed rows (one scatter) and the engine re-gathers, instead of
+    re-promoting and re-uploading the whole candidate set.
     """
 
-    def __init__(self, bitmaps):
-        bitmaps = list(bitmaps)
+    def __init__(self, bitmaps, *, arena=None):
+        """``bitmaps``: the candidate set, index-aligned with results.
+        ``arena``: optional shared ``BitmapArena``; candidates are
+        adopted into it and the engine becomes a view over its slab
+        (see the class docstring and docs/MEMORY.md)."""
+        self._bitmaps = list(bitmaps)
+        self._arena = arena
+        self._build()
+
+    def _build(self) -> None:
+        bitmaps = self._bitmaps
+        arena = self._arena
         self.n = len(bitmaps)
         self.cards = np.array([bm.cardinality for bm in bitmaps],
                               np.int64)
@@ -658,6 +678,8 @@ class SimilarityEngine:
             # the kernel path carries cardinalities as int32; refuse to
             # build rather than silently wrap on one backend
             raise ValueError("candidate cardinality >= 2^31 unsupported")
+        if arena is not None:
+            arena.adopt_many(bitmaps)
         keys = sorted({k for bm in bitmaps for k in bm.keys})
         self.key_col = {k: i for i, k in enumerate(keys)}
         self.n_keys = len(keys)
@@ -665,16 +687,46 @@ class SimilarityEngine:
         starts = np.zeros(self.n + 1, np.int32)
         for i, bm in enumerate(bitmaps):
             for k, c in zip(bm.keys, bm.containers):
-                rows.append(C.container_words64(c))
+                rows.append(arena.lookup(c) if arena is not None
+                            else C.container_words64(c))
                 row_col.append(self.key_col[k])
             starts[i + 1] = len(rows)
-        self.rows = np.stack(rows) if rows else \
-            np.zeros((0, 1024), np.uint64)
+        if arena is not None:
+            # arena view: keep row ids + a host-mirror gather (identical
+            # bytes to promoting, without re-running promotion)
+            self.row_ids = np.asarray(rows, np.int32)
+            self.rows = arena.host_rows(self.row_ids) if rows else \
+                np.zeros((0, 1024), np.uint64)
+            self._snap = tuple((id(bm), bm._version) for bm in bitmaps)
+        else:
+            self.row_ids = None
+            self.rows = np.stack(rows) if rows else \
+                np.zeros((0, 1024), np.uint64)
+            self._snap = None
         self.row_col = np.asarray(row_col, np.int32)
         self.starts = starts
         seg = int(np.diff(starts).max()) if self.n else 1
         self.jmax = 1 if seg <= 1 else 1 << (seg - 1).bit_length()
         self._dev = None                         # lazy device upload
+
+    def refresh(self) -> bool:
+        """Generation revalidation for an arena-backed engine: re-adopt
+        candidates whose ``_version`` moved (the arena repatches only
+        their changed rows -- one scatter), rebuild the cheap host index
+        arrays, and drop the device view so the next query re-gathers
+        from the patched slab ON DEVICE.  Returns True when anything
+        changed; a no-op (False) when every candidate is current.
+
+        This is the incremental path the query server's ``slab_mismatch``
+        rung uses instead of discarding the engine (docs/ARCHITECTURE.md
+        §6); cost is O(changed rows) transfer instead of O(slab)."""
+        if self._arena is None:
+            raise ValueError("refresh() requires an arena-backed engine")
+        snap = tuple((id(bm), bm._version) for bm in self._bitmaps)
+        if snap == self._snap:
+            return False
+        self._build()
+        return True
 
     # -- query preparation ----------------------------------------------
 
@@ -756,10 +808,20 @@ class SimilarityEngine:
 
     def _device(self):
         if self._dev is None:
+            if self._arena is not None and self.row_ids is not None \
+                    and self.row_ids.size:
+                # arena view: gather the candidate rows from the resident
+                # slab ON DEVICE -- container words never cross PCIe here
+                dev_rows = jnp.take(self._arena.device_slab(),
+                                    jnp.asarray(self.row_ids), axis=0)
+                self._arena.stats.device_gathers += 1
+            elif self.rows.size:
+                dev_rows = jnp.asarray(
+                    self.rows.view(np.uint32).reshape(-1, WORDS))
+            else:
+                dev_rows = jnp.zeros((1, WORDS), jnp.uint32)
             self._dev = (
-                jnp.asarray(self.rows.view(np.uint32)
-                            .reshape(-1, WORDS)) if self.rows.size else
-                jnp.zeros((1, WORDS), jnp.uint32),
+                dev_rows,
                 jnp.asarray(self.row_col if self.row_col.size else
                             np.zeros(1, np.int32)),
                 jnp.asarray(self.starts),

@@ -174,6 +174,25 @@ class RoaringTensor:
             out.append(RoaringBitmap(ks, cs))
         return out
 
+    def to_arena(self, arena=None):
+        """Adopt the whole batch into a ``core.arena.BitmapArena`` (the
+        host bridge runs ONCE; thereafter wide aggregates over the
+        returned bitmaps dispatch from the resident slab with no
+        per-call staging -- see docs/MEMORY.md).
+
+        Args: ``arena`` an existing arena to adopt into, or None to
+        create a fresh one.  Returns ``(arena, bitmaps)`` where
+        ``bitmaps[i]`` is the host twin of batch row ``i``, registered
+        in the arena; pass them to ``aggregate.or_many(...,
+        arena=arena)`` etc.  Mutating a twin later costs one
+        ``arena.adopt(bm)`` repatch, not a rebuild."""
+        from repro.core.arena import BitmapArena
+        if arena is None:
+            arena = BitmapArena()
+        bms = self.to_bitmaps()
+        arena.adopt_many(bms)
+        return arena, bms
+
     # ====================================================================
     # bitset-domain decompression (DESIGN.md: "decompress array/run ->
     # bitset in VMEM, operate in bitset domain")

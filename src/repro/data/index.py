@@ -32,17 +32,29 @@ class InvertedIndex:
     ``jaccard`` follows the set convention (two empty sets -> 1.0,
     empty vs non-empty -> 0.0); ``similar`` scores an unknown term as
     an empty query (all scores 0) and returns a full-length, validly
-    ordered list."""
+    ordered list.
 
-    def __init__(self):
+    ``arena``: an optional ``core.arena.BitmapArena``.  When present,
+    query entry points adopt their term postings into it first, so
+    container rows live device-resident across queries (warm re-queries
+    ship no container payloads over PCIe) and the cached
+    ``SimilarityEngine`` becomes an arena view whose ``slab_mismatch``
+    recovery is a generation revalidation -- only edited rows repatch --
+    instead of a full slab rebuild (docs/MEMORY.md has the lifecycle).
+    Results are bit-identical with or without an arena."""
+
+    def __init__(self, *, arena=None):
         self.postings: dict[str, RoaringBitmap] = {}
         self.n_docs = 0
+        self.arena = arena
         # cached (snapshot, terms, SimilarityEngine); the snapshot
         # revalidates against direct postings edits -- see _sim_engine
         self._sim = None
 
     def add_document(self, doc_id: int, terms) -> None:
-        self._sim = None                          # postings changed
+        if self.arena is None:
+            self._sim = None                      # postings changed
+        # with an arena, _sim_engine revalidates generations instead
         self.n_docs = max(self.n_docs, doc_id + 1)
         for t in set(terms):
             bm = self.postings.get(t)
@@ -64,7 +76,8 @@ class InvertedIndex:
         return self
 
     def optimize(self):
-        self._sim = None
+        if self.arena is None:
+            self._sim = None
         for bm in self.postings.values():
             bm.run_optimize()
         return self
@@ -75,6 +88,17 @@ class InvertedIndex:
         list (the class-level contract: no KeyError, ever)."""
         return self.postings.get(term, RoaringBitmap())
 
+    def _adopt(self, bms: list[RoaringBitmap]) -> list[RoaringBitmap]:
+        """Adopt query operands into the arena (no-op without one).
+        Only non-empty bitmaps register: the fresh empties ``_get``
+        returns for unknown terms are per-call temporaries that must not
+        pin arena rows."""
+        if self.arena is not None:
+            for bm in bms:
+                if bm.containers:
+                    self.arena.adopt(bm)
+        return bms
+
     # query_and/query_or/query_xor/query_threshold all route through the
     # wide-aggregation planner (repro.core.aggregate): one fused kernel
     # dispatch per query regardless of the number of terms.
@@ -82,27 +106,32 @@ class InvertedIndex:
         """Documents matching ALL ``terms``: one fused dispatch with
         cardinality-ascending pruning (docs/ARCHITECTURE.md section 3).
         Unknown terms are empty postings, so the result is empty."""
-        return RoaringBitmap.and_many([self._get(t) for t in terms])
+        return RoaringBitmap.and_many(
+            self._adopt([self._get(t) for t in terms]), arena=self.arena)
 
     def query_or(self, *terms) -> RoaringBitmap:
-        return RoaringBitmap.or_many([self._get(t) for t in terms])
+        return RoaringBitmap.or_many(
+            self._adopt([self._get(t) for t in terms]), arena=self.arena)
 
     def query_xor(self, *terms) -> RoaringBitmap:
-        return RoaringBitmap.xor_many([self._get(t) for t in terms])
+        return RoaringBitmap.xor_many(
+            self._adopt([self._get(t) for t in terms]), arena=self.arena)
 
     def query_threshold(self, terms, t: int, weights=None) -> RoaringBitmap:
         """Documents whose matched terms reach a total score of ``t``
         (T-occurrence query, Kaser & Lemire); optional per-term integer
         ``weights`` rank terms without leaving the one-dispatch plan."""
         return RoaringBitmap.threshold_many(
-            [self._get(term) for term in terms], t, weights=weights)
+            self._adopt([self._get(term) for term in terms]), t,
+            weights=weights, arena=self.arena)
 
     def query_andnot(self, keep: str, *drops: str) -> RoaringBitmap:
         """Documents matching ``keep`` and none of ``drops`` -- a
         difference chain planned as one fused dispatch (the union of the
         dropped postings is never materialized)."""
-        return RoaringBitmap.andnot_many(
-            self._get(keep), [self._get(d) for d in drops])
+        ops = self._adopt([self._get(keep)] + [self._get(d) for d in drops])
+        return RoaringBitmap.andnot_many(ops[0], ops[1:],
+                                         arena=self.arena)
 
     def count_and(self, a: str, b: str) -> int:
         return self._get(a).and_card(self._get(b))  # fast count, sec 5.9
@@ -120,14 +149,29 @@ class InvertedIndex:
         bumped by every add/remove/run_optimize), and cardinality.
         Only hand-assembled aliasing -- a DIFFERENT bitmap object
         recycled at the same address with equal version and cardinality
-        -- could escape revalidation."""
+        -- could escape revalidation.
+
+        With an arena, a stale snapshot over the SAME term set and
+        bitmap objects refreshes the engine in place (``refresh()``:
+        the arena repatches only the edited rows) instead of rebuilding
+        the slab; term-set or object changes still rebuild."""
         snap = tuple((t, id(bm), bm._version, bm.cardinality)
                      for t, bm in self.postings.items())
         if self._sim is None or self._sim[0] != snap:
             from repro.core.pairwise import SimilarityEngine
             terms = list(self.postings)
-            self._sim = (snap, terms,
-                         SimilarityEngine(self.postings[t] for t in terms))
+            if (self.arena is not None and self._sim is not None
+                    and self._sim[1] == terms
+                    and all(self.postings[t] is bm for t, bm in
+                            zip(terms, self._sim[2]._bitmaps))):
+                eng = self._sim[2]
+                eng.refresh()
+                self._sim = (snap, terms, eng)
+            else:
+                self._sim = (snap, terms,
+                             SimilarityEngine(
+                                 (self.postings[t] for t in terms),
+                                 arena=self.arena))
         return self._sim[1], self._sim[2]
 
     def similar(self, term: str, top_k: int = 10,

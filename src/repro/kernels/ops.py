@@ -201,6 +201,32 @@ def segment_reduce(slab, starts, op: str, *, jmax: int, threshold: int = 0,
                                weights=weights)
 
 
+_ref_segment_reduce_rows = jax.jit(
+    ref.segment_reduce_rows, static_argnames=("op", "jmax"))
+
+
+def segment_reduce_rows(table, ids, starts, op: str, *, jmax: int,
+                        threshold: int = 0, weights=None,
+                        planes: int | None = None, wbits: int = 1,
+                        backend: Backend | None = None):
+    """Resident-slab segmented reduce: gather ``ids`` rows from a
+    device-resident ``table`` (``core.arena.BitmapArena`` slab, optionally
+    with a staged host block appended) on-device, then reduce exactly like
+    :func:`segment_reduce`.  Warm arena queries ship only ids/starts/
+    threshold over PCIe -- container words stay resident (docs/MEMORY.md).
+    Pad ragged segments with id 0, the arena's reserved all-zero row."""
+    t = jnp.asarray(threshold, jnp.int32)
+    ids = jnp.asarray(ids, jnp.int32)
+    if weights is not None:
+        weights = jnp.asarray(weights, jnp.int32)
+    if _use_pallas(backend):
+        return _segment_ops.segment_reduce_rows(
+            table, ids, starts, op, jmax=jmax, threshold=t,
+            weights=weights, planes=planes, wbits=wbits)
+    return _ref_segment_reduce_rows(table, ids, starts, op, jmax=jmax,
+                                    threshold=t, weights=weights)
+
+
 def segment_counters(slab, starts, *, jmax: int, planes: int, weights=None,
                      backend: Backend | None = None):
     """Per-segment bit-sliced occurrence counters (S, planes, WORDS) --

@@ -409,6 +409,22 @@ def segment_reduce(slab: jax.Array, starts: jax.Array, op: str, *,
     return out, popcount_words(out)
 
 
+def segment_reduce_rows(table: jax.Array, ids: jax.Array, starts: jax.Array,
+                        op: str, *, jmax: int, threshold: int = 0,
+                        weights: jax.Array | None = None
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Resident-slab twin of :func:`segment_reduce`: gather ``ids`` rows
+    from a device-resident ``table`` (arena slab, optionally with a staged
+    host block appended), then reduce.  Under jit the gather fuses with
+    the reduce, so resident rows never round-trip through the host --
+    queries move only ``ids``/``starts`` over PCIe (see core/arena.py).
+    ``ids`` index ``table`` segment-major; pad ragged segments with id 0
+    (the arena's reserved all-zero row)."""
+    slab = jnp.take(table.astype(jnp.uint32), ids.astype(jnp.int32), axis=0)
+    return segment_reduce(slab, starts, op, jmax=jmax,
+                          threshold=threshold, weights=weights)
+
+
 # ---------------------------------------------------------------------------
 # bit-sliced occurrence counters (the exchange payload of the sharded
 # threshold path: each shard counts locally, counters are all-gathered and

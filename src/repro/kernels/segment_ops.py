@@ -247,3 +247,29 @@ def segment_reduce(slab: jax.Array, starts: jax.Array, op: str, *,
         interpret=interpret,
     )(starts, tval, wval, slab.astype(jnp.uint32))
     return words, card[:, 0]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("op", "jmax", "planes", "wbits",
+                                    "interpret"))
+def segment_reduce_rows(table: jax.Array, ids: jax.Array, starts: jax.Array,
+                        op: str, *, jmax: int, threshold=0,
+                        weights: jax.Array | None = None,
+                        planes: int | None = None, wbits: int = 1,
+                        interpret: bool | None = None
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Resident-slab entry point: :func:`segment_reduce` over rows gathered
+    from a device-resident ``table`` (a ``core.arena.BitmapArena`` slab,
+    optionally with a per-call staged host block appended).
+
+    ``ids`` (R,) int32 index ``table`` segment-major; pad ragged segments
+    with id 0, the arena's reserved all-zero row (the op identity handling
+    inside :func:`segment_reduce` masks padding anyway).  The gather runs
+    on-device, so warm queries ship only ``ids``/``starts``/``threshold``
+    over PCIe -- container words never leave the device.  See
+    docs/MEMORY.md for the transfer accounting.
+    """
+    slab = jnp.take(table.astype(jnp.uint32), ids.astype(jnp.int32), axis=0)
+    return segment_reduce(slab, starts, op, jmax=jmax, threshold=threshold,
+                          weights=weights, planes=planes, wbits=wbits,
+                          interpret=interpret)

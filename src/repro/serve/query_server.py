@@ -152,14 +152,22 @@ class QueryServer:
     kernel re-attempts before host degradation; ``backoff_s`` base of
     the exponential retry backoff; ``clock`` an object with ``now()`` /
     ``sleep(s)`` (``FakeClock`` in tests); ``faults`` a
-    ``serve.faults.FaultInjector``."""
+    ``serve.faults.FaultInjector``; ``arena`` an optional warm
+    ``core.arena.BitmapArena`` (defaults to the index's own, when it has
+    one) -- postings stay device-resident across ticks and the
+    ``slab_mismatch`` recovery rung revalidates generations (repatching
+    only edited rows) instead of dropping the cached slab
+    (docs/ARCHITECTURE.md section 6, docs/MEMORY.md)."""
 
     def __init__(self, index, *, backend: str | None = None,
                  max_queue: int = 4096, max_batch: int = 1024,
                  max_batch_bytes: int = 256 << 20, max_retries: int = 2,
-                 backoff_s: float = 0.005, clock=None, faults=None):
+                 backoff_s: float = 0.005, clock=None, faults=None,
+                 arena=None):
         self.index = index
         self.backend = backend
+        self.arena = arena if arena is not None \
+            else getattr(index, "arena", None)
         self.max_queue = int(max_queue)
         self.max_batch = int(max_batch)
         self.max_batch_bytes = int(max_batch_bytes)
@@ -208,9 +216,14 @@ class QueryServer:
         never inside a coalesced batch)."""
         q = t.query
         if q.kind in BOOLEAN_KINDS:
+            bms = [self.index._get(x) for x in q.terms]
+            if self.arena is not None:
+                for bm in bms:
+                    if bm.containers:
+                        self.arena.adopt(bm)
             t._plan = aggregate.plan_wide(
-                q.kind, [self.index._get(x) for x in q.terms],
-                q.t, q.weights, backend=self.backend)
+                q.kind, bms, q.t, q.weights, backend=self.backend,
+                arena=self.arena)
         elif q.kind == "similar":
             if q.metric not in METRICS:
                 raise ValueError(f"unknown metric {q.metric!r}")
@@ -290,10 +303,21 @@ class QueryServer:
 
     def _replan(self, tickets: list[Ticket]) -> None:
         """Slab-generation mismatch: re-plan every boolean ticket from
-        the live postings and drop the similarity slab cache, then
-        carry on -- a mismatch is a re-plan, never a failure."""
+        the live postings, then carry on -- a mismatch is a re-plan,
+        never a failure.
+
+        With a warm arena this rung is INCREMENTAL: registered bitmaps
+        revalidate their generation counters and only rows whose
+        containers actually changed repatch (one scatter), and the
+        similarity engine refreshes in place through the same arena view
+        (``_sim_engine``) -- the cached slab is never dropped.  Without
+        an arena it falls back to dropping the similarity slab cache
+        wholesale."""
         self._stats.replans += 1
-        self.index._sim = None
+        if self.arena is not None:
+            self._stats.rows_repatched += self.arena.revalidate()
+        else:
+            self.index._sim = None
         for t in tickets:
             t.telemetry.replans += 1
             if t.query.kind in BOOLEAN_KINDS:

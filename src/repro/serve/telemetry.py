@@ -63,6 +63,7 @@ class ServerStats:
     dispatch_retries: int = 0
     batch_splits: int = 0
     replans: int = 0
+    rows_repatched: int = 0     # arena rows repatched by replan rungs
     host_fallbacks: int = 0
     max_batch: int = 0
 

@@ -1,8 +1,11 @@
 """Docs rot guard: every file path and module reference in
-docs/ARCHITECTURE.md (and the README's tree sketch) must exist, so the
-paper -> module map can never drift from the tree.  Runnable standalone
-(CI lint job: ``python tests/test_docs.py``) or under pytest."""
+docs/ARCHITECTURE.md / docs/MEMORY.md (and the READMEs) must exist, so
+the paper -> module map can never drift from the tree, and the arena's
+public memory-lifecycle surface must stay documented (docstrings are
+checked via ``ast``, so this runs in the dependency-free CI lint job).
+Runnable standalone (``python tests/test_docs.py``) or under pytest."""
 
+import ast
 import re
 import sys
 from pathlib import Path
@@ -24,9 +27,75 @@ def _referenced_modules(text: str) -> set[str]:
     return set(re.findall(r"`(repro(?:\.\w+)+)`", text))
 
 
+def _docstring_errors() -> list[str]:
+    """The arena documentation pass, enforced: ``BitmapArena`` (and its
+    public methods), ``SimilarityEngine``, and every public API that
+    grew an ``arena=`` parameter must document it."""
+    errors = []
+
+    def doc_of(node) -> str:
+        return ast.get_docstring(node) or ""
+
+    def classes(tree):
+        return {n.name: n for n in tree.body
+                if isinstance(n, ast.ClassDef)}
+
+    arena_tree = ast.parse((ROOT / "src/repro/core/arena.py").read_text())
+    if "docs/MEMORY.md" not in doc_of(arena_tree):
+        errors.append("core/arena.py module docstring must point at "
+                      "docs/MEMORY.md")
+    bmcls = classes(arena_tree).get("BitmapArena")
+    if bmcls is None or not doc_of(bmcls):
+        errors.append("BitmapArena needs a class docstring")
+    else:
+        for m in bmcls.body:
+            if (isinstance(m, ast.FunctionDef)
+                    and not m.name.startswith("_")
+                    and not doc_of(m)):
+                errors.append(f"BitmapArena.{m.name} needs a docstring")
+
+    pw_tree = ast.parse(
+        (ROOT / "src/repro/core/pairwise.py").read_text())
+    eng = classes(pw_tree).get("SimilarityEngine")
+    if eng is None or "arena" not in doc_of(eng).lower():
+        errors.append("SimilarityEngine class docstring must document "
+                      "the arena view")
+
+    # every public function/method with an ``arena`` parameter documents
+    # it (the class docstring may carry it for __init__)
+    for rel in ("src/repro/core/aggregate.py", "src/repro/core/bitmap.py",
+                "src/repro/core/pairwise.py", "src/repro/core/tensor.py",
+                "src/repro/data/index.py",
+                "src/repro/serve/query_server.py"):
+        tree = ast.parse((ROOT / rel).read_text())
+        for parent in ast.walk(tree):
+            body = getattr(parent, "body", None)
+            if not isinstance(body, list):
+                continue
+            for node in body:
+                if not isinstance(node, ast.FunctionDef) or \
+                        node.name.startswith("_") and \
+                        node.name != "__init__":
+                    continue
+                args = node.args
+                names = [a.arg for a in
+                         args.args + args.kwonlyargs]
+                if "arena" not in names:
+                    continue
+                doc = doc_of(node)
+                if node.name == "__init__" and isinstance(
+                        parent, ast.ClassDef):
+                    doc += doc_of(parent)
+                if "arena" not in doc.lower():
+                    errors.append(
+                        f"{rel}: {node.name} takes arena= but does "
+                        "not document it")
+    return errors
+
+
 def check() -> list[str]:
     errors = []
-    for doc in ("docs/ARCHITECTURE.md", "README.md",
+    for doc in ("docs/ARCHITECTURE.md", "docs/MEMORY.md", "README.md",
                 "benchmarks/README.md"):
         path = ROOT / doc
         if not path.exists():
@@ -41,6 +110,7 @@ def check() -> list[str]:
             if not ((ROOT / "src" / f"{rel}.py").exists()
                     or (ROOT / "src" / rel / "__init__.py").exists()):
                 errors.append(f"{doc}: references missing module {mod}")
+    errors += _docstring_errors()
     return errors
 
 
@@ -58,6 +128,15 @@ def test_architecture_is_linked_and_nontrivial():
     readme = (ROOT / "README.md").read_text()
     assert "docs/ARCHITECTURE.md" in readme, \
         "README must link the architecture guide"
+    assert "docs/MEMORY.md" in readme, \
+        "README must link the memory-lifecycle guide"
+    assert "docs/MEMORY.md" in arch, \
+        "ARCHITECTURE.md must link the memory-lifecycle guide"
+    mem = (ROOT / "docs" / "MEMORY.md").read_text()
+    # the lifecycle guide must actually cover the lifecycle
+    for needle in ("state machine", "opy-on-write", "PCIe", "VMEM",
+                   "ArenaStats", "row 0"):
+        assert needle in mem, needle
 
 
 if __name__ == "__main__":
