@@ -620,6 +620,119 @@ def arena_warm(rows, quick: bool = False) -> list[dict]:
     return records
 
 
+def cold_start(rows, quick: bool = False) -> list[dict]:
+    """Snapshot-on-disk -> first query answered (docs/FORMAT.md §6).
+
+    Seed side: an RJ02 archive -- ``deserialize`` every blob (CRC +
+    structural validation + payload copies) before anything can be
+    queried.  Wide side: a frozen snapshot archive --
+    ``data.index.load_index`` mmaps it and defers per-entry directory
+    walks (``LazyBitmaps``) until a query touches the term.  Results
+    asserted bit-identical throughout.  Three rows per N:
+
+    * ``cold_start_open`` -- file -> every bitmap materialized (the
+      frozen side forced eager with ``dict(...)``): isolates parse
+      cost, frozen wins on copies-avoided only.
+    * ``cold_start_first_query`` -- the serving recipe: file -> index
+      -> ONE 4-term union answered on the host path.  Eager must parse
+      all N first; the lazy snapshot walks exactly 4 directories and
+      faults in only the pages those postings live on.  THE acceptance
+      row: speedup >= 3x at N=1024.
+    * ``cold_start_bulk_promote`` -- file -> ENTIRE snapshot
+      device-resident (seed: per-container ``adopt_many``; wide: bulk
+      ``adopt_frozen`` -- one batched conversion, one transfer) ->
+      all-terms union on the kernel path.
+
+    Dataset: ``_arena_postings`` (mostly-bitset serving shape, one 8 KiB
+    row per posting) -- the shape where eager deserialization hurts
+    most and the frozen mmap path pays nothing until pages are touched.
+    """
+    import os
+    import struct
+    import tempfile
+
+    from repro.core import serde
+    from repro.core.arena import BitmapArena
+    from repro.data.index import load_index
+
+    records = []
+    ns = (16, 64) if quick else (16, 64, 1024)
+    repeats = 3 if quick else 5
+    with tempfile.TemporaryDirectory() as tmp:
+        for n in ns:
+            bms = _arena_postings(n)
+            snap_path = os.path.join(tmp, f"idx{n}.snap")
+            serde.write_snapshot(
+                snap_path, {f"t{r}": bm for r, bm in enumerate(bms)},
+                meta=n)
+            # RJ02 archive: uint32 count, then (uint32 len, blob) pairs
+            rj_path = os.path.join(tmp, f"idx{n}.rj02")
+            with open(rj_path, "wb") as f:
+                f.write(struct.pack("<I", n))
+                for bm in bms:
+                    blob = serde.serialize(bm)
+                    f.write(struct.pack("<I", len(blob)))
+                    f.write(blob)
+            q_terms = [f"t{r}" for r in
+                       range(0, n, max(1, n // 4))][:4]
+
+            def eager_open(rj_path=rj_path):
+                with open(rj_path, "rb") as f:
+                    buf = f.read()
+                cnt = struct.unpack_from("<I", buf, 0)[0]
+                out, off = {}, 4
+                for i in range(cnt):
+                    ln = struct.unpack_from("<I", buf, off)[0]
+                    off += 4
+                    out[f"t{i}"] = serde.deserialize(buf[off:off + ln])
+                    off += ln
+                return out
+
+            def frozen_open(snap_path=snap_path):
+                return dict(serde.read_snapshot(snap_path).bitmaps)
+
+            def open_vals(open_fn):
+                return list(open_fn().values())
+
+            def eager_first_query(eager_open=eager_open, n=n,
+                                  q_terms=q_terms):
+                from repro.data.index import InvertedIndex
+                idx = InvertedIndex.from_postings(eager_open(), n)
+                return idx.query_or(*q_terms)
+
+            def frozen_first_query(snap_path=snap_path,
+                                   q_terms=q_terms):
+                idx = load_index(snap_path)
+                return idx.query_or(*q_terms)
+
+            def eager_promote_all(eager_open=eager_open, n=n):
+                loaded = list(eager_open().values())
+                a = BitmapArena(capacity=n + 1)
+                a.adopt_many(loaded)
+                a.sync()
+                return aggregate.or_many(loaded, backend="ref", arena=a)
+
+            def frozen_promote_all(snap_path=snap_path, n=n):
+                loaded = list(serde.read_snapshot(snap_path)
+                              .bitmaps.values())
+                a = BitmapArena(capacity=n + 1)
+                a.adopt_frozen(loaded)
+                a.sync()
+                return aggregate.or_many(loaded, backend="ref", arena=a)
+
+            records += _run_benches(
+                rows, "cold_start",
+                [("cold_start_open",
+                  functools.partial(open_vals, eager_open),
+                  functools.partial(open_vals, frozen_open)),
+                 ("cold_start_first_query",
+                  eager_first_query, frozen_first_query),
+                 ("cold_start_bulk_promote",
+                  eager_promote_all, frozen_promote_all)],
+                "dense", n, repeats)
+    return records
+
+
 def query_throughput(rows, quick: bool = False) -> list[dict]:
     """Server-coalesced dispatch vs sequential per-query kernel loop.
 

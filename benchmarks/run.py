@@ -30,7 +30,7 @@ def main() -> None:
     ap.add_argument("--only", "--suite", dest="suites", default="",
                     help="comma list: table3,...,table14,kernels,"
                          "wide_ops,wide_ops_sharded,pairwise,"
-                         "arena_warm,query_throughput")
+                         "arena_warm,cold_start,query_throughput")
     ap.add_argument("--quick", action="store_true",
                     help="gate-sized wide_ops sweeps (subset of full keys)")
     ap.add_argument("--out", default="",
@@ -73,6 +73,8 @@ def main() -> None:
         records += kernels_bench.pairwise_suite(rows, quick=args.quick)
     if want is None or "arena_warm" in want:
         records += kernels_bench.arena_warm(rows, quick=args.quick)
+    if want is None or "cold_start" in want:
+        records += kernels_bench.cold_start(rows, quick=args.quick)
     if want is None or "query_throughput" in want:
         records += kernels_bench.query_throughput(rows, quick=args.quick)
     if records:

@@ -13,11 +13,19 @@ from repro.core.containers import (
     ARRAY_MAX, BITSET_WORDS, CHUNK, MAX_RUNS,
     ArrayContainer, BitsetContainer, RunContainer,
 )
-from repro.core.serde import deserialize, serialize, serialized_size_bytes
+from repro.core.serde import (
+    FrozenSnapshot, LazyBitmaps, deserialize, deserialize_frozen,
+    deserialize_portable, load_frozen, read_snapshot, serialize,
+    serialize_frozen, serialize_portable, serialized_size_bytes,
+    write_frozen, write_snapshot,
+)
 
 __all__ = [
     "RoaringBitmap", "ArrayContainer", "BitsetContainer", "RunContainer",
     "ARRAY_MAX", "BITSET_WORDS", "CHUNK", "MAX_RUNS",
     "from_indices", "from_dense", "to_dense", "complement", "flip_range",
     "serialize", "deserialize", "serialized_size_bytes",
+    "serialize_portable", "deserialize_portable",
+    "serialize_frozen", "deserialize_frozen", "write_frozen", "load_frozen",
+    "FrozenSnapshot", "LazyBitmaps", "write_snapshot", "read_snapshot",
 ]

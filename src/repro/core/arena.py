@@ -171,6 +171,54 @@ class BitmapArena:
         """:meth:`adopt` each bitmap; returns total rows promoted."""
         return sum(self.adopt(bm) for bm in bitmaps)
 
+    def adopt_frozen(self, bitmaps) -> int:
+        """Bulk-promote an entire (typically frozen / mmap-backed)
+        snapshot into the slab: ONE vectorized host conversion and ONE
+        host->device transfer, instead of per-container Python work.
+
+        Args: ``bitmaps`` -- a single RoaringBitmap or an iterable of
+        them (e.g. ``snapshot.bitmaps.values()`` from
+        ``repro.core.serde.read_snapshot``); frozen view-backed and
+        ordinary bitmaps both work, and results are bit-identical to
+        per-bitmap :meth:`adopt`.
+
+        Every container not yet resident is converted in one batched
+        ``containers_to_word_rows`` sweep (bitset rows gathered
+        vectorized, arrays/runs through one shared indicator +
+        packbits pass) and lands in the device slab in a single
+        scatter at the next :meth:`device_slab` / :meth:`sync` --
+        ``ArenaStats.rows_uploaded`` grows by exactly the new row
+        count.  Returns the number of rows promoted.  Complexity:
+        O(total new payload bytes) host work + one device transfer;
+        registered-and-current bitmaps cost O(1) each.
+        """
+        if hasattr(bitmaps, "containers"):      # a single RoaringBitmap
+            bitmaps = [bitmaps]
+        bitmaps = list(bitmaps)
+        fresh, seen = [], set()
+        for bm in bitmaps:
+            e = self._entries.get(id(bm))
+            if e is not None and e.version == bm._version:
+                continue
+            for c in bm.containers:
+                ci = id(c)
+                if ci not in self._row_of and ci not in seen:
+                    seen.add(ci)
+                    fresh.append(c)
+        if fresh:
+            rows = C.containers_to_word_rows(fresh)
+            ids = [self._alloc() for _ in fresh]
+            self._host[np.asarray(ids)] = rows
+            for c, rid in zip(fresh, ids):
+                self._row_of[id(c)] = rid
+                self._ref[rid] = 0              # adopt() bumps it below
+            self.stats.rows_promoted += len(fresh)
+            if self._dev is not None:
+                self._dirty.extend(ids)
+        for bm in bitmaps:
+            self.adopt(bm)
+        return len(fresh)
+
     def revalidate(self) -> int:
         """Re-adopt every registered bitmap whose version moved (the
         query server's ``slab_mismatch`` rung).  Returns rows patched."""
@@ -249,8 +297,12 @@ class BitmapArena:
         already in flight keep their captured slab -- copy-on-write.
         """
         if self._dev is None:
-            self._dev = jnp.asarray(
-                self._host.view(np.uint32).reshape(-1, WORDS))
+            # copy=True: on CPU backends jnp.asarray may ALIAS numpy
+            # memory zero-copy, and an aliased slab would mutate under
+            # in-flight consumers whenever the host mirror is edited --
+            # exactly the copy-on-write contract this class documents.
+            self._dev = jnp.array(
+                self._host.view(np.uint32).reshape(-1, WORDS), copy=True)
             self.stats.rows_uploaded += self._n
             self._dirty = []
         elif self._dirty:

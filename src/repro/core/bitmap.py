@@ -411,6 +411,50 @@ class RoaringBitmap:
                                         mesh=mesh, arena=arena)
 
     # ------------------------------------------------------------------
+    # serialization (paper section 5.1; docs/FORMAT.md)
+    # ------------------------------------------------------------------
+
+    def serialize(self, format: str = "rj02") -> bytes:
+        """Serialize to one of the three wire formats (docs/FORMAT.md):
+        ``"rj02"`` (private, CRC-checksummed), ``"portable"`` (the
+        CRoaring/RoaringFormatSpec interchange layout, paper section
+        5.1) or ``"frozen"`` (zero-copy mmap layout whose deserialize
+        is pure views).  Returns ``bytes``; complexity O(payload
+        bytes).  Module-level twins live in ``repro.core.serde``."""
+        from repro.core import serde
+        try:
+            fn = {"rj02": serde.serialize,
+                  "portable": serde.serialize_portable,
+                  "frozen": serde.serialize_frozen}[format]
+        except KeyError:
+            raise ValueError(
+                f"unknown serialization format {format!r}") from None
+        return fn(self)
+
+    @classmethod
+    def deserialize(cls, buf, format: str = "auto") -> "RoaringBitmap":
+        """Parse any of the three wire formats (docs/FORMAT.md).
+
+        Args: ``buf`` bytes-like (or ``np.memmap`` for the frozen
+        zero-copy path); ``format`` one of ``"auto"`` (sniff the
+        magic/cookie), ``"rj02"``, ``"portable"``, ``"frozen"``.
+
+        Returns a RoaringBitmap (frozen buffers yield view-backed
+        containers -- zero payload copies).  Raises ``ValueError``
+        with byte offset + container index on corruption."""
+        from repro.core import serde
+        if format == "auto":
+            format = serde.sniff_format(buf)
+        try:
+            fn = {"rj02": serde.deserialize,
+                  "portable": serde.deserialize_portable,
+                  "frozen": serde.deserialize_frozen}[format]
+        except KeyError:
+            raise ValueError(
+                f"unknown serialization format {format!r}") from None
+        return fn(buf)
+
+    # ------------------------------------------------------------------
     # maintenance (paper: run_optimize / shrink_to_fit)
     # ------------------------------------------------------------------
 

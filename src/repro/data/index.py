@@ -51,6 +51,39 @@ class InvertedIndex:
         # revalidates against direct postings edits -- see _sim_engine
         self._sim = None
 
+    @classmethod
+    def from_postings(cls, postings, n_docs: int, *,
+                      arena=None) -> "InvertedIndex":
+        """Wrap pre-built posting lists -- the snapshot cold-start
+        constructor (``load_index`` / ``StreamingIndexBuilder.finalize``
+        route through here).
+
+        Args: ``postings`` a mapping of term -> RoaringBitmap.  A lazy
+        ``serde.LazyBitmaps`` mapping (what ``read_snapshot`` returns)
+        is kept AS the postings store, so entries stay unmaterialized
+        until a query touches them; any other mapping is copied into a
+        plain dict.  ``n_docs`` is the document-id space size.
+        ``arena``: an optional BitmapArena -- when given, ALL postings
+        are materialized and bulk-promoted via ``arena.adopt_frozen``
+        (one batched conversion + one device transfer) so every query
+        is warm from the start; without one, cold start defers
+        per-entry work entirely (the lazy first-query path the
+        ``cold_start`` benchmark gates).
+
+        Returns the index.  Complexity: O(1) without an arena; with
+        one, O(total payload bytes) host work + one host->device
+        transfer.  See docs/FORMAT.md for the on-disk layouts this
+        pairs with.
+        """
+        from repro.core import serde
+        idx = cls(arena=arena)
+        idx.postings = (postings if isinstance(postings, serde.LazyBitmaps)
+                        else dict(postings))
+        idx.n_docs = int(n_docs)
+        if arena is not None:
+            arena.adopt_frozen(idx.postings.values())
+        return idx
+
     def add_document(self, doc_id: int, terms) -> None:
         if self.arena is None:
             self._sim = None                      # postings changed
@@ -208,3 +241,28 @@ class InvertedIndex:
 
     def memory_bytes(self) -> int:
         return sum(bm.memory_bytes() for bm in self.postings.values())
+
+
+def load_index(path, *, arena=None, mmap: bool = True) -> InvertedIndex:
+    """Map an on-disk snapshot archive straight into a queryable index.
+
+    The cold-start path (docs/FORMAT.md section 3): the archive written
+    by ``StreamingIndexBuilder.finalize`` (or ``serde.write_snapshot``)
+    is mapped read-only, every posting list becomes numpy views over
+    the mapped buffer (zero payload copies, pages fault in on first
+    touch), and -- when ``arena`` is given -- the whole set is promoted
+    to the device slab in one batched transfer.
+
+    Args: ``path`` the snapshot file; ``arena`` optional BitmapArena
+    for device-warm queries; ``mmap=False`` reads the file into memory
+    instead (same views, private buffer).
+
+    Returns an InvertedIndex whose ``n_docs`` is the archive's ``meta``
+    field.  Raises ``ValueError`` on a corrupt archive.  Complexity:
+    O(terms + containers) directory work; payload bytes are only
+    touched by queries (or the arena promotion).
+    """
+    from repro.core import serde
+    snap = serde.read_snapshot(path, mmap=mmap)
+    return InvertedIndex.from_postings(snap.bitmaps, snap.meta,
+                                       arena=arena)

@@ -15,9 +15,11 @@ deterministic given (seed, sample id).
 
 from __future__ import annotations
 
+import os
+
 import numpy as np
 
-from repro.core import RoaringBitmap, deserialize, serialize
+from repro.core import RoaringBitmap, deserialize, serde, serialize
 
 
 class RoaringDataPipeline:
@@ -86,6 +88,123 @@ class RoaringDataPipeline:
         self.keep = deserialize(bytes(state["keep"]))
         self.rng.bit_generator.state = state["rng"]
         self.step = int(state["step"])
+
+
+class StreamingIndexBuilder:
+    """Bounded-memory inverted-index construction: append postings in
+    chunks, spill frozen segments to disk, finalize into ONE mmap-able
+    snapshot archive a node can map and query in milliseconds.
+
+    The cold-start ingest half of the PR-8 serde work (docs/FORMAT.md
+    sections 2-3): instead of holding every posting list in RAM until
+    the end, the builder accumulates raw doc-id chunks per term and --
+    whenever the pending raw bytes cross ``segment_bytes`` -- freezes
+    them into a segment file in the frozen zero-copy layout.
+    :meth:`finalize` merges all segments (mmap-backed views, per-term
+    ``or_many``) into the final archive at ``path`` and hands back the
+    mapped index; with a single segment the merge is a rename.
+
+    Typical use::
+
+        b = StreamingIndexBuilder("idx.snap", segment_bytes=32 << 20)
+        for doc_id, terms in corpus:
+            b.add_document(doc_id, terms)
+        index = b.finalize(arena=arena)   # mapped + device-warm
+
+    Peak memory is O(segment_bytes + largest term's postings), not
+    O(index); every spill is sequential I/O.
+    """
+
+    def __init__(self, path, *, segment_bytes: int = 64 << 20):
+        """Args: ``path`` -- destination snapshot archive (segments
+        spill beside it as ``<path>.seg<N>``); ``segment_bytes`` --
+        raw pending-postings threshold (4 bytes per appended doc id)
+        that triggers a spill."""
+        self.path = os.fspath(path)
+        self.segment_bytes = int(segment_bytes)
+        self.n_docs = 0
+        self._pend: dict[str, list[np.ndarray]] = {}
+        self._pend_ids = 0              # appended ids since last spill
+        self._segments: list[str] = []
+
+    @property
+    def pending_bytes(self) -> int:
+        """Raw bytes of buffered postings (4 per pending doc id)."""
+        return 4 * self._pend_ids
+
+    def append_postings(self, term: str, doc_ids) -> None:
+        """Bulk-append doc ids to one term's postings (columnar path).
+
+        Args: ``doc_ids`` -- array-like of uint32 document ids, any
+        order, duplicates allowed (deduped at spill).  Spills a frozen
+        segment when the pending raw bytes cross ``segment_bytes``.
+        Amortized O(len(doc_ids)).
+        """
+        ids = np.asarray(doc_ids, np.uint32).ravel()
+        if ids.size == 0:
+            return
+        self.n_docs = max(self.n_docs, int(ids.max()) + 1)
+        self._pend.setdefault(term, []).append(ids)
+        self._pend_ids += ids.size
+        if self.pending_bytes >= self.segment_bytes:
+            self._spill()
+
+    def add_document(self, doc_id: int, terms) -> None:
+        """Row-wise append: register ``doc_id`` under each distinct
+        term.  Convenience wrapper over :meth:`append_postings`."""
+        one = np.array([doc_id], np.uint32)
+        for t in set(terms):
+            self.append_postings(t, one)
+
+    def _spill(self) -> None:
+        """Freeze pending postings into ``<path>.seg<N>`` and drop the
+        buffers.  One bitmap per pending term (``from_values`` sorts +
+        dedups, ``run_optimize`` picks the compact encoding)."""
+        if not self._pend:
+            return
+        named = {}
+        for term in sorted(self._pend):
+            vals = np.concatenate(self._pend[term])
+            named[term] = RoaringBitmap.from_values(vals).run_optimize()
+        seg = f"{self.path}.seg{len(self._segments)}"
+        serde.write_snapshot(seg, named, meta=self.n_docs)
+        self._segments.append(seg)
+        self._pend = {}
+        self._pend_ids = 0
+
+    def finalize(self, *, arena=None):
+        """Spill the tail, merge every segment into the final archive
+        at ``path``, delete the segments, and return the mapped index.
+
+        Single-segment builds skip the merge (one ``os.replace``).
+        Multi-segment merges mmap each segment and union per term
+        (``or_many``), so peak memory is one term's merged postings,
+        not the index.  Returns ``repro.data.index.load_index(path,
+        arena=arena)`` -- an InvertedIndex over zero-copy views of the
+        final file, bulk-promoted to the arena when one is given.
+        Complexity: O(total payload bytes) once.
+        """
+        from repro.data.index import load_index
+        self._spill()
+        if not self._segments:
+            serde.write_snapshot(self.path, {}, meta=self.n_docs)
+        elif len(self._segments) == 1:
+            os.replace(self._segments[0], self.path)
+        else:
+            snaps = [serde.read_snapshot(s) for s in self._segments]
+            n_docs = max(s.meta for s in snaps)
+            terms = sorted({t for s in snaps for t in s.bitmaps})
+            merged = {}
+            for t in terms:
+                parts = [s.bitmaps[t] for s in snaps if t in s.bitmaps]
+                merged[t] = (parts[0] if len(parts) == 1
+                             else RoaringBitmap.or_many(parts))
+            serde.write_snapshot(self.path, merged, meta=n_docs)
+            del snaps
+            for s in self._segments:
+                os.remove(s)
+        self._segments = []
+        return load_index(self.path, arena=arena)
 
 
 def dedup_filter(doc_hashes: np.ndarray) -> RoaringBitmap:

@@ -140,6 +140,78 @@ class TestLifecycle:
 
 
 # ---------------------------------------------------------------------------
+# bulk frozen adoption (PR 8): one batched conversion, one transfer
+# ---------------------------------------------------------------------------
+
+class TestAdoptFrozen:
+    def _frozen_twins(self, rng, k=9):
+        """(eager bitmaps, frozen view-backed deserialized twins)."""
+        from repro.core import deserialize_frozen, serialize_frozen
+        bms = [b.run_optimize() for b in mixed_bitmaps(rng, k)]
+        froz = [deserialize_frozen(serialize_frozen(b)) for b in bms]
+        return bms, froz
+
+    def test_bulk_rows_match_per_container_promotion(self):
+        rng = np.random.default_rng(5)
+        bms, froz = self._frozen_twins(rng)
+        bulk, eager = BitmapArena(), BitmapArena()
+        n_bulk = bulk.adopt_frozen(froz)
+        eager.adopt_many(bms)
+        assert n_bulk == sum(len(b.containers) for b in froz)
+        assert bulk.n_rows == eager.n_rows
+        for b in froz:
+            assert bulk.resident(b)
+            for c in b.containers:
+                rid = bulk.lookup(c)
+                assert np.array_equal(bulk.host_row(rid),
+                                      C.container_words64(c))
+
+    def test_upload_accounting_and_warm_requery(self):
+        """Cold start = exactly ONE slab upload; the first and every
+        later query move zero additional rows."""
+        rng = np.random.default_rng(6)
+        bms, froz = self._frozen_twins(rng)
+        arena = BitmapArena()
+        arena.adopt_frozen(froz)
+        arena.sync()
+        up0 = arena.stats.rows_uploaded
+        assert up0 == arena._n                   # one bulk upload
+        want = RoaringBitmap.or_many(bms)
+        for _ in range(2):
+            got = aggregate.or_many(froz, backend="ref", arena=arena)
+            assert got == want
+            assert arena.stats.rows_uploaded == up0
+        # re-adopting the same snapshot is a no-op
+        assert arena.adopt_frozen(froz) == 0
+
+    def test_batched_after_slab_exists_is_one_scatter(self):
+        rng = np.random.default_rng(7)
+        bms, froz = self._frozen_twins(rng, k=4)
+        arena = BitmapArena()
+        arena.adopt_frozen(froz[:2])
+        arena.sync()
+        patched0 = arena.stats.rows_patched
+        arena.adopt_frozen(froz[2:])             # second wave
+        arena.sync()
+        n_new = sum(len(b.containers) for b in froz[2:])
+        assert arena.stats.rows_patched == patched0 + n_new
+        got = aggregate.xor_many(froz, backend="ref", arena=arena)
+        assert got == RoaringBitmap.xor_many(bms)
+
+    def test_single_bitmap_and_shared_rows(self):
+        arena = BitmapArena()
+        a = bm(range(5000, 9000))
+        assert arena.adopt_frozen(a) == 1        # single-bitmap form
+        shared = a.containers[0]
+        b = RoaringBitmap([0], [shared])
+        assert arena.adopt_frozen([b]) == 0      # row already resident
+        arena.release(a)
+        assert arena.lookup(shared) is not None  # refcounted by b
+        arena.release(b)
+        assert arena.lookup(shared) is None
+
+
+# ---------------------------------------------------------------------------
 # wide ops: bit-identity with and without an arena
 # ---------------------------------------------------------------------------
 

@@ -160,6 +160,44 @@ def test_structural_validation_behind_valid_crc(rng):
         deserialize(_refresh_crc(p))
 
 
+def test_errors_carry_offset_and_container_index(rng):
+    """PR-8 contract: every truncation/validation ValueError names the
+    byte offset it fired at, and container-level failures name the
+    container index -- pinned here so messages stay actionable."""
+    import re
+    import struct
+
+    x = _mixed_bitmap(rng)
+    payload = serialize(x)
+    # truncation anywhere reports a byte offset; header truncation also
+    # says how many bytes remained (body cuts fail the CRC first)
+    for cut in (3, 10, len(payload) // 2):
+        with pytest.raises(ValueError, match=r"byte offset \d+") as ei:
+            deserialize(payload[:cut])
+        if cut < 12:
+            assert re.search(r"only \d+ remain", str(ei.value))
+    # checksum failure points at the crc field
+    with pytest.raises(ValueError, match="crc field at byte offset 4"):
+        p = bytearray(payload)
+        p[-1] ^= 1
+        deserialize(bytes(p))
+    # bad kind names the container index AND the directory offset
+    p = bytearray(serialize(bm([1, 2, 3])))
+    p[12 + 2] = 9
+    with pytest.raises(
+            ValueError,
+            match=r"kind 9 for container 0 .*byte offset 14"):
+        deserialize(_refresh_crc(p))
+    # second-container failure reports index 1, not 0
+    two = bm([5, (1 << 16) + 1, (1 << 16) + 9])
+    p = bytearray(serialize(two))
+    n = struct.unpack_from("<I", p, 8)[0]
+    assert n == 2
+    p[12 + 2 * n + 1] = 9                  # kind byte of container 1
+    with pytest.raises(ValueError, match="container 1"):
+        deserialize(_refresh_crc(p))
+
+
 def test_bitset_card_cross_check(rng):
     """A bitset whose stored cardinality disagrees with its popcount is
     rejected (that mismatch is exactly a 'silently wrong' bitmap)."""

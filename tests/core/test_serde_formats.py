@@ -1,0 +1,233 @@
+"""Cross-format serde properties: RJ02 <-> portable <-> frozen.
+
+The PR-8 contract (docs/FORMAT.md): every format round-trips every
+container kind bit-identically; the portable layout matches CRoaring's
+RoaringFormatSpec byte-for-byte (golden vectors below were hand-packed
+from the spec); frozen deserialization is PURE VIEWS over the source
+buffer -- zero payload copies, asserted via ``np.shares_memory`` on
+every container of every kind; and single-byte corruption of the
+portable structural header raises ValueError (the portable format has
+no checksum, so sorted-key payload flips are detected-or-different,
+never a crash -- see FORMAT.md section 4).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    RoaringBitmap, deserialize, deserialize_frozen, deserialize_portable,
+    read_snapshot, serialize, serialize_frozen, serialize_portable,
+    serialized_size_bytes, write_snapshot,
+)
+from repro.core.serde import sniff_format
+from test_serde import _mixed_bitmap, bm
+
+FORMATS = {
+    "rj02": (serialize, deserialize),
+    "portable": (serialize_portable, deserialize_portable),
+    "frozen": (serialize_frozen, deserialize_frozen),
+}
+
+
+def _edge_bitmaps():
+    full = RoaringBitmap.from_range(0, 1 << 16).run_optimize()
+    return {
+        "empty": RoaringBitmap(),
+        "single": bm([0]),
+        "top": bm([0xFFFFFFFF]),
+        "full_chunk": full,
+        "boundary_4096": bm(range(4096)),
+        "boundary_4097": bm(range(4097)),
+        "run_heavy": bm(list(range(10, 500)) + list(range(60000, 65536))
+                        ).run_optimize(),
+    }
+
+
+# -- round trips -------------------------------------------------------
+
+@pytest.mark.parametrize("fmt", list(FORMATS))
+@pytest.mark.parametrize("trial", range(8))
+def test_roundtrip_mixed(rng, fmt, trial):
+    ser, de = FORMATS[fmt]
+    x = _mixed_bitmap(rng, n_chunks=int(rng.integers(1, 6)))
+    y = de(ser(x))
+    assert y == x
+    assert [c.kind for c in y.containers] == [c.kind for c in x.containers]
+
+
+@pytest.mark.parametrize("fmt", list(FORMATS))
+def test_roundtrip_edges(fmt):
+    ser, de = FORMATS[fmt]
+    for name, x in _edge_bitmaps().items():
+        assert de(ser(x)) == x, (fmt, name)
+
+
+@pytest.mark.parametrize("trial", range(4))
+def test_cross_format_chain(rng, trial):
+    """rj02 -> portable -> frozen -> rj02 loses nothing."""
+    x = _mixed_bitmap(rng)
+    y = deserialize(serialize(x))
+    z = deserialize_portable(serialize_portable(y))
+    w = deserialize_frozen(serialize_frozen(z))
+    assert deserialize(serialize(w)) == x
+
+
+@pytest.mark.parametrize("fmt", list(FORMATS))
+def test_size_is_exact(rng, fmt):
+    ser, _ = FORMATS[fmt]
+    for x in [*_edge_bitmaps().values(), _mixed_bitmap(rng)]:
+        assert serialized_size_bytes(x, format=fmt) == len(ser(x))
+
+
+def test_bitmap_methods_and_sniff(rng):
+    x = _mixed_bitmap(rng)
+    for fmt in FORMATS:
+        buf = x.serialize(fmt)
+        assert sniff_format(buf) == fmt
+        assert RoaringBitmap.deserialize(buf) == x           # auto
+        assert RoaringBitmap.deserialize(buf, format=fmt) == x
+    with pytest.raises(ValueError):
+        x.serialize("msgpack")
+    with pytest.raises(ValueError):
+        RoaringBitmap.deserialize(b"????????", format="auto")
+
+
+# -- CRoaring golden vectors (hand-packed from RoaringFormatSpec) ------
+
+def test_portable_golden_no_run():
+    # {1,2,3}: no-run cookie 12346, 1 container, offset header, array
+    want = bytes.fromhex("3a300000" "01000000"       # cookie, n
+                         "0000" "0200"               # key 0, card-1
+                         "10000000"                  # offset = 16
+                         "010002000300")             # 1,2,3
+    assert serialize_portable(bm([1, 2, 3])) == want
+    assert deserialize_portable(want) == bm([1, 2, 3])
+
+
+def test_portable_golden_run():
+    # [0,100): run cookie 12347 | (n-1)<<16, run-flag bitmap, 1 run
+    x = RoaringBitmap.from_range(0, 100).run_optimize()
+    want = bytes.fromhex("3b300000" "01"             # cookie+n-1, flags
+                         "0000" "6300"               # key 0, card-1
+                         "0100" "0000" "6300")       # 1 run: 0 len 99
+    assert serialize_portable(x) == want
+    assert deserialize_portable(want) == x
+
+
+def test_portable_bitset_at_most_4096_written_as_array():
+    """Writers must canonicalize: a bitset holding <= 4096 values would
+    be mis-read as an array (kind is inferred from cardinality)."""
+    from repro.core.builder import from_dense
+    dense = np.zeros(1 << 16, bool)
+    dense[:4096] = True
+    x = from_dense(dense)                 # arrives as a bitset container
+    y = deserialize_portable(serialize_portable(x))
+    assert y == x and y.containers[0].kind == "array"
+
+
+# -- frozen zero-copy contract ----------------------------------------
+
+def test_frozen_views_share_memory_all_kinds(rng):
+    """THE acceptance assertion: every deserialized container payload
+    aliases the source buffer (no per-container copy), is read-only,
+    and bitset cardinality comes from the directory (no payload read
+    needed to construct)."""
+    x = _mixed_bitmap(rng, n_chunks=5)
+    buf = np.frombuffer(serialize_frozen(x), np.uint8)
+    y = deserialize_frozen(buf)
+    kinds = set()
+    for c in y.containers:
+        kinds.add(c.kind)
+        payload = (c.words if c.kind == "bitset" else
+                   c.values if c.kind == "array" else c.runs)
+        assert np.shares_memory(payload, buf), c.kind
+        assert not payload.flags.writeable
+    assert kinds == {"array", "bitset", "run"}
+    assert y == x
+
+
+def test_frozen_backed_bitmap_safe_to_mutate(rng):
+    """Frozen views are copy-on-write through the public mutators: the
+    source buffer must stay byte-identical after edits."""
+    x = _mixed_bitmap(rng)
+    raw = serialize_frozen(x)
+    buf = np.frombuffer(raw, np.uint8)
+    y = deserialize_frozen(buf)
+    y.add(12345)
+    y.remove(next(iter(x)))
+    y.run_optimize()
+    assert bytes(buf) == raw
+    assert deserialize_frozen(buf) == x
+
+
+def test_frozen_vs_eager_bit_identity(rng):
+    """A frozen-backed bitmap and its eager twin agree on every op."""
+    a_f = deserialize_frozen(serialize_frozen(_mixed_bitmap(rng)))
+    b = _mixed_bitmap(rng)
+    a_e = deserialize(serialize(a_f))
+    assert (a_f & b) == (a_e & b)
+    assert (a_f | b) == (a_e | b)
+    assert (a_f ^ b) == (a_e ^ b)
+    assert (a_f - b) == (a_e - b)
+    assert a_f.and_card(b) == a_e.and_card(b)
+    assert serialize(a_f) == serialize(a_e)
+
+
+# -- portable corruption sweep (FORMAT.md section 4) -------------------
+
+def test_portable_single_byte_flip_sweep(rng):
+    """No checksum in the portable layout, so the honest contract is:
+    every single-byte flip either raises ValueError or yields a bitmap
+    that differs from the original -- NEVER a crash or a silent
+    bit-identical lie."""
+    x = _mixed_bitmap(rng)
+    payload = bytes(serialize_portable(x))
+    positions = rng.choice(len(payload), size=min(len(payload), 256),
+                           replace=False)
+    for pos in positions.tolist():
+        corrupt = bytearray(payload)
+        corrupt[pos] ^= int(rng.integers(1, 256))
+        try:
+            y = deserialize_portable(bytes(corrupt))
+        except ValueError:
+            continue
+        assert y != x, f"silent corruption at byte {pos}"
+
+
+def test_portable_structural_bytes_always_raise(rng):
+    """Flips in the cookie, container count, or offset header are
+    always DETECTED (not merely different)."""
+    x = _mixed_bitmap(rng)
+    base = serialize_portable(x)
+    for pos in (0, 1, 2, 3):                         # cookie / count
+        corrupt = bytearray(base)
+        corrupt[pos] ^= 0xFF
+        with pytest.raises(ValueError):
+            deserialize_portable(bytes(corrupt))
+    with pytest.raises(ValueError):
+        deserialize_portable(base[:len(base) - 1])   # truncated tail
+    with pytest.raises(ValueError):
+        deserialize_portable(base + b"\x00")         # trailing garbage
+
+
+# -- snapshot archive --------------------------------------------------
+
+def test_snapshot_roundtrip(rng, tmp_path):
+    named = {"a": _mixed_bitmap(rng), "b": bm([7]), "empty": RoaringBitmap()}
+    p = tmp_path / "x.snap"
+    write_snapshot(p, named, meta=1234)
+    for mmap in (True, False):
+        snap = read_snapshot(p, mmap=mmap)
+        assert snap.meta == 1234
+        assert set(snap.bitmaps) == set(named)
+        for k in named:
+            assert snap.bitmaps[k] == named[k]
+    with open(p, "rb") as f:
+        assert sniff_format(f.read()) == "snapshot"
+
+
+def test_snapshot_bad_magic(tmp_path):
+    p = tmp_path / "bad.snap"
+    p.write_bytes(b"NOTASNAP" + b"\x00" * 24)
+    with pytest.raises(ValueError, match="magic"):
+        read_snapshot(p)

@@ -1,0 +1,121 @@
+"""StreamingIndexBuilder + load_index: cold-start ingest contract.
+
+The PR-8 streaming path (docs/FORMAT.md section 3): postings append in
+bounded-memory chunks, frozen segments spill to disk, finalize merges
+them into ONE mmap-able snapshot, and the mapped index answers queries
+bit-identically to an eager build -- with the first query already warm
+when an arena is attached.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import BitmapArena, RoaringBitmap, read_snapshot
+from repro.data.index import InvertedIndex, load_index
+from repro.data.pipeline import StreamingIndexBuilder
+
+
+def _corpus(rng, n_docs=2000, n_terms=30):
+    return [[f"t{j}" for j in
+             rng.choice(n_terms, int(rng.integers(1, 8)), replace=False)]
+            for _ in range(n_docs)]
+
+
+def _eager(docs):
+    return InvertedIndex().build(docs)
+
+
+class TestStreamingBuilder:
+    def test_multi_segment_merge_matches_eager(self, rng, tmp_path):
+        docs = _corpus(rng)
+        ref = _eager(docs)
+        b = StreamingIndexBuilder(tmp_path / "i.snap", segment_bytes=4096)
+        for i, terms in enumerate(docs):
+            b.add_document(i, terms)
+        assert len(b._segments) > 1              # spills actually happened
+        idx = b.finalize()
+        assert idx.n_docs == ref.n_docs
+        assert set(idx.postings) == set(ref.postings)
+        for t in ref.postings:
+            assert idx.postings[t] == ref.postings[t]
+        # segments were cleaned up; only the final archive remains
+        assert os.listdir(tmp_path) == ["i.snap"]
+
+    def test_columnar_append_and_pending_accounting(self, rng, tmp_path):
+        b = StreamingIndexBuilder(tmp_path / "i.snap", segment_bytes=1 << 20)
+        ids = rng.choice(10000, 500, replace=False).astype(np.uint32)
+        b.append_postings("x", ids)
+        b.append_postings("x", ids[:100])        # dupes fold at spill
+        b.append_postings("y", np.array([], np.uint32))   # no-op
+        assert b.pending_bytes == 4 * 600
+        idx = b.finalize()
+        assert idx.postings["x"] == RoaringBitmap.from_values(ids)
+        assert "y" not in idx.postings
+        assert idx.n_docs == int(ids.max()) + 1
+
+    def test_single_segment_is_rename(self, rng, tmp_path):
+        docs = _corpus(rng, n_docs=50)
+        b = StreamingIndexBuilder(tmp_path / "i.snap")
+        for i, terms in enumerate(docs):
+            b.add_document(i, terms)
+        assert b._segments == []                 # nothing spilled early
+        idx = b.finalize()
+        assert idx.query_or("t1", "t2") == _eager(docs).query_or("t1", "t2")
+
+    def test_empty_builder(self, tmp_path):
+        idx = StreamingIndexBuilder(tmp_path / "e.snap").finalize()
+        assert idx.n_docs == 0 and idx.postings == {}
+        assert idx.query_and("anything") == RoaringBitmap()
+
+
+class TestLoadIndex:
+    def test_mapped_views_and_query_parity(self, rng, tmp_path):
+        docs = _corpus(rng)
+        ref = _eager(docs)
+        b = StreamingIndexBuilder(tmp_path / "i.snap", segment_bytes=8192)
+        for i, terms in enumerate(docs):
+            b.add_document(i, terms)
+        b.finalize()
+        idx = load_index(tmp_path / "i.snap")
+        # postings are views over ONE buffer (the zero-copy contract)
+        snap = read_snapshot(tmp_path / "i.snap")
+        for bm in idx.postings.values():
+            for c in bm.containers:
+                payload = (c.words if c.kind == "bitset" else
+                           c.values if c.kind == "array" else c.runs)
+                assert not payload.flags.writeable
+        assert snap.meta == idx.n_docs == ref.n_docs
+        for q in (("t1", "t2"), ("t3", "t4", "t5")):
+            assert idx.query_and(*q) == ref.query_and(*q)
+            assert idx.query_or(*q) == ref.query_or(*q)
+            assert idx.query_xor(*q) == ref.query_xor(*q)
+        assert (idx.query_andnot("t1", "t2") ==
+                ref.query_andnot("t1", "t2"))
+
+    def test_arena_cold_start_first_query_is_warm(self, rng, tmp_path):
+        docs = _corpus(rng, n_docs=800)
+        b = StreamingIndexBuilder(tmp_path / "i.snap")
+        for i, terms in enumerate(docs):
+            b.add_document(i, terms)
+        b.finalize()
+        arena = BitmapArena()
+        idx = load_index(tmp_path / "i.snap", arena=arena)
+        arena.sync()                             # the ONE bulk upload
+        up0 = arena.stats.rows_uploaded
+        ref = _eager(docs)
+        assert idx.query_and("t1", "t2") == ref.query_and("t1", "t2")
+        assert idx.query_or("t0", "t3") == ref.query_or("t0", "t3")
+        assert arena.stats.rows_uploaded == up0  # zero rows moved
+
+    def test_from_postings_direct(self, rng):
+        ref = _eager(_corpus(rng, n_docs=100))
+        idx = InvertedIndex.from_postings(ref.postings, ref.n_docs)
+        assert idx.query_and("t1", "t2") == ref.query_and("t1", "t2")
+
+    def test_corrupt_archive_raises(self, tmp_path):
+        p = tmp_path / "bad.snap"
+        p.write_bytes(b"garbage bytes, not a snapshot archive")
+        with pytest.raises(ValueError):
+            load_index(p)

@@ -61,6 +61,45 @@ def _docstring_errors() -> list[str]:
         errors.append("SimilarityEngine class docstring must document "
                       "the arena view")
 
+    # PR 8: the whole serde/ingest surface is documented -- every
+    # public function in core/serde.py carries a docstring, and the
+    # format-bearing entry points point at docs/FORMAT.md
+    serde_tree = ast.parse((ROOT / "src/repro/core/serde.py").read_text())
+    if "docs/FORMAT.md" not in doc_of(serde_tree):
+        errors.append("core/serde.py module docstring must point at "
+                      "docs/FORMAT.md")
+    for node in serde_tree.body:
+        if isinstance(node, ast.FunctionDef) and \
+                not node.name.startswith("_") and not doc_of(node):
+            errors.append(f"serde.{node.name} needs a docstring")
+    snapcls = classes(serde_tree).get("FrozenSnapshot")
+    if snapcls is None or not doc_of(snapcls):
+        errors.append("serde.FrozenSnapshot needs a class docstring")
+
+    pipe_tree = ast.parse(
+        (ROOT / "src/repro/data/pipeline.py").read_text())
+    sib = classes(pipe_tree).get("StreamingIndexBuilder")
+    if sib is None or "spill" not in doc_of(sib).lower():
+        errors.append("StreamingIndexBuilder class docstring must "
+                      "describe segment spilling")
+    else:
+        for m in sib.body:
+            if (isinstance(m, ast.FunctionDef)
+                    and not m.name.startswith("_") and not doc_of(m)):
+                errors.append(
+                    f"StreamingIndexBuilder.{m.name} needs a docstring")
+
+    bitmap_tree = ast.parse(
+        (ROOT / "src/repro/core/bitmap.py").read_text())
+    bm_cls = classes(bitmap_tree).get("RoaringBitmap")
+    for want in ("serialize", "deserialize"):
+        fn = next((m for m in bm_cls.body
+                   if isinstance(m, ast.FunctionDef) and m.name == want),
+                  None)
+        if fn is None or "docs/FORMAT.md" not in doc_of(fn):
+            errors.append(f"RoaringBitmap.{want} must exist and point "
+                          "at docs/FORMAT.md")
+
     # every public function/method with an ``arena`` parameter documents
     # it (the class docstring may carry it for __init__)
     for rel in ("src/repro/core/aggregate.py", "src/repro/core/bitmap.py",
@@ -95,8 +134,8 @@ def _docstring_errors() -> list[str]:
 
 def check() -> list[str]:
     errors = []
-    for doc in ("docs/ARCHITECTURE.md", "docs/MEMORY.md", "README.md",
-                "benchmarks/README.md"):
+    for doc in ("docs/ARCHITECTURE.md", "docs/MEMORY.md",
+                "docs/FORMAT.md", "README.md", "benchmarks/README.md"):
         path = ROOT / doc
         if not path.exists():
             errors.append(f"{doc}: missing")
@@ -137,6 +176,16 @@ def test_architecture_is_linked_and_nontrivial():
     for needle in ("state machine", "opy-on-write", "PCIe", "VMEM",
                    "ArenaStats", "row 0"):
         assert needle in mem, needle
+    assert "docs/FORMAT.md" in readme, \
+        "README must link the on-disk format spec"
+    assert "docs/FORMAT.md" in arch, \
+        "ARCHITECTURE.md must link the on-disk format spec"
+    fmt = (ROOT / "docs" / "FORMAT.md").read_text()
+    # the format spec must actually be byte-exact and honest
+    for needle in ("RJ02", "12346", "12347", "RJFZ0001", "RJSN0001",
+                   "CRC-32", "little-endian", "Worked hex",
+                   "honest table", "align("):
+        assert needle in fmt, needle
 
 
 if __name__ == "__main__":
