@@ -786,3 +786,94 @@ def query_throughput(rows, quick: bool = False) -> list[dict]:
                                 [("query_throughput", sequential, served)],
                                 "mixed", conc, repeats)
     return records
+
+
+# ---------------------------------------------------------------------------
+# similar_sharded suite: per-shard arena slabs + k-list merge vs the
+# single-device fused engine path -- the PR 9 contract (>= 2x at N=1e5
+# on 4 forced host devices, bit-identical, warm slabs move zero rows).
+# ---------------------------------------------------------------------------
+
+def _sharded_sim_postings(n: int, seed: int = 41):
+    """Zipfian single-chunk candidate sets over a 2^16 document universe:
+    candidate ``r`` matches ~50k/(r+1)^1.1 docs (sampled with replacement,
+    deduped), so every candidate is exactly ONE container row and a
+    million-candidate slab stays at 8 KiB/row.  The head is dense (bitset
+    rows), the tail sparse arrays -- the cardinality skew the pruning
+    planner feeds on."""
+    rng = np.random.default_rng(seed)
+    sizes = np.maximum(
+        4, (50_000 / np.arange(1, n + 1) ** 1.1).astype(np.int64))
+    out = []
+    for r in range(n):
+        vals = np.unique(rng.integers(0, 1 << 16, sizes[r],
+                                      dtype=np.uint32))
+        out.append(RoaringBitmap.from_values(vals))
+    return out
+
+
+def similar_sharded(rows, quick: bool = False) -> list[dict]:
+    """Sharded ``SimilarityEngine.topk`` (per-shard slabs, fused score +
+    select per shard, k-list all-gather, device merge) vs the
+    single-device fused path on the SAME arena, head member query,
+    ``k``=10 jaccard.
+
+    ``correct`` is (idx, score, inter) tuple equality against the fused
+    seed AND a warm-slab PCIe check: the per-shard ``rows_uploaded``
+    counters must not move across the timed re-queries.  ``n_devices``
+    joins the gate key, so records from a 1-device fallback run never
+    gate against true multi-device ones; the quick CI sweep runs under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` to match the
+    committed baseline.  The 1-device record is the degraded path (the
+    mesh-aware engine falls back to the pruned host sweep)."""
+    import gc
+
+    import jax
+
+    from repro.core.arena import BitmapArena
+    from repro.core.pairwise import SimilarityEngine
+    from repro.launch.mesh import make_wide_mesh
+
+    records = []
+    sizes = (10_000,) if quick else (10_000, 100_000, 1_000_000)
+    dev_counts = tuple(d for d in (1, 2, 4) if d <= jax.device_count())
+    top_k = 10
+    for n in sizes:
+        repeats = 2 if n >= 1_000_000 else 3
+        bms = _sharded_sim_postings(n)
+        arena = BitmapArena(capacity=n + 8)
+        seed_eng = SimilarityEngine(bms, arena=arena)
+
+        def seed_topk(eng=seed_eng):
+            i, s, t = eng.topk(0, top_k, backend="ref")
+            return (tuple(i.tolist()), tuple(s.tolist()),
+                    tuple(t.tolist()))
+
+        for d in dev_counts:
+            mesh = make_wide_mesh(d)
+            eng = SimilarityEngine(bms, arena=arena, mesh=mesh)
+
+            def sharded_topk(eng=eng):
+                i, s, t = eng.topk(0, top_k)
+                return (tuple(i.tolist()), tuple(s.tolist()),
+                        tuple(t.tolist()))
+
+            sharded_topk()          # build the per-shard slabs untimed
+            shards = arena.shard_slabs(mesh) if d > 1 else None
+            up0 = ([s.rows_uploaded for s in shards.stats]
+                   if shards is not None else None)
+            recs = _run_benches(
+                rows, "similar_sharded",
+                [(f"similar_sharded_d{d}", seed_topk, sharded_topk)],
+                "zipf_chunk", n, repeats)
+            warm_ok = (shards is None or
+                       [s.rows_uploaded for s in shards.stats] == up0)
+            for r in recs:
+                r["n_devices"] = d
+                r["correct"] = bool(r["correct"] and warm_ok)
+            records += recs
+            del eng
+            gc.collect()
+        del seed_eng, arena, bms
+        gc.collect()
+    return records

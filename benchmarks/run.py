@@ -30,7 +30,8 @@ def main() -> None:
     ap.add_argument("--only", "--suite", dest="suites", default="",
                     help="comma list: table3,...,table14,kernels,"
                          "wide_ops,wide_ops_sharded,pairwise,"
-                         "arena_warm,cold_start,query_throughput")
+                         "arena_warm,cold_start,query_throughput,"
+                         "similar_sharded")
     ap.add_argument("--quick", action="store_true",
                     help="gate-sized wide_ops sweeps (subset of full keys)")
     ap.add_argument("--out", default="",
@@ -77,6 +78,8 @@ def main() -> None:
         records += kernels_bench.cold_start(rows, quick=args.quick)
     if want is None or "query_throughput" in want:
         records += kernels_bench.query_throughput(rows, quick=args.quick)
+    if want is None or "similar_sharded" in want:
+        records += kernels_bench.similar_sharded(rows, quick=args.quick)
     if records:
         out = args.out or "BENCH_wide_ops.json"
         with open(out, "w") as f:

@@ -94,10 +94,8 @@ def set_default_mesh(mesh) -> None:
 
 
 def _resolve_mesh(mesh):
-    if mesh is not None:
-        return mesh
     from repro.dist import ctx
-    return ctx.wide_mesh()
+    return ctx.resolve_wide(mesh)[0]
 
 
 def _mesh_size(mesh) -> int:
@@ -105,11 +103,9 @@ def _mesh_size(mesh) -> int:
 
 
 def _mesh_axis(mesh) -> str:
-    if len(mesh.axis_names) != 1:
-        raise ValueError(
-            f"wide aggregation shards over a 1-D mesh; got axes "
-            f"{mesh.axis_names!r}")
-    return mesh.axis_names[0]
+    # one shared 1-D rule for every wide path (ctx.resolve_wide)
+    from repro.dist import ctx
+    return ctx.resolve_wide(mesh)[2]
 
 
 def _bitmap_cls():

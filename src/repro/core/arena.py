@@ -105,6 +105,7 @@ class BitmapArena:
         self._entries: dict[int, _Entry] = {}   # id(bm) -> _Entry
         self._row_of: dict[int, int] = {}       # id(container) -> row
         self._ref: dict[int, int] = {}          # row -> refcount
+        self._shards: ShardSlabs | None = None  # lazy per-shard slab mode
         self.stats = ArenaStats()
 
     # -- directory ----------------------------------------------------
@@ -213,8 +214,7 @@ class BitmapArena:
                 self._row_of[id(c)] = rid
                 self._ref[rid] = 0              # adopt() bumps it below
             self.stats.rows_promoted += len(fresh)
-            if self._dev is not None:
-                self._dirty.extend(ids)
+            self._note_dirty(ids)
         for bm in bitmaps:
             self.adopt(bm)
         return len(fresh)
@@ -243,8 +243,7 @@ class BitmapArena:
         self._row_of[id(c)] = rid
         self._ref[rid] = 1
         self.stats.rows_promoted += 1
-        if self._dev is not None:
-            self._dirty.append(rid)
+        self._note_dirty([rid])
         return rid
 
     def _release_cont(self, c) -> None:
@@ -257,6 +256,17 @@ class BitmapArena:
             del self._row_of[id(c)]
             self._free.append(rid)
             self.stats.rows_freed += 1
+
+    def _note_dirty(self, ids) -> None:
+        """Record host-mirror edits against every materialized device
+        view: the single-device slab's dirty list AND (when the arena is
+        in per-shard slab mode) the owning shard's pending set.  Views
+        that were never uploaded skip the bookkeeping -- their first
+        build reads the whole host mirror anyway."""
+        if self._dev is not None:
+            self._dirty.extend(ids)
+        if self._shards is not None:
+            self._shards.note_many(ids)
 
     def _alloc(self) -> int:
         if self._free:
@@ -318,5 +328,159 @@ class BitmapArena:
 
     def sync(self) -> None:
         """Flush pending patches (uploading the slab if it never was)
-        and block until the device copy is ready (benchmark fencing)."""
+        and block until the device copy is ready (benchmark fencing).
+        When the arena is in per-shard slab mode the shard slabs are
+        fenced too."""
         self.device_slab().block_until_ready()
+        if self._shards is not None:
+            self._shards.sync()
+
+    # -- per-shard slab mode -------------------------------------------
+
+    def shard_slabs(self, mesh=None) -> "ShardSlabs":
+        """Per-shard slab mode: the arena's rows round-robined across the
+        devices of a 1-D ``("wide",)`` mesh (row ``r`` lives on shard
+        ``r % S`` at local index ``r // S``), host mirror still
+        authoritative, CoW patching per shard.
+
+        The first call stripes the host mirror into ``S`` device-local
+        slabs (one upload per shard); later calls return the same
+        :class:`ShardSlabs`, flushing host edits shard-by-shard (only
+        shards owning dirty rows pay a scatter).  Passing a different
+        mesh rebuilds.  ``mesh=None`` resolves through the installed
+        wide mesh (``dist.ctx.resolve_wide``)."""
+        from repro.dist import ctx
+        mesh, size, axis = ctx.resolve_wide(mesh)
+        if mesh is None:
+            raise ValueError("shard_slabs needs a mesh (none installed)")
+        if self._shards is None or self._shards.mesh != mesh:
+            self._shards = ShardSlabs(self, mesh, size, axis)
+        return self._shards
+
+
+class ShardSlabs:
+    """Round-robin per-shard device slabs over a 1-D mesh -- the arena
+    scale-out mode behind the sharded ``SimilarityEngine`` path.
+
+    Layout (docs/MEMORY.md "Per-shard slab layout"):
+
+    * global row ``r`` -> shard ``r % S``, local index ``r // S`` (the
+      wide-aggregate round-robin, so the mapping never changes when the
+      arena grows -- growth only pads each shard with device-local
+      zeros, existing rows never cross PCIe again);
+    * each shard holds a ``(cap_s, 2048)`` uint32 slab committed to its
+      mesh device, ``cap_s = ceil(capacity / S)``;
+    * :meth:`assembled` presents the ``S`` slabs as ONE global
+      ``(S * cap_s, 2048)`` jax array sharded over the mesh axis --
+      metadata-only assembly (``make_array_from_single_device_arrays``),
+      no copies -- so global row ``r`` sits at assembled position
+      ``(r % S) * cap_s + r // S`` (:meth:`positions`);
+    * host edits batch into per-shard CoW scatters: only shards owning
+      dirty rows re-patch, each in ONE functional ``.at[].set`` (in-
+      flight dispatches keep their captured slabs).
+
+    ``stats[s]`` is a per-shard :class:`ArenaStats`: shard uploads and
+    patches are accounted *here*, not in the arena's global stats (which
+    keep tracking the single-device slab) -- the warm-query zero-PCIe
+    assertions sum these counters.
+    """
+
+    def __init__(self, arena: BitmapArena, mesh, size: int, axis: str):
+        self.arena = arena
+        self.mesh = mesh
+        self.size = int(size)
+        self.axis = axis
+        self.cap_s = 0
+        self._devs: list | None = None       # per-shard (cap_s, WORDS) u32
+        self._assembled = None               # cached global sharded view
+        self._pending: set[int] = set()      # global rows dirty since flush
+        self.stats = [ArenaStats() for _ in range(self.size)]
+
+    def note_many(self, ids) -> None:
+        """Mark global rows dirty (called by the arena on host edits)."""
+        if self._devs is not None:
+            self._pending.update(int(r) for r in ids)
+
+    def _devices(self):
+        return list(self.mesh.devices.reshape(-1))
+
+    def _ensure(self) -> None:
+        """Build the per-shard slabs on first use; afterwards grow
+        (device-local zero padding) and flush pending rows (per-shard
+        CoW scatters)."""
+        import jax
+        S = self.size
+        host = self.arena._host
+        need = -(-host.shape[0] // S)
+        if self._devs is None:
+            devs = self._devices()
+            self._devs = []
+            for s in range(S):
+                block = np.zeros((need, 1024), np.uint64)
+                rows_s = host[s::S]
+                block[: rows_s.shape[0]] = rows_s
+                self._devs.append(jax.device_put(
+                    block.view(np.uint32).reshape(-1, WORDS), devs[s]))
+                self.stats[s].rows_uploaded += max(
+                    0, -(-(self.arena._n - s) // S))
+            self.cap_s = need
+            self._pending.clear()
+            self._assembled = None
+            return
+        if need > self.cap_s:
+            devs = self._devices()
+            for s in range(S):
+                pad = jax.device_put(
+                    jnp.zeros((need - self.cap_s, WORDS), jnp.uint32),
+                    devs[s])
+                self._devs[s] = jnp.concatenate([self._devs[s], pad])
+            self.cap_s = need
+            self._assembled = None
+        if self._pending:
+            devs = self._devices()
+            by_shard: dict[int, list[int]] = {}
+            for r in self._pending:
+                by_shard.setdefault(r % S, []).append(r)
+            for s, rids in by_shard.items():
+                rids = np.array(sorted(rids), np.int64)
+                rows32 = np.ascontiguousarray(
+                    host[rids]).view(np.uint32).reshape(len(rids), WORDS)
+                self._devs[s] = self._devs[s].at[
+                    jnp.asarray(rids // S, jnp.int32)].set(
+                        jax.device_put(rows32, devs[s]))
+                self.stats[s].rows_uploaded += len(rids)
+                self.stats[s].rows_patched += len(rids)
+            self._pending.clear()
+            self._assembled = None
+
+    def assembled(self):
+        """The global ``(S * cap_s, 2048)`` uint32 slab, sharded over the
+        mesh axis -- zero-copy metadata assembly of the per-shard slabs,
+        flushed first.  Index it with :meth:`positions`."""
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec
+        self._ensure()
+        if self._assembled is None:
+            sharding = NamedSharding(self.mesh, PartitionSpec(self.axis))
+            self._assembled = jax.make_array_from_single_device_arrays(
+                (self.size * self.cap_s, WORDS), sharding, self._devs)
+        return self._assembled
+
+    def positions(self, ids):
+        """Assembled-array positions of global rows ``ids`` (numpy).
+        Builds/flushes the slabs first: positions are only meaningful
+        against the CURRENT ``cap_s`` (growth changes the stride)."""
+        self._ensure()
+        ids = np.asarray(ids, np.int64)
+        return (ids % self.size) * self.cap_s + ids // self.size
+
+    def shard_slab(self, s: int):
+        """Shard ``s``'s ``(cap_s, 2048)`` slab (flushed)."""
+        self._ensure()
+        return self._devs[s]
+
+    def sync(self) -> None:
+        """Flush every shard and block (benchmark fencing)."""
+        self._ensure()
+        for d in self._devs:
+            d.block_until_ready()

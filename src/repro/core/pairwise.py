@@ -659,13 +659,29 @@ class SimilarityEngine:
     re-promoting and re-uploading the whole candidate set.
     """
 
-    def __init__(self, bitmaps, *, arena=None):
+    def __init__(self, bitmaps, *, arena=None, mesh=None):
         """``bitmaps``: the candidate set, index-aligned with results.
         ``arena``: optional shared ``BitmapArena``; candidates are
         adopted into it and the engine becomes a view over its slab
-        (see the class docstring and docs/MEMORY.md)."""
+        (see the class docstring and docs/MEMORY.md).
+        ``mesh``: optional 1-D ``("wide",)`` mesh; with more than one
+        device the engine runs the sharded path (:meth:`_topk_sharded`)
+        over the arena's per-shard slabs -- requires ``arena``.  A
+        1-device mesh degrades to the single-device engine."""
         self._bitmaps = list(bitmaps)
         self._arena = arena
+        self._mesh = None
+        self._nshards = 1
+        self._shard_axis = None
+        if mesh is not None:
+            from repro.dist import ctx
+            m, size, axis = ctx.resolve_wide(mesh)
+            if size > 1:
+                if arena is None:
+                    raise ValueError(
+                        "sharded SimilarityEngine (mesh=) requires an "
+                        "arena-backed engine")
+                self._mesh, self._nshards, self._shard_axis = m, size, axis
         self._build()
 
     def _build(self) -> None:
@@ -708,6 +724,7 @@ class SimilarityEngine:
         seg = int(np.diff(starts).max()) if self.n else 1
         self.jmax = 1 if seg <= 1 else 1 << (seg - 1).bit_length()
         self._dev = None                         # lazy device upload
+        self._shard_jit = {}                     # (metric, k, backend) -> fn
 
     def refresh(self) -> bool:
         """Generation revalidation for an arena-backed engine: re-adopt
@@ -877,6 +894,9 @@ class SimilarityEngine:
             order = np.argsort(-score, kind="stable")[:k]
             return (order.astype(np.int64), score[order],
                     np.zeros(k, np.int64))
+        if self._mesh is not None and backend != "host":
+            return self._topk_sharded(query, qc, k, metric, exclude,
+                                      backend)
         if backend != "host" and _prefer_kernel(backend):
             dev_rows, dev_col, dev_starts, dev_cards = self._device()
             idx, score, inter = kops.similarity_topk(
@@ -891,6 +911,168 @@ class SimilarityEngine:
                     np.asarray(inter).astype(np.int64))
         return self._topk_host(self._query_words(query), qc, k, metric,
                                exclude)
+
+    # -- sharded path (per-shard arena slabs, k-list all-gather) --------
+
+    def _query_words_dev_sharded(self, query, shards):
+        """(C, WORDS) uint32 device query block for the sharded path: a
+        member query gathers its rows from the ASSEMBLED per-shard slab
+        (container words never cross the host bridge); a bitmap query
+        ships only its occupied rows -- the query payload itself, never
+        candidate rows."""
+        nc = max(self.n_keys, 1)
+        zeros = jnp.zeros((nc, WORDS), jnp.uint32)
+        if isinstance(query, (int, np.integer)):
+            s, e = int(self.starts[query]), int(self.starts[query + 1])
+            if s == e:
+                return zeros
+            pos = shards.positions(self.row_ids[s:e])
+            rows = jnp.take(shards.assembled(),
+                            jnp.asarray(pos, jnp.int32), axis=0)
+            return zeros.at[jnp.asarray(self.row_col[s:e])].set(rows)
+        cols, rows = [], []
+        for key, cont in zip(query.keys, query.containers):
+            col = self.key_col.get(key)
+            if col is not None:
+                cols.append(col)
+                rows.append(C.container_words64(cont))
+        if not cols:
+            return zeros
+        stack = np.stack(rows).view(np.uint32).reshape(-1, WORDS)
+        return zeros.at[jnp.asarray(np.asarray(cols, np.int32))] \
+            .set(jnp.asarray(stack))
+
+    def _sharded_fn(self, metric: str, k: int, backend):
+        """One jit'd sharded dispatch per (metric, k, backend) class:
+        gather survivor rows from the assembled sharded slab, run the
+        fused score+select per shard under ``shard_map``, all-gather
+        ONLY the k-lists, and merge to the global top-k on device."""
+        key = (metric, k, backend)
+        fn = self._shard_jit.get(key)
+        if fn is not None:
+            return fn
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        mesh, axis, jmax = self._mesh, self._shard_axis, self.jmax
+
+        def body(rows_d, col_d, starts_d, gidx_d, cards_d, nval_d,
+                 q, qc, ex):
+            idx, sco, itr = kops.similarity_topk_ids(
+                rows_d[0], col_d[0], starts_d[0], q, qc, cards_d[0],
+                gidx_d[0], metric=metric, k=k, jmax=jmax,
+                n_valid=nval_d[0], exclude=ex, backend=backend)
+            return (jax.lax.all_gather(idx, axis),
+                    jax.lax.all_gather(sco, axis),
+                    jax.lax.all_gather(itr, axis))
+
+        sp = P(axis)
+        sm = shard_map(body, mesh=mesh,
+                       in_specs=(sp, sp, sp, sp, sp, sp, P(), P(), P()),
+                       out_specs=(P(), P(), P()), check_rep=False)
+
+        def run(slab, pos, col, starts, gidx, cards, nval, q, qc, ex):
+            s, r = pos.shape
+            rows_all = jnp.take(slab, pos.reshape(-1),
+                                axis=0).reshape(s, r, WORDS)
+            gi, gs, gn = sm(rows_all, col, starts, gidx, cards, nval,
+                            q, qc, ex)
+            return kops.topk_merge(gs.reshape(-1), gn.reshape(-1),
+                                   gi.reshape(-1), k, backend=backend)
+
+        fn = jax.jit(run)
+        self._shard_jit[key] = fn
+        return fn
+
+    def _plan_sharded(self, q64, qc, k, metric, exclude, shards):
+        """Host planning for one sharded query: run the SAME pruning
+        derivation as :meth:`_topk_host` (bounds -> k seed exact scores
+        -> running k-th score tau -> survivors = bound >= tau), then
+        round-robin the survivors to their ``t % S`` home shards and
+        pack per-shard padded arrays for the shard_map dispatch.
+
+        Returns ``(counts, gidx, cards, starts, pos, col)``: per-shard
+        valid-candidate counts (S,), global candidate ids (S, L) (pad:
+        ``self.n``, masked by ``n_valid``), their cardinalities (S, L),
+        row segment starts (S, L+1) (pad: repeat last -- empty
+        segments), assembled-slab row positions (S, R) (pad: position 0,
+        the reserved all-zero row), and key columns (S, R).  L and R are
+        padded to powers of two so jit retraces stay bounded."""
+        ub = _scores_host(np.minimum(qc, self.cards), qc, self.cards,
+                          metric)
+        if exclude is not None:
+            ub[exclude] = np.float32(-1.0)
+        seeds = np.argsort(-ub, kind="stable")[:k]
+        seed_score = _scores_host(self._host_inter(seeds, q64), qc,
+                                  self.cards[seeds], metric)
+        tau = seed_score.min()
+        # exact seed scores are <= their bounds, so seeds survive; the
+        # excluded candidate's bound is -1 < 0 <= tau, so it never does
+        surv = np.where(ub >= tau)[0]
+        S = self._nshards
+        sh = (surv % S).astype(np.int64)
+        counts = np.bincount(sh, minlength=S).astype(np.int32)
+        lmax = max(1, int(counts.max()))
+        lpad = 1 << (lmax - 1).bit_length()      # pow2: bounded retraces
+        gidx_p = np.full((S, lpad), self.n, np.int32)   # pad: masked slot
+        cards_p = np.zeros((S, lpad), np.int32)
+        starts_p = np.zeros((S, lpad + 1), np.int32)
+        rid_shard = []
+        rmax = 1
+        for s in range(S):
+            cs = surv[sh == s]                   # ascending global ids
+            gidx_p[s, : cs.size] = cs
+            cards_p[s, : cs.size] = self.cards[cs]
+            lens = (self.starts[cs + 1] - self.starts[cs]).astype(np.int64)
+            tot = int(lens.sum())
+            st = np.zeros(lpad + 1, np.int64)
+            st[1: cs.size + 1] = np.cumsum(lens)
+            st[cs.size + 1:] = tot               # pad: repeat last start
+            starts_p[s] = st
+            if tot:
+                offs = np.repeat(np.cumsum(lens) - lens, lens)
+                ridx = np.arange(tot) - offs + np.repeat(
+                    self.starts[cs].astype(np.int64), lens)
+            else:
+                ridx = np.zeros(0, np.int64)
+            rid_shard.append(ridx)
+            rmax = max(rmax, tot)
+        rpad = 1 << (rmax - 1).bit_length()
+        pos_p = np.zeros((S, rpad), np.int32)    # pad: reserved zero row 0
+        col_p = np.zeros((S, rpad), np.int32)
+        for s, ridx in enumerate(rid_shard):
+            pos_p[s, : ridx.size] = shards.positions(self.row_ids[ridx])
+            col_p[s, : ridx.size] = self.row_col[ridx]
+        return counts, gidx_p, cards_p, starts_p, pos_p, col_p
+
+    def _topk_sharded(self, query, qc, k, metric, exclude, backend):
+        """The sharded query path: the host pruning planner (same bound /
+        seed / tau derivation as :meth:`_topk_host`, so the SAME
+        candidates survive) selects the survivor set, survivors are
+        round-robined to their ``t % S`` home shards, each shard runs the
+        fused score+select over its survivors' arena rows (gathered from
+        the assembled per-shard slab by global position -- ids over the
+        bridge, never container words), and only the S k-lists are
+        all-gathered and merged on device.  Ties resolve to the lowest
+        GLOBAL candidate index at both the per-shard select and the
+        merge, so results are bit-identical to the single-device path."""
+        shards = self._arena.shard_slabs(self._mesh)
+        q64 = self._query_words(query)           # host mirror, no PCIe
+        (counts, gidx_p, cards_p, starts_p, pos_p, col_p
+         ) = self._plan_sharded(q64, qc, k, metric, exclude, shards)
+        q_dev = self._query_words_dev_sharded(query, shards)
+        for st in shards.stats:
+            st.device_gathers += 1
+        fn = self._sharded_fn(metric, k, backend)
+        with self._mesh:
+            idx, score, inter = fn(
+                shards.assembled(), jnp.asarray(pos_p),
+                jnp.asarray(col_p), jnp.asarray(starts_p),
+                jnp.asarray(gidx_p), jnp.asarray(cards_p),
+                jnp.asarray(counts.astype(np.int32)), q_dev,
+                jnp.asarray(np.int32(qc)),
+                jnp.asarray(np.int32(-1 if exclude is None else exclude)))
+        return (np.asarray(idx).astype(np.int64), np.asarray(score),
+                np.asarray(inter).astype(np.int64))
 
     def topk_batch(self, queries, k: int, metric: str = "jaccard", *,
                    backend: str | None = None) -> list:
@@ -910,6 +1092,7 @@ class SimilarityEngine:
         batch: dict[int, list[int]] = {}          # effective k -> indices
         use_vmap = (backend != "host" and _prefer_kernel(backend)
                     and not kops._use_pallas(backend)
+                    and self._mesh is None
                     and self.rows.shape[0] > 0)
         for i, q in enumerate(queries):
             if not use_vmap:

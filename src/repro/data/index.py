@@ -172,7 +172,7 @@ class InvertedIndex:
     def jaccard(self, a: str, b: str) -> float:
         return self._get(a).jaccard(self._get(b))
 
-    def _sim_engine(self):
+    def _sim_engine(self, mesh=None):
         """Cached similarity engine over every posting list, rebuilt
         lazily after any postings mutation.  Mutations through the index
         API drop the cache eagerly; direct edits of the public
@@ -187,29 +187,47 @@ class InvertedIndex:
         With an arena, a stale snapshot over the SAME term set and
         bitmap objects refreshes the engine in place (``refresh()``:
         the arena repatches only the edited rows) instead of rebuilding
-        the slab; term-set or object changes still rebuild."""
+        the slab; term-set or object changes still rebuild.
+
+        ``mesh``: optional 1-D ``("wide",)`` mesh.  With more than one
+        device the engine runs the sharded per-shard-slab path (requires
+        an arena-backed index); engines are cached per mesh, so sharded
+        and single-device engines over the same postings coexist."""
+        key = None
+        if mesh is not None:
+            from repro.dist import ctx
+            m, size, _ = ctx.resolve_wide(mesh)
+            if size > 1:
+                if self.arena is None:
+                    raise ValueError(
+                        "similar(mesh=) requires an arena-backed index")
+                key = m
         snap = tuple((t, id(bm), bm._version, bm.cardinality)
                      for t, bm in self.postings.items())
-        if self._sim is None or self._sim[0] != snap:
+        cache = self._sim if isinstance(self._sim, dict) else {}
+        ent = cache.get(key)
+        if ent is None or ent[0] != snap:
             from repro.core.pairwise import SimilarityEngine
             terms = list(self.postings)
-            if (self.arena is not None and self._sim is not None
-                    and self._sim[1] == terms
+            if (self.arena is not None and ent is not None
+                    and ent[1] == terms
                     and all(self.postings[t] is bm for t, bm in
-                            zip(terms, self._sim[2]._bitmaps))):
-                eng = self._sim[2]
+                            zip(terms, ent[2]._bitmaps))):
+                eng = ent[2]
                 eng.refresh()
-                self._sim = (snap, terms, eng)
+                ent = (snap, terms, eng)
             else:
-                self._sim = (snap, terms,
-                             SimilarityEngine(
-                                 (self.postings[t] for t in terms),
-                                 arena=self.arena))
-        return self._sim[1], self._sim[2]
+                ent = (snap, terms,
+                       SimilarityEngine((self.postings[t] for t in terms),
+                                        arena=self.arena, mesh=key))
+            cache[key] = ent
+            self._sim = cache
+        return ent[1], ent[2]
 
     def similar(self, term: str, top_k: int = 10,
                 metric: str = "jaccard", *,
-                backend: str | None = None) -> list[tuple[str, float]]:
+                backend: str | None = None,
+                mesh=None) -> list[tuple[str, float]]:
         """Top-k terms most similar to ``term``: one fused score+select
         kernel dispatch over a device-resident candidate slab (kernel
         backends) or a bound-pruned vectorized sweep (CPU) -- see
@@ -221,7 +239,11 @@ class InvertedIndex:
         count); ``metric`` is "jaccard" (|A∩B| / |A∪B|), "cosine"
         (|A∩B| / sqrt(|A||B|)) or "containment" (|A∩B| / |A|, the query
         side); ``backend`` forces the kernel ("pallas"/"ref") or host
-        (CPU default) path -- results are bit-identical either way.
+        (CPU default) path -- results are bit-identical either way;
+        ``mesh`` a 1-D ``("wide",)`` mesh to run the sharded per-shard-
+        slab path (requires an arena-backed index; a 1-device mesh
+        degrades to the single-device engine) -- results stay
+        bit-identical, including tie order.
 
         Returns [(term, score)] best-first; score ties order by index
         insertion order.  Complexity: one dispatch per query; host path
@@ -230,7 +252,7 @@ class InvertedIndex:
         from repro.core.pairwise import METRICS
         if metric not in METRICS:
             raise ValueError(metric)
-        terms, eng = self._sim_engine()
+        terms, eng = self._sim_engine(mesh=mesh)
         if term in self.postings:
             query = terms.index(term)
         else:

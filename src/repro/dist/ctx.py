@@ -208,3 +208,31 @@ def install_wide_mesh(n: int | None = None):
     mesh = make_wide_mesh(n)
     set_wide_mesh(mesh)
     return mesh
+
+
+def resolve_wide(mesh):
+    """Resolve a wide-aggregation mesh request to ``(mesh, size, axis)``.
+
+    ``mesh=None`` falls back to the installed :func:`wide_mesh`; no mesh
+    anywhere resolves to ``(None, 1, None)`` -- the single-device
+    identity every sharded code path (``core.aggregate``,
+    ``core.pairwise.SimilarityEngine``, ``serve.QueryServer``) degrades
+    to.  A resolved mesh must be 1-D (one shard axis): the wide paths
+    round-robin rows over a single axis, and a silent flatten of a 2-D
+    mesh would scramble the shard <-> device mapping the arena's
+    per-shard slabs key on."""
+    if mesh is None:
+        mesh = wide_mesh()
+    if mesh is None:
+        return None, 1, None
+    names = getattr(mesh, "axis_names", None)
+    if names is None:
+        # opaque mesh-shaped stand-in (tests install sentinels): pass it
+        # through untouched, size-1 -- callers that only need the mesh
+        # identity keep working, sharded paths degrade to single-device
+        return mesh, 1, None
+    if len(names) != 1:
+        raise ValueError(
+            f"wide sharding needs a 1-D mesh; got axes {names!r}")
+    import numpy as np
+    return mesh, int(np.prod(mesh.devices.shape)), names[0]

@@ -173,6 +173,45 @@ _ref_similarity_topk = jax.jit(ref.similarity_topk,
                                static_argnames=("metric", "k"))
 
 
+def similarity_topk_ids(rows, row_col, starts, q_words, q_card, cards,
+                        gidx, *, metric: str, k: int, jmax: int, n_valid,
+                        exclude=-1, backend: Backend | None = None):
+    """Per-shard fused similarity top-k over a candidate SUBSET labelled
+    with global ids (one shard of the sharded ``SimilarityEngine`` path,
+    or any pruned candidate list): slots >= ``n_valid`` are padding,
+    ``exclude`` is a GLOBAL candidate id, and score ties resolve to the
+    lowest GLOBAL index -- see kernels/topk_ops.py for the pinned
+    shard-merge tie rule."""
+    exclude = jnp.asarray(exclude, jnp.int32)
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    if _use_pallas(backend):
+        return _topk_ops.similarity_topk_ids(
+            rows, row_col, starts, q_words, q_card, cards, gidx, n_valid,
+            exclude, metric=metric, k=k, jmax=jmax)
+    return _ref_similarity_topk_ids(
+        rows, row_col, starts, q_words, jnp.asarray(q_card, jnp.int32),
+        cards, gidx, n_valid, exclude, metric=metric, k=k)
+
+
+_ref_similarity_topk_ids = jax.jit(ref.similarity_topk_ids,
+                                   static_argnames=("metric", "k"))
+
+
+def topk_merge(score, inter, gidx, k: int, *,
+               backend: Backend | None = None):
+    """Merge all-gathered per-shard k-lists to the global top-k on
+    device: one ids-select pass over the (S*k,) entries, ties to the
+    lowest GLOBAL candidate index (bit-identical to selecting over the
+    unsharded score vector)."""
+    if _use_pallas(backend):
+        return _topk_ops.topk_merge(score, inter, gidx, k)
+    return _ref_topk_select_ids(score, inter, gidx, k)
+
+
+_ref_topk_select_ids = jax.jit(ref.topk_select_ids,
+                               static_argnames=("k",))
+
+
 _ref_segment_reduce = jax.jit(
     ref.segment_reduce, static_argnames=("op", "jmax"))
 

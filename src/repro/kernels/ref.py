@@ -286,6 +286,71 @@ def similarity_topk(rows: jax.Array, row_col: jax.Array, starts: jax.Array,
     return topk_select(score, inter, k)
 
 
+def topk_select_ids(score: jax.Array, inter: jax.Array, gidx: jax.Array,
+                    k: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Top-k selection over *labelled* scores: k rounds of (max score,
+    LOWEST global id among the maxes), the selected id's entries masked
+    to -2.0.
+
+    This is the shard-merge tie rule pinned by the sharded similarity
+    path: every entry carries its GLOBAL candidate index ``gidx``, and a
+    tie group cut at the k boundary resolves to ascending global index --
+    even when the tied entries arrived from different shards.  Applied
+    per shard (over local candidates labelled with global ids) and again
+    over the all-gathered S*k lists, it reproduces the single-device
+    ``topk_select`` order exactly, because both implement the same total
+    order (score descending, global index ascending).
+
+    Returns (gidx (k,) int32, score (k,) float32, inter (k,) int32).
+    ``gidx`` values may repeat only for padding entries (score < -1);
+    duplicates of one id are masked together in a single round."""
+    big = jnp.int32(2**31 - 1)
+    ids, scores, inters = [], [], []
+    for _ in range(k):
+        m = jnp.max(score)
+        g = jnp.min(jnp.where(score == m, gidx, big))
+        hit = (gidx == g) & (score == m)
+        ids.append(g.astype(jnp.int32))
+        scores.append(m)
+        inters.append(jnp.max(jnp.where(hit, inter, 0)).astype(jnp.int32))
+        score = jnp.where(hit, jnp.float32(-2.0), score)
+    return jnp.stack(ids), jnp.stack(scores), jnp.stack(inters)
+
+
+def similarity_topk_ids(rows: jax.Array, row_col: jax.Array,
+                        starts: jax.Array, q_words: jax.Array,
+                        q_card: jax.Array, cards: jax.Array,
+                        gidx: jax.Array, n_valid: jax.Array,
+                        exclude: jax.Array, *, metric: str, k: int
+                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-shard fused score + select: :func:`similarity_topk` over a
+    candidate SUBSET labelled with global ids (one shard of a sharded
+    similarity dispatch, or any pruned candidate list).
+
+    Differences from the dense oracle: ``gidx`` (T,) int32 carries each
+    local slot's GLOBAL candidate index (selection and exclusion key on
+    it); ``n_valid`` is a runtime scalar -- slots >= n_valid are layout
+    padding and score -2.0 no matter what their padded rows/cards say
+    (an all-zero pad row under the cosine/zero-denominator convention
+    would otherwise score 1.0 and corrupt the local top-k); ``exclude``
+    is a GLOBAL candidate id (scored -1.0 on its owning shard; -1 none).
+
+    Returns (gidx (k,) int32, score (k,) float32, inter (k,) int32),
+    best-first, score ties to the lowest GLOBAL index
+    (:func:`topk_select_ids`)."""
+    rows = rows.astype(jnp.uint32)
+    t = starts.shape[0] - 1
+    per_row = popcount_words(rows & q_words[row_col])
+    seg_id = jnp.searchsorted(starts[1:], jnp.arange(per_row.shape[0]),
+                              side="right")
+    inter = jax.ops.segment_sum(per_row, seg_id, num_segments=t) \
+        .astype(jnp.int32)
+    score = similarity_scores(inter, q_card, cards, metric)
+    score = jnp.where(gidx == exclude, jnp.float32(-1.0), score)
+    score = jnp.where(jnp.arange(t) >= n_valid, jnp.float32(-2.0), score)
+    return topk_select_ids(score, inter, gidx, k)
+
+
 def merge_sorted(a_vals: jax.Array, a_card: jax.Array,
                  b_vals: jax.Array, b_card: jax.Array,
                  cap: int = 2 * ARRAY_CAP) -> tuple[jax.Array, jax.Array]:

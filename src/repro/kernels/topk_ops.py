@@ -120,6 +120,13 @@ def similarity_topk(rows: jax.Array, row_col: jax.Array, starts: jax.Array,
 
     Returns (idx (k,) int32, score (k,) float32, inter (k,) int32),
     best-first, ties to the lowest index.  One dispatch end-to-end.
+
+    Tie order is a PINNED contract: equal scores cut at the k boundary
+    resolve to the lowest candidate index, and on the sharded path
+    (``similarity_topk_ids`` per shard + ``topk_merge`` over the
+    all-gathered k-lists) to the lowest GLOBAL candidate index -- so a
+    tie group straddling two shards merges in exactly the order this
+    single-device kernel (and the stable host argsort) would emit.
     """
     assert metric in METRICS, metric
     assert k >= 1 and jmax >= 1
@@ -169,4 +176,151 @@ def similarity_topk(rows: jax.Array, row_col: jax.Array, starts: jax.Array,
                    jax.ShapeDtypeStruct((1, k), jnp.int32)],
         interpret=interpret,
     )(score.reshape(1, t), inter.reshape(1, t))
+    return idx[0], sco[0], intr[0]
+
+
+# ---------------------------------------------------------------------------
+# sharded variants: one shard scores a candidate SUBSET labelled with
+# global ids, local k-lists all-gather, and a final ids-select merges.
+# Selection keys on (score desc, GLOBAL index asc) at every stage, so the
+# merged result is bit-identical to the single-device kernel above --
+# including tie groups that straddle shards (docs/ARCHITECTURE.md).
+# ---------------------------------------------------------------------------
+
+def _score_ids_kernel(starts_ref, col_ref, cards_ref, gidx_ref, misc_ref,
+                      row_ref, q_ref, score_ref, inter_ref, acc_ref, *,
+                      metric, jmax):
+    t = pl.program_id(0)
+    j = pl.program_id(1)
+    seg_len = starts_ref[t + 1] - starts_ref[t]
+    x = jnp.where(j < seg_len, row_ref[...] & q_ref[...], jnp.uint32(0))
+    pc = harley_seal_reduce(x.reshape(1, WORDS // 16, 16))[:, None]
+
+    @pl.when(j == 0)
+    def _():
+        acc_ref[...] = pc
+
+    @pl.when(j > 0)
+    def _():
+        acc_ref[...] = acc_ref[...] + pc
+
+    @pl.when(j == jmax - 1)
+    def _():
+        inter = acc_ref[0, 0]
+        s = similarity_scores(inter, misc_ref[0], cards_ref[t], metric)
+        # exclusion keys on the GLOBAL id; pad slots (>= n_valid) are
+        # forced to -2.0 LAST -- an all-zero pad row would otherwise
+        # score 1.0 under the zero-denominator convention
+        s = jnp.where(gidx_ref[t] == misc_ref[1], jnp.float32(-1.0), s)
+        s = jnp.where(t >= misc_ref[2], jnp.float32(-2.0), s)
+        score_ref[...] = s.reshape(1, 1)
+        inter_ref[...] = inter.reshape(1, 1)
+
+
+def _select_ids_kernel(score_ref, inter_ref, gidx_ref, idx_ref, sco_ref,
+                       int_ref, *, k):
+    """k rounds of (max, lowest GLOBAL id among the maxes): the pinned
+    shard-merge tie rule.  Entries of the winning id mask together, so
+    identical padding entries cannot occupy more than one round."""
+    s = score_ref[...]                           # (1, T)
+    g = gidx_ref[...]
+    big = jnp.int32(2**31 - 1)
+    for i in range(k):
+        m = jnp.max(s)
+        w = jnp.min(jnp.where(s == m, g, big))
+        hit = (g == w) & (s == m)
+        idx_ref[0, i] = w
+        sco_ref[0, i] = m
+        int_ref[0, i] = jnp.max(jnp.where(hit, inter_ref[...], 0))
+        s = jnp.where(hit, jnp.float32(-2.0), s)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("metric", "k", "jmax", "interpret"))
+def similarity_topk_ids(rows: jax.Array, row_col: jax.Array,
+                        starts: jax.Array, q_words: jax.Array,
+                        q_card: jax.Array, cards: jax.Array,
+                        gidx: jax.Array, n_valid: jax.Array,
+                        exclude: jax.Array = -1, *, metric: str, k: int,
+                        jmax: int, interpret: bool | None = None
+                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused score + k-select over ONE SHARD of a sharded candidate set.
+
+    Layout matches :func:`similarity_topk` with three additions carried
+    by ``kernels.ref.similarity_topk_ids`` (the oracle): ``gidx`` (T,)
+    int32 global candidate ids (selection/exclusion key on them),
+    ``n_valid`` runtime scalar valid-slot count (pad slots score -2.0),
+    ``exclude`` a GLOBAL id (-1: none).  Returns (gidx (k,) int32,
+    score (k,) float32, inter (k,) int32), ties to the lowest GLOBAL
+    index -- the pinned shard-merge tie rule."""
+    assert metric in METRICS, metric
+    assert k >= 1 and jmax >= 1
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n = rows.shape[0]
+    t = starts.shape[0] - 1
+    starts = starts.astype(jnp.int32)
+    misc = jnp.stack([jnp.asarray(q_card, jnp.int32),
+                      jnp.asarray(exclude, jnp.int32),
+                      jnp.asarray(n_valid, jnp.int32)])
+
+    def row_index(ti, j, st, col, cd, gi, ms):
+        return (jnp.minimum(st[ti] + j, n - 1), 0)
+
+    def q_index(ti, j, st, col, cd, gi, ms):
+        return (col[jnp.minimum(st[ti] + j, n - 1)], 0)
+
+    score, inter = pl.pallas_call(
+        functools.partial(_score_ids_kernel, metric=metric, jmax=jmax),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,
+            grid=(t, jmax),
+            in_specs=[pl.BlockSpec((1, WORDS), row_index),
+                      pl.BlockSpec((1, WORDS), q_index)],
+            out_specs=[
+                pl.BlockSpec((1, 1),
+                             lambda ti, j, st, col, cd, gi, ms: (ti, 0)),
+                pl.BlockSpec((1, 1),
+                             lambda ti, j, st, col, cd, gi, ms: (ti, 0)),
+            ],
+            scratch_shapes=[pltpu.VMEM((1, 1), jnp.int32)],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((t, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((t, 1), jnp.int32)],
+        interpret=interpret,
+    )(starts, row_col.astype(jnp.int32), cards.astype(jnp.int32),
+      gidx.astype(jnp.int32), misc,
+      rows.astype(jnp.uint32), q_words.astype(jnp.uint32))
+    return topk_merge(score.reshape(-1), inter.reshape(-1), gidx, k,
+                      interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def topk_merge(score: jax.Array, inter: jax.Array, gidx: jax.Array,
+               k: int, *, interpret: bool | None = None
+               ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Global top-k merge of labelled k-lists: one select pass over the
+    all-gathered (S*k,) score/inter/gidx entries (k log k work, trivial
+    next to scoring).  Ties to the lowest GLOBAL index -- bit-identical
+    to selecting over the unsharded score vector."""
+    assert k >= 1
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m = score.shape[0]
+    idx, sco, intr = pl.pallas_call(
+        functools.partial(_select_ids_kernel, k=k),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((1, m), lambda i: (0, 0)),
+                  pl.BlockSpec((1, m), lambda i: (0, 0)),
+                  pl.BlockSpec((1, m), lambda i: (0, 0))],
+        out_specs=[pl.BlockSpec((1, k), lambda i: (0, 0)),
+                   pl.BlockSpec((1, k), lambda i: (0, 0)),
+                   pl.BlockSpec((1, k), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((1, k), jnp.int32),
+                   jax.ShapeDtypeStruct((1, k), jnp.float32),
+                   jax.ShapeDtypeStruct((1, k), jnp.int32)],
+        interpret=interpret,
+    )(score.reshape(1, m).astype(jnp.float32),
+      inter.reshape(1, m).astype(jnp.int32),
+      gidx.reshape(1, m).astype(jnp.int32))
     return idx[0], sco[0], intr[0]

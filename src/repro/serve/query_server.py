@@ -157,15 +157,21 @@ class QueryServer:
     one) -- postings stay device-resident across ticks and the
     ``slab_mismatch`` recovery rung revalidates generations (repatching
     only edited rows) instead of dropping the cached slab
-    (docs/ARCHITECTURE.md section 6, docs/MEMORY.md)."""
+    (docs/ARCHITECTURE.md section 6, docs/MEMORY.md); ``mesh`` a 1-D
+    ``("wide",)`` mesh -- similarity tickets then coalesce against the
+    SHARDED engine (per-shard arena slabs, k-list all-gather, device
+    merge), with the same recovery ladder: ``slab_mismatch``
+    revalidates per shard through the arena, and the terminal host
+    fallback stays the unsharded host sweep."""
 
     def __init__(self, index, *, backend: str | None = None,
                  max_queue: int = 4096, max_batch: int = 1024,
                  max_batch_bytes: int = 256 << 20, max_retries: int = 2,
                  backoff_s: float = 0.005, clock=None, faults=None,
-                 arena=None):
+                 arena=None, mesh=None):
         self.index = index
         self.backend = backend
+        self.mesh = mesh
         self.arena = arena if arena is not None \
             else getattr(index, "arena", None)
         self.max_queue = int(max_queue)
@@ -343,7 +349,7 @@ class QueryServer:
             for t, bm in zip(booleans, out):
                 t._value = bm
         if sims:
-            terms, eng = self.index._sim_engine()
+            terms, eng = self.index._sim_engine(mesh=self.mesh)
             by_class: dict[tuple, list[Ticket]] = {}
             for t in sims:
                 by_class.setdefault((t.query.k, t.query.metric),
