@@ -877,3 +877,87 @@ def similar_sharded(rows, quick: bool = False) -> list[dict]:
         del seed_eng, arena, bms
         gc.collect()
     return records
+
+
+# ---------------------------------------------------------------------------
+# wide_ops_arena_sharded suite: warm sharded wide aggregates on per-shard
+# arena slabs (aggregate._shard_reduce_arena) vs per-call host-mirror
+# staging of the SAME container bytes at the SAME mesh -- the PR 10
+# contract (zero container rows over PCIe once warm, per shard).
+# ---------------------------------------------------------------------------
+
+def wide_ops_arena_sharded(rows, quick: bool = False) -> list[dict]:
+    """Warm K-way aggregates over per-shard arena slabs vs the staged
+    sharded path (per-call stack + upload of the same rows the arena
+    holds resident), K=64/1024 dense single-chunk postings at 1/2/4
+    devices.
+
+    ``correct`` is bit-identity between the two paths AND the warm-PCIe
+    check: across the timed re-queries every shard's ``rows_uploaded``
+    counter (the arena's own on 1 device) must not move — the warm path
+    ships only int32 positions and segment offsets.  ``n_devices`` joins
+    the gate key, so 1-device fallback records never gate against true
+    multi-device ones; the quick CI sweep runs under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` to match the
+    committed baseline's d1/d2/d4 records."""
+    import gc
+
+    import jax
+
+    from repro.core.arena import BitmapArena
+    from repro.launch.mesh import make_wide_mesh
+
+    records = []
+    ks = (64,) if quick else (64, 1024)
+    dev_counts = tuple(d for d in (1, 2, 4) if d <= jax.device_count())
+    for k in ks:
+        repeats = 2 if k >= 1024 else (3 if quick else 5)
+        bms = _arena_postings(k)
+        weights = [1 + i % 3 for i in range(k)]
+        t = max(2, k // 4)
+        arena = BitmapArena(capacity=k + 8)
+        arena.adopt_many(bms)
+        for d in dev_counts:
+            mesh = make_wide_mesh(d)
+            benches = [
+                ("or_arena_sharded",
+                 functools.partial(aggregate.or_many, bms, mesh=mesh),
+                 functools.partial(aggregate.or_many, bms, mesh=mesh,
+                                   arena=arena)),
+                ("threshold_arena_sharded",
+                 functools.partial(aggregate.threshold_many, bms, t,
+                                   mesh=mesh),
+                 functools.partial(aggregate.threshold_many, bms, t,
+                                   mesh=mesh, arena=arena)),
+                ("threshold_weighted_arena_sharded",
+                 functools.partial(aggregate.threshold_many, bms,
+                                   sum(weights) // 4, weights=weights,
+                                   mesh=mesh),
+                 functools.partial(aggregate.threshold_many, bms,
+                                   sum(weights) // 4, weights=weights,
+                                   mesh=mesh, arena=arena)),
+            ]
+            for name, seed_fn, new_fn in benches:
+                new_fn()            # build/warm the per-shard slabs
+                if d > 1:
+                    shards = arena.shard_slabs(mesh)
+                    up0 = [s.rows_uploaded for s in shards.stats]
+                else:
+                    up0 = [arena.stats.rows_uploaded,
+                           arena.stats.host_rows_staged]
+                recs = _run_benches(rows, "wide_ops_arena_sharded",
+                                    [(name, seed_fn, new_fn)],
+                                    "dense", k, repeats)
+                if d > 1:
+                    warm_ok = ([s.rows_uploaded
+                                for s in shards.stats] == up0)
+                else:
+                    warm_ok = ([arena.stats.rows_uploaded,
+                                arena.stats.host_rows_staged] == up0)
+                for r in recs:
+                    r["n_devices"] = d
+                    r["correct"] = bool(r["correct"] and warm_ok)
+                records += recs
+        del arena, bms
+        gc.collect()
+    return records

@@ -31,7 +31,7 @@ def main() -> None:
                     help="comma list: table3,...,table14,kernels,"
                          "wide_ops,wide_ops_sharded,pairwise,"
                          "arena_warm,cold_start,query_throughput,"
-                         "similar_sharded")
+                         "similar_sharded,wide_ops_arena_sharded")
     ap.add_argument("--quick", action="store_true",
                     help="gate-sized wide_ops sweeps (subset of full keys)")
     ap.add_argument("--out", default="",
@@ -80,6 +80,9 @@ def main() -> None:
         records += kernels_bench.query_throughput(rows, quick=args.quick)
     if want is None or "similar_sharded" in want:
         records += kernels_bench.similar_sharded(rows, quick=args.quick)
+    if want is None or "wide_ops_arena_sharded" in want:
+        records += kernels_bench.wide_ops_arena_sharded(
+            rows, quick=args.quick)
     if records:
         out = args.out or "BENCH_wide_ops.json"
         with open(out, "w") as f:

@@ -56,6 +56,16 @@ round-robined across the mesh axis and every shard runs the same
     to fold), and a segment occupied by no shard resolves to empty.
 
 A one-device mesh falls back transparently to the single-dispatch path.
+
+With an ``arena`` (core/arena.py), the sharded path never re-stages
+resident rows: each shard gathers them from its LOCAL slab via
+``ShardSlabs.assembled()`` global positions inside one jit
+(``_shard_reduce_arena``, mirroring ``pairwise._topk_sharded``), so warm
+sharded aggregates move only segment ids over the bridge and fold
+partials on device -- zero container rows over PCIe, stat-asserted per
+shard.  Cold rows ride a small replicated staged block whose row 0 is
+reserved zero, making ``assembled[pos] | staged[sidx]`` exact slot
+selection.
 """
 
 from __future__ import annotations
@@ -434,23 +444,26 @@ def _dispatch(seg_keys: list, seg_rows: list[list[np.ndarray]],
             return peeled
     mesh = _resolve_mesh(mesh)
     if mesh is not None and _mesh_size(mesh) > 1:
-        if arena is not None:
-            # the sharded path re-slices rows across devices; resolve
-            # resident ids through the host mirror (same bytes)
-            seg_rows = [[r if isinstance(r, np.ndarray) else
-                         arena.host_row(r) for r in rows]
-                        for rows in seg_rows]
         lens = [len(r) for r in seg_rows]
-        slab64 = np.stack([w for rows in seg_rows for w in rows])
-        slab32 = slab64.view(np.uint32).reshape(slab64.shape[0], WORDS)
         tmax = max(tvec) if tvec is not None else threshold
         planes = None
         if op == "threshold" and seg_weights is not None:
             planes = _planes_for([sum(w) for w in seg_weights], tmax)
         t_arg = threshold if tvec is None else np.asarray(tvec, np.int32)
-        words, cards = _shard_reduce(
-            jnp.asarray(slab32), lens, seg_weights, op, t_arg,
-            backend, mesh, planes=planes, tmax=tmax)
+        if arena is not None:
+            # resident rows gather from each shard's LOCAL slab inside
+            # the jit (ShardSlabs.assembled positions) -- ids over the
+            # bridge, zero container rows over PCIe
+            words, cards = _shard_reduce_arena(
+                arena, seg_rows, lens, seg_weights, op, t_arg,
+                backend, mesh, planes=planes, tmax=tmax)
+        else:
+            slab64 = np.stack([w for rows in seg_rows for w in rows])
+            slab32 = slab64.view(np.uint32).reshape(slab64.shape[0],
+                                                    WORDS)
+            words, cards = _shard_reduce(
+                jnp.asarray(slab32), lens, seg_weights, op, t_arg,
+                backend, mesh, planes=planes, tmax=tmax)
         peeled.update(_repack_segments(seg_keys, words, cards))
         return peeled
     # bucket segments by padded depth: the reduce materializes an
@@ -517,45 +530,59 @@ def _dispatch(seg_keys: list, seg_rows: list[list[np.ndarray]],
                 threshold=t_kw, weights=w_kw,
                 planes=planes, wbits=wbits, backend=backend)
         else:
-            table, ids = _stage_arena_rows(arena, rows_g, n_pad)
-            words, cards = kops.segment_reduce_rows(
-                table, ids, jnp.asarray(starts), op, jmax=jmax,
-                threshold=t_kw, weights=w_kw,
-                planes=planes, wbits=wbits, backend=backend)
+            pos, sidx, staged = _stage_arena_rows(arena, rows_g, n_pad)
+            if staged is None:              # warm: pure resident gather
+                words, cards = kops.segment_reduce_rows(
+                    arena.device_slab(), pos, jnp.asarray(starts), op,
+                    jmax=jmax, threshold=t_kw, weights=w_kw,
+                    planes=planes, wbits=wbits, backend=backend)
+            else:
+                words, cards = kops.segment_reduce_rows_dual(
+                    arena.device_slab(), staged, pos, sidx,
+                    jnp.asarray(starts), op, jmax=jmax, threshold=t_kw,
+                    weights=w_kw, planes=planes, wbits=wbits,
+                    backend=backend)
         peeled.update(_repack_segments(
             [seg_keys[i] for i in idxs], words[:s], cards[:s]))
     return peeled
 
 
 def _stage_arena_rows(arena, rows_g: list[list], n_pad: int):
-    """Turn one depth bucket's row refs into ``segment_reduce_rows``
-    inputs: resident ids index the arena's device slab directly; cold
-    ndarray rows stage into a pow2-padded host block appended after it.
-    Padding ids point at row 0, the arena's reserved all-zero row (the
-    kernel masks padding by segment length anyway).  Warm queries hit
-    the ``host == []`` branch: the only host->device traffic is the id
-    vector itself."""
-    table = arena.device_slab()
-    base = int(table.shape[0])
-    ids: list[int] = []
+    """Turn one depth bucket's row refs into dual-source gather inputs
+    ``(pos, sidx, staged)``: resident ids index the arena's device slab
+    by position, cold ndarray rows stage into a small pow2-padded host
+    block (row 0 reserved zero) indexed by ``sidx``.  Exactly one side of
+    each slot is a real row; the other points at a zero row, so
+    ``table[pos] | staged[sidx]`` is exact slot selection
+    (``kernels.ops.segment_reduce_rows_dual``) and the resident slab is
+    never copied per call.  Padding slots point both indices at the zero
+    rows (the kernel masks padding by segment length anyway).  Warm
+    queries return ``staged=None``: the only host->device traffic is the
+    position vector itself."""
+    pos: list[int] = []
+    sidx: list[int] = []
     host: list[np.ndarray] = []
     for rows in rows_g:
         for r in rows:
             if isinstance(r, np.ndarray):
-                ids.append(base + len(host))
+                pos.append(0)               # arena row 0: reserved zero
+                sidx.append(1 + len(host))
                 host.append(r)
             else:
-                ids.append(int(r))
-    ids.extend([0] * (n_pad - len(ids)))
+                pos.append(int(r))
+                sidx.append(0)              # staged row 0: reserved zero
+    pos.extend([0] * (n_pad - len(pos)))
+    sidx.extend([0] * (n_pad - len(sidx)))
+    staged = None
     if host:
-        h_pad = _pow2(len(host))
+        h_pad = _pow2(1 + len(host))
         hb = np.zeros((h_pad, 1024), np.uint64)
-        hb[: len(host)] = np.stack(host)
-        table = jnp.concatenate(
-            [table, jnp.asarray(hb.view(np.uint32).reshape(h_pad, WORDS))])
+        hb[1: 1 + len(host)] = np.stack(host)
+        staged = jnp.asarray(hb.view(np.uint32).reshape(h_pad, WORDS))
         arena.stats.host_rows_staged += len(host)
     arena.stats.device_gathers += 1
-    return table, jnp.asarray(np.asarray(ids, np.int32))
+    return (jnp.asarray(np.asarray(pos, np.int32)),
+            jnp.asarray(np.asarray(sidx, np.int32)), staged)
 
 
 def _shard_plan(seg_sizes: list[int], d: int, op: str,
@@ -634,6 +661,12 @@ def _shard_reduce(slab: jax.Array, seg_sizes: list[int],
             seg_sizes if seg_weights is None else
             [sum(w) for w in seg_weights],
             tmax if tmax is not None else threshold)
+    if op == "threshold" and not isinstance(threshold, (int, np.integer)) \
+            and s_pad != s:
+        # per-segment T vector must match the padded segment count; the
+        # padded segments are empty, so T=1 keeps their zero counters inert
+        threshold = np.concatenate([np.asarray(threshold, np.int32),
+                                    np.ones(s_pad - s, np.int32)])
     slab_all = jnp.take(slab.astype(jnp.uint32),
                         jnp.asarray(ids_all.reshape(-1)),
                         axis=0).reshape(d, n_pad, WORDS)
@@ -679,6 +712,158 @@ def _shard_reduce(slab: jax.Array, seg_sizes: list[int],
             out_specs=(PartitionSpec(), PartitionSpec()),
             check_rep=False)(slab_all, jnp.asarray(starts_all),
                              jnp.asarray(w_all))
+    return words[:s], cards[:s]
+
+
+_SHARD_JIT: dict = {}       # (mesh, op, backend, d, jmax, planes) -> fn
+
+
+def _sharded_rows_fn(mesh, axis: str, op: str, backend, d: int,
+                     jmax: int, planes: int | None):
+    """One jit'd sharded dispatch per (mesh, op, backend, depth) class --
+    the boolean twin of ``pairwise.SimilarityEngine._sharded_fn``: gather
+    every shard's rows from the assembled per-shard slab (resident
+    positions) OR'd with a small replicated staged block (cold rows),
+    reduce per shard with the segment kernel, and fold the partials with
+    the exact ``_shard_reduce`` exchange rules.  The threshold rides as a
+    traced argument (scalar or per-segment vector), so T-sweeps and
+    coalesced batches reuse one compilation."""
+    key = (mesh, op, backend, d, jmax, planes)
+    fn = _SHARD_JIT.get(key)
+    if fn is not None:
+        return fn
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def body(slab_d, starts_d, w_d, t):
+        slab_l, starts_l, w_l = slab_d[0], starts_d[0], w_d[0]
+        if op == "threshold":
+            local = kops.segment_counters(
+                slab_l, starts_l, jmax=jmax, planes=planes, weights=w_l,
+                backend=backend)
+            allp = jax.lax.all_gather(local, axis)      # (D, S, L, WORDS)
+            tot = allp[0]
+            for i in range(1, d):
+                tot = kref.bitsliced_add(tot, allp[i])
+            words = jnp.asarray(kref.counters_ge(tot, t))
+        elif op == "and":
+            pw, _ = kops.segment_reduce(slab_l, starts_l, op, jmax=jmax,
+                                        backend=backend)
+            occ = (starts_l[1:] - starts_l[:-1]) > 0    # local occupancy
+            pw = jnp.where(occ[:, None], pw, jnp.uint32(0xFFFFFFFF))
+            allw = jax.lax.all_gather(pw, axis)         # (D, S, WORDS)
+            allo = jax.lax.all_gather(occ, axis)        # (D, S)
+            words, any_occ = allw[0], allo[0]
+            for i in range(1, d):
+                words = words & allw[i]
+                any_occ = any_occ | allo[i]
+            words = jnp.where(any_occ[:, None], words, jnp.uint32(0))
+        else:
+            pw, _ = kops.segment_reduce(slab_l, starts_l, op, jmax=jmax,
+                                        backend=backend)
+            allw = jax.lax.all_gather(pw, axis)         # (D, S, WORDS)
+            comb = {"or": jnp.bitwise_or, "xor": jnp.bitwise_xor,
+                    "andnot": jnp.bitwise_and}[op]
+            words = allw[0]
+            for i in range(1, d):
+                words = comb(words, allw[i])
+        return words, kref.popcount_words(words)
+
+    sp = P(axis)
+    sm = shard_map(body, mesh=mesh, in_specs=(sp, sp, sp, P()),
+                   out_specs=(P(), P()), check_rep=False)
+
+    def run(slab, staged, pos, sidx, starts_all, w_all, t):
+        dd, n_pad = pos.shape
+        rows = kref.gather_rows_dual(
+            slab, staged, pos.reshape(-1), sidx.reshape(-1)
+        ).reshape(dd, n_pad, WORDS)
+        return sm(rows, starts_all, w_all, t)
+
+    fn = jax.jit(run)
+    _SHARD_JIT[key] = fn
+    return fn
+
+
+def _shard_reduce_arena(arena, seg_rows: list[list], seg_sizes: list[int],
+                        seg_weights: list[list[int]] | None, op: str,
+                        threshold, backend, mesh,
+                        planes: int | None = None,
+                        tmax: int | None = None):
+    """Sharded segmented reduce over arena row refs, end-to-end through
+    ``ShardSlabs``: resident rows gather from each shard's LOCAL slab via
+    ``ShardSlabs.assembled()`` global positions INSIDE one jit (ids over
+    the bridge, zero container rows over PCIe -- mirroring
+    ``pairwise._topk_sharded``); only cold ndarray rows ride a small
+    replicated staged block (row 0 reserved zero, so ``assembled[pos] |
+    staged[sidx]`` is exact slot selection).  Row routing
+    (``_shard_plan``) and partial folds are identical to
+    ``_shard_reduce``, so results are bit-identical to the single-device
+    plan by construction."""
+    shards = arena.shard_slabs(mesh)
+    d, axis = shards.size, shards.axis
+    s = len(seg_sizes)
+    ids, wts, starts = _shard_plan(seg_sizes, d, op, seg_weights)
+    flat = [r for rows in seg_rows for r in rows]
+    pos_flat = np.zeros(len(flat), np.int64)
+    sidx_flat = np.zeros(len(flat), np.int32)
+    host: list[np.ndarray] = []
+    res_slots: list[int] = []
+    res_ids: list[int] = []
+    for i, r in enumerate(flat):
+        if isinstance(r, np.ndarray):
+            sidx_flat[i] = 1 + len(host)    # staged row 0: reserved zero
+            host.append(r)
+        else:                               # pos 0: global row 0 is zero
+            res_slots.append(i)
+            res_ids.append(int(r))
+    if res_slots:
+        pos_flat[np.asarray(res_slots, np.int64)] = \
+            shards.positions(np.asarray(res_ids, np.int64))
+    h_pad = _pow2(1 + len(host))
+    hb = np.zeros((h_pad, 1024), np.uint64)
+    if host:
+        hb[1: 1 + len(host)] = np.stack(host)
+        arena.stats.host_rows_staged += len(host)
+    n_pad = _pow2(max(max(len(i) for i in ids), 1))
+    s_pad = _pow2(s)
+    pos_all = np.zeros((d, n_pad), np.int32)
+    sidx_all = np.zeros((d, n_pad), np.int32)
+    w_all = np.ones((d, n_pad), np.int32)
+    starts_all = np.zeros((d, s_pad + 1), np.int32)
+    jmax = 1
+    for dev in range(d):
+        k = len(ids[dev])
+        sel = np.asarray(ids[dev], np.int64)
+        pos_all[dev, :k] = pos_flat[sel]
+        sidx_all[dev, :k] = sidx_flat[sel]
+        w_all[dev, :k] = wts[dev]
+        st = np.asarray(starts[dev], np.int32)
+        starts_all[dev, :s + 1] = st
+        starts_all[dev, s + 1:] = st[-1]
+        jmax = max(jmax, int(np.diff(st).max(initial=1)))
+    jmax = _pow2(jmax)
+    if op == "threshold" and planes is None:
+        planes = _planes_for(
+            seg_sizes if seg_weights is None else
+            [sum(w) for w in seg_weights],
+            tmax if tmax is not None else threshold)
+    if isinstance(threshold, (int, np.integer)):
+        t_dev = np.int32(threshold)
+    else:
+        t_dev = np.asarray(threshold, np.int32)
+        if s_pad != s:      # padded segments are empty: T=1 stays inert
+            t_dev = np.concatenate(
+                [t_dev, np.ones(s_pad - s, np.int32)])
+    for st_ in shards.stats:
+        st_.device_gathers += 1
+    fn = _sharded_rows_fn(mesh, axis, op, backend, d, jmax, planes)
+    staged = jnp.asarray(hb.view(np.uint32).reshape(h_pad, WORDS))
+    with mesh:
+        words, cards = fn(shards.assembled(), staged,
+                          jnp.asarray(pos_all), jnp.asarray(sidx_all),
+                          jnp.asarray(starts_all), jnp.asarray(w_all),
+                          jnp.asarray(t_dev))
     return words[:s], cards[:s]
 
 

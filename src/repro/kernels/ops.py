@@ -266,6 +266,35 @@ def segment_reduce_rows(table, ids, starts, op: str, *, jmax: int,
                                     threshold=t, weights=weights)
 
 
+_ref_segment_reduce_rows_dual = jax.jit(
+    ref.segment_reduce_rows_dual, static_argnames=("op", "jmax"))
+
+
+def segment_reduce_rows_dual(table, staged, pos, sidx, starts, op: str, *,
+                             jmax: int, threshold: int = 0, weights=None,
+                             planes: int | None = None, wbits: int = 1,
+                             backend: Backend | None = None):
+    """Dual-source resident-slab reduce: slot ``i`` gathers
+    ``table[pos[i]] | staged[sidx[i]]`` on-device (exactly one side real,
+    the other the reserved zero row) and reduces like
+    :func:`segment_reduce`.  ``table`` is the arena's resident slab --
+    single-device or the sharded assembled per-shard layout -- and is
+    never copied per call; only the small ``staged`` block of cold rows
+    crosses PCIe.  See kernels/segment_ops.py."""
+    t = jnp.asarray(threshold, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    sidx = jnp.asarray(sidx, jnp.int32)
+    if weights is not None:
+        weights = jnp.asarray(weights, jnp.int32)
+    if _use_pallas(backend):
+        return _segment_ops.segment_reduce_rows_dual(
+            table, staged, pos, sidx, starts, op, jmax=jmax, threshold=t,
+            weights=weights, planes=planes, wbits=wbits)
+    return _ref_segment_reduce_rows_dual(table, staged, pos, sidx, starts,
+                                         op, jmax=jmax, threshold=t,
+                                         weights=weights)
+
+
 def segment_counters(slab, starts, *, jmax: int, planes: int, weights=None,
                      backend: Backend | None = None):
     """Per-segment bit-sliced occurrence counters (S, planes, WORDS) --

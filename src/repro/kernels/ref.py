@@ -490,6 +490,41 @@ def segment_reduce_rows(table: jax.Array, ids: jax.Array, starts: jax.Array,
                           threshold=threshold, weights=weights)
 
 
+def gather_rows_dual(table: jax.Array, staged: jax.Array,
+                     pos: jax.Array, sidx: jax.Array) -> jax.Array:
+    """Two-source row gather: slot ``i`` reads ``table[pos[i]] |
+    staged[sidx[i]]``.  Exactly one side of every slot points at a real
+    row; the other points at a reserved all-zero row (``table`` row /
+    position 0 is the arena's zero row, ``staged`` row 0 is the block's),
+    so the OR is exact slot selection -- zero is the OR identity, never a
+    blend.  ``table`` may be a sharded assembled per-shard slab
+    (``core.arena.ShardSlabs.assembled``): under jit the take lowers to a
+    cross-device gather, so resident rows never touch the host."""
+    return (jnp.take(table.astype(jnp.uint32), pos.astype(jnp.int32),
+                     axis=0)
+            | jnp.take(staged.astype(jnp.uint32), sidx.astype(jnp.int32),
+                       axis=0))
+
+
+def segment_reduce_rows_dual(table: jax.Array, staged: jax.Array,
+                             pos: jax.Array, sidx: jax.Array,
+                             starts: jax.Array, op: str, *, jmax: int,
+                             threshold: int = 0,
+                             weights: jax.Array | None = None
+                             ) -> tuple[jax.Array, jax.Array]:
+    """Row-table twin of :func:`segment_reduce_rows` for the arena's
+    dual-source layout: resident rows gather from ``table`` by slab
+    position (single-device slab, or the sharded assembled layout --
+    global position ``(r % S) * cap_s + r // S``), cold rows from a small
+    per-call ``staged`` block, via :func:`gather_rows_dual`.  Unlike
+    ``segment_reduce_rows`` with an appended host block, the resident
+    table is never copied per call.  Pad slots point both indices at the
+    zero rows."""
+    slab = gather_rows_dual(table, staged, pos, sidx)
+    return segment_reduce(slab, starts, op, jmax=jmax,
+                          threshold=threshold, weights=weights)
+
+
 # ---------------------------------------------------------------------------
 # bit-sliced occurrence counters (the exchange payload of the sharded
 # threshold path: each shard counts locally, counters are all-gathered and

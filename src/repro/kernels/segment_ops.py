@@ -273,3 +273,35 @@ def segment_reduce_rows(table: jax.Array, ids: jax.Array, starts: jax.Array,
     return segment_reduce(slab, starts, op, jmax=jmax, threshold=threshold,
                           weights=weights, planes=planes, wbits=wbits,
                           interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("op", "jmax", "planes", "wbits",
+                                    "interpret"))
+def segment_reduce_rows_dual(table: jax.Array, staged: jax.Array,
+                             pos: jax.Array, sidx: jax.Array,
+                             starts: jax.Array, op: str, *, jmax: int,
+                             threshold=0,
+                             weights: jax.Array | None = None,
+                             planes: int | None = None, wbits: int = 1,
+                             interpret: bool | None = None
+                             ) -> tuple[jax.Array, jax.Array]:
+    """Dual-source row-table entry point: each slot gathers
+    ``table[pos] | staged[sidx]`` on-device (exactly one side of every
+    slot is a real row, the other the reserved all-zero row -- OR is
+    exact slot selection), then reduces with the Pallas segment kernel.
+
+    ``table`` is a resident arena slab -- the single-device ``(cap,
+    WORDS)`` layout or the sharded assembled per-shard layout
+    (``core.arena.ShardSlabs.assembled``, global position
+    ``(r % S) * cap_s + r // S``) -- and is NEVER copied per call;
+    ``staged`` is the small per-call block of cold host rows (row 0
+    zero).  Warm queries ship only ``pos``/``sidx``/``starts`` over
+    PCIe."""
+    slab = (jnp.take(table.astype(jnp.uint32), pos.astype(jnp.int32),
+                     axis=0)
+            | jnp.take(staged.astype(jnp.uint32), sidx.astype(jnp.int32),
+                       axis=0))
+    return segment_reduce(slab, starts, op, jmax=jmax, threshold=threshold,
+                          weights=weights, planes=planes, wbits=wbits,
+                          interpret=interpret)

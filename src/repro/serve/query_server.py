@@ -160,9 +160,13 @@ class QueryServer:
     (docs/ARCHITECTURE.md section 6, docs/MEMORY.md); ``mesh`` a 1-D
     ``("wide",)`` mesh -- similarity tickets then coalesce against the
     SHARDED engine (per-shard arena slabs, k-list all-gather, device
-    merge), with the same recovery ladder: ``slab_mismatch``
-    revalidates per shard through the arena, and the terminal host
-    fallback stays the unsharded host sweep."""
+    merge) and coalesced BOOLEAN plans dispatch against the shard-local
+    arena slabs too (``aggregate._shard_reduce_arena``: resident rows
+    gather from each shard's slab inside one jit, partials fold on
+    device), with the same recovery ladder: ``slab_mismatch``
+    revalidates per shard through the arena (only shards owning dirty
+    rows repatch), and the terminal host fallback stays the unsharded,
+    jax-free host sweep."""
 
     def __init__(self, index, *, backend: str | None = None,
                  max_queue: int = 4096, max_batch: int = 1024,
@@ -344,8 +348,15 @@ class QueryServer:
         booleans = [t for t in tickets if t.query.kind in BOOLEAN_KINDS]
         sims = [t for t in tickets if t.query.kind == "similar"]
         if booleans:
+            # with a multi-device mesh + arena, coalesced boolean plans
+            # dispatch against the shard-local arena slabs
+            # (aggregate._shard_reduce_arena); the recovery ladder is
+            # unchanged -- slab_mismatch revalidates through the arena,
+            # which repatches only the shards owning dirty rows, and the
+            # terminal host fallback (_host_batch) stays jax-free
             out = aggregate.execute_plans([t._plan for t in booleans],
-                                          backend=self.backend)
+                                          backend=self.backend,
+                                          mesh=self.mesh)
             for t, bm in zip(booleans, out):
                 t._value = bm
         if sims:

@@ -1,0 +1,158 @@
+"""Warm-path regression tests for sharded wide aggregates on arena slabs.
+
+The tentpole claim is an accounting one: once every operand row is
+resident in its shard's slab, repeated sharded ``or/and/xor/andnot/
+threshold_many`` move ZERO container rows over PCIe -- the host only
+ships segment ids and positions, and each shard gathers its rows from
+its own device-local slab inside the jit.  These tests pin that claim
+with per-shard ``ArenaStats``:
+
+  * warm repeats of every wide op keep each shard's ``rows_uploaded``
+    and the arena's ``host_rows_staged`` exactly flat, while per-shard
+    ``device_gathers`` keeps growing (the work really ran on device);
+  * a single bitmap edit followed by ``adopt`` repatches exactly ONE
+    row on exactly ONE shard -- the incremental CoW scatter stays
+    shard-local instead of rebroadcasting slabs;
+  * cold (never-adopted) operands ride the staged side of the dual-
+    source gather and are counted as ``host_rows_staged``, never as
+    slab uploads.
+
+Multi-device meshes need forced host devices before jax imports, so the
+body runs in subprocesses (mirroring tests/core/test_topk_sharded.py);
+the tests-multidevice CI job runs these too.
+"""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+SRC = str(Path(__file__).resolve().parents[2] / "src")
+
+_SUBPROCESS_BODY = '''
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count={d} "
+    + os.environ.get("XLA_FLAGS", ""))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import jax
+from jax.experimental import mesh_utils
+from jax.sharding import Mesh
+
+from repro.core import RoaringBitmap
+from repro.core import aggregate as agg
+from repro.core.arena import BitmapArena
+
+assert jax.device_count() == {d}, jax.device_count()
+mesh = Mesh(mesh_utils.create_device_mesh(({d},)), ("wide",))
+
+rng = np.random.default_rng(0xA11)
+
+
+def rand_bm(n, hi=1 << 18):
+    return RoaringBitmap.from_values(
+        rng.choice(hi, size=n, replace=False).astype(np.int64))
+
+
+bms = [rand_bm(int(rng.integers(1000, 60000))) for _ in range(11)]
+w = [int(x) for x in rng.integers(1, 8, 11)]
+arena = BitmapArena()
+arena.adopt_many(bms)
+
+OPS = [("or",), ("and",), ("xor",), ("andnot",),
+       ("threshold", 4, None), ("threshold", 13, w)]
+
+
+def run_all():
+    out = []
+    for op, *rest in OPS:
+        if op == "andnot":
+            out.append(agg.andnot_many(bms[0], bms[1:], mesh=mesh,
+                                       arena=arena))
+        elif op == "threshold":
+            t, ww = rest
+            out.append(agg.threshold_many(bms, t, weights=ww, mesh=mesh,
+                                          arena=arena))
+        else:
+            out.append(getattr(agg, op + "_many")(bms, mesh=mesh,
+                                                  arena=arena))
+    return out
+
+
+# --- 1. warm repeats: zero PCIe rows, per shard -------------------------
+first = run_all()                      # builds slabs, uploads everything
+shards = arena.shard_slabs(mesh)
+up0 = [s.rows_uploaded for s in shards.stats]
+rp0 = [s.rows_patched for s in shards.stats]
+g0 = [s.device_gathers for s in shards.stats]
+staged0 = arena.stats.host_rows_staged
+assert sum(up0) > 0                    # the cold start really uploaded
+
+for _ in range(2):
+    again = run_all()
+    assert [s.rows_uploaded for s in shards.stats] == up0, \\
+        "warm sharded aggregate uploaded rows"
+    assert [s.rows_patched for s in shards.stats] == rp0, \\
+        "warm sharded aggregate repatched rows"
+    assert arena.stats.host_rows_staged == staged0, \\
+        "warm sharded aggregate staged host rows"
+    assert all(r == f for r, f in zip(again, first))
+g1 = [s.device_gathers for s in shards.stats]
+assert all(b > a for a, b in zip(g0, g1)), (g0, g1)
+# the single-device slab never entered the picture
+assert arena.stats.rows_uploaded == 0
+print("WARM_OK")
+
+# --- 2. one edit -> exactly one shard repatches one row -----------------
+bms[3].add(123456)
+arena.adopt(bms[3])
+run_all()
+deltas = [s.rows_patched - rp0[i] for i, s in enumerate(shards.stats)]
+assert sum(deltas) == 1 and max(deltas) == 1, deltas
+# a repatch recrosses PCIe once, on that one shard only (uploads count it)
+updel = [s.rows_uploaded - up0[i] for i, s in enumerate(shards.stats)]
+assert updel == deltas, (updel, deltas)
+up0 = [s.rows_uploaded for s in shards.stats]
+assert agg.or_many(bms, mesh=mesh, arena=arena) == agg.or_many(bms)
+print("REPATCH_OK")
+
+# --- 3. cold operands stage, never upload -------------------------------
+cold = rand_bm(50000)
+up1 = [s.rows_uploaded for s in shards.stats]
+st1 = arena.stats.host_rows_staged
+got = agg.or_many(bms + [cold], mesh=mesh, arena=arena)
+assert got == agg.or_many(bms + [cold])
+assert [s.rows_uploaded for s in shards.stats] == up1, \\
+    "cold operand leaked into a shard slab"
+assert arena.stats.host_rows_staged > st1, \\
+    "cold operand was not accounted as staged"
+print("COLD_OK")
+'''
+
+
+def _run_subprocess(devices: int) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c",
+         _SUBPROCESS_BODY.replace("{d}", str(devices))],
+        capture_output=True, text=True, timeout=600, env=env)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    return proc.stdout
+
+
+@pytest.mark.parametrize("devices", [2, 4])
+def test_warm_sharded_aggregates_zero_pcie_rows(devices):
+    """Repeated sharded wide aggregates keep every shard's
+    ``rows_uploaded``/``rows_patched`` and the arena's
+    ``host_rows_staged`` flat; one edit repatches exactly one shard;
+    cold operands stage instead of uploading."""
+    out = _run_subprocess(devices)
+    assert "WARM_OK" in out
+    assert "REPATCH_OK" in out
+    assert "COLD_OK" in out

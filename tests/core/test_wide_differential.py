@@ -1,0 +1,200 @@
+"""Cross-backend differential harness for the wide aggregates.
+
+Seeded randomized sweeps over container-kind mixes x op x K x mesh size,
+asserting BIT-IDENTITY across three independent executions of the same
+plan:
+
+  * the numpy host twin (``aggregate.execute_plan_host`` -- no jax at
+    all, arena rows resolved through the authoritative host mirror);
+  * the single-device kernel path (``execute_plans`` without a mesh);
+  * the sharded path (``execute_plans(mesh=)``) -- both the arena route
+    (resident rows gathered from per-shard slabs inside one jit,
+    ``_shard_reduce_arena``) and the arena-less staged route
+    (``_shard_reduce``).
+
+The tier-1 process sees exactly one CPU device (tests/conftest.py), so
+mesh sizes 2/4 run in subprocesses launched with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the
+tests-multidevice CI job runs them too); mesh size 1 exercises the
+transparent fallback in-process.  The sweeps deliberately include empty
+segments (chunks held by fewer bitmaps than shards), all-run inputs
+(host sweep only -- the sharded plan must still agree), threshold ties
+(T exactly attainable), and weighted thresholds.
+"""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import RoaringBitmap
+from repro.core import aggregate
+from repro.core.arena import BitmapArena
+
+SRC = str(Path(__file__).resolve().parents[2] / "src")
+
+# the sweep body is shared by the in-process 1-device test and the
+# subprocess multi-device tests: everything below is jax-import-safe
+# only AFTER the device count is forced, hence the string template
+_SWEEP = '''
+import numpy as np
+
+from repro.core import RoaringBitmap
+from repro.core import aggregate
+from repro.core.arena import BitmapArena
+
+CHUNK = 1 << 16
+
+
+def _mixed_bitmap(rng, mix, shared):
+    """One bitmap of the requested container-kind mix.  ``shared`` is a
+    dense block present in EVERY bitmap of the sweep: it pins threshold
+    ties (occurrence count == K exactly) and guarantees AND stays
+    non-empty on the kernel path."""
+    parts = [shared]
+    if mix in ("array", "mixed"):
+        parts.append(rng.integers(0, 4 * CHUNK, 2500, dtype=np.uint32))
+    if mix in ("bitset", "mixed"):
+        base = int(rng.integers(0, 3)) * CHUNK
+        parts.append(base + rng.integers(0, 2 * CHUNK, 45000,
+                                         dtype=np.uint32))
+    if mix in ("run", "mixed"):
+        lo = int(rng.integers(0, 2 * CHUNK))
+        parts.append(np.arange(lo, lo + int(rng.integers(5000, 30000)),
+                               dtype=np.uint32))
+    return RoaringBitmap.from_values(
+        np.unique(np.concatenate(parts)).astype(np.uint32))
+
+
+def _check(plan, expect, name):
+    """One plan, three executions, all bit-identical."""
+    host = aggregate.execute_plan_host(plan)
+    assert host == expect, f"host twin diverged: {name}"
+    got = aggregate.execute_plans([plan], mesh=MESH)[0]
+    assert got == expect, f"sharded diverged: {name}"
+
+
+def sweep(seed, mix, k, arenas=("arena",)):
+    rng = np.random.default_rng(seed)
+    shared = (5 * CHUNK + rng.integers(0, CHUNK, 9000,
+                                       dtype=np.uint32)).astype(np.uint32)
+    bms = [_mixed_bitmap(rng, mix, shared) for _ in range(k)]
+    # empty-segment coverage: one dense chunk held by exactly TWO
+    # bitmaps, so meshes wider than 2 see shards with no rows of it
+    pair = 9 * CHUNK + rng.integers(0, CHUNK, 30000, dtype=np.uint32)
+    bms[0] |= RoaringBitmap.from_values(np.unique(pair))
+    bms[1] |= RoaringBitmap.from_values(np.unique(pair[::2]))
+    arena = BitmapArena()
+    arena.adopt_many(bms[::2])          # half resident, half cold
+    weights = [int(x) for x in rng.integers(1, 8, k)]
+    cases = [("or", 0, None), ("xor", 0, None), ("and", 0, None),
+             ("andnot", 0, None),
+             ("threshold", max(2, k // 2), None),
+             ("threshold", k, None),                  # tie: count == K
+             ("threshold", sum(weights), weights),    # weighted tie
+             ("threshold", sum(weights) // 2, weights)]
+    for op, t, w in cases:
+        args = (bms[0], bms[1:]) if op == "andnot" else (bms,)
+        single = getattr(aggregate, f"{op}_many")(
+            *args, **({"t": t, "weights": w} if op == "threshold" else {}))
+        for ar_name in arenas:
+            ar = arena if ar_name == "arena" else None
+            seq = [bms[0], *bms[1:]] if op == "andnot" else bms
+            plan = aggregate.plan_wide(op, seq, t, w, arena=ar)
+            _check(plan, single, f"{mix} {op} t={t} seed={seed} "
+                                 f"arena={ar is not None}")
+    return bms, arena, weights
+
+
+def extras(bms, arena, weights, k, rng):
+    # all-run inputs: the host interval sweep resolves everything, the
+    # sharded plan must still agree (and the results must be non-empty)
+    runs = []
+    for _ in range(k):
+        lo = int(rng.integers(0, 3 * CHUNK))
+        runs.append(RoaringBitmap.from_values(
+            np.arange(lo, lo + 40000, dtype=np.uint32)))
+    for op in ("or", "and", "xor"):
+        single = getattr(aggregate, f"{op}_many")(runs)
+        assert getattr(aggregate, f"{op}_many")(runs, mesh=MESH) == single
+    assert aggregate.or_many(runs).cardinality > 0
+
+    # coalesced multi-plan batch (non-power-of-two plan count): mixed
+    # ops share per-segment thresholds in one sharded dispatch
+    plans = [aggregate.plan_wide("threshold", bms, t, arena=arena)
+             for t in (2, 3, k)]
+    plans.append(aggregate.plan_wide("or", bms, arena=arena))
+    plans.append(aggregate.plan_wide("threshold", bms, sum(weights) // 2,
+                                     weights, arena=arena))
+    exp = aggregate.execute_plans(plans)
+    got = aggregate.execute_plans(plans, mesh=MESH)
+    hst = [aggregate.execute_plan_host(p) for p in plans]
+    for g, e, h in zip(got, exp, hst):
+        assert g == e == h
+
+
+def run_all():
+    for mix in ("array", "bitset", "run", "mixed"):
+        bms, arena, weights = sweep(11, mix, k=6)
+    extras(bms, arena, weights, 6, np.random.default_rng(99))
+    # K < shards: some shards hold no rows of any segment; the staged
+    # (arena-less) sharded route rides along here -- one small sweep,
+    # its broad coverage lives in test_sharded.py
+    sweep(42, "mixed", k=3, arenas=("arena", "none"))
+'''
+
+_SUBPROCESS_BODY = '''
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count={d} "
+    + os.environ.get("XLA_FLAGS", ""))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+from jax.experimental import mesh_utils
+from jax.sharding import Mesh
+
+assert jax.device_count() == {d}, jax.device_count()
+MESH = Mesh(mesh_utils.create_device_mesh(({d},)), ("wide",))
+''' + _SWEEP + '''
+run_all()
+print("DIFFERENTIAL_OK")
+'''
+
+
+def _run_subprocess(devices: int) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c",
+         _SUBPROCESS_BODY.replace("{d}", str(devices))],
+        capture_output=True, text=True, timeout=600, env=env)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    return proc.stdout
+
+
+@pytest.mark.parametrize("devices", [2, 4])
+def test_differential_sharded(devices):
+    """host twin == single-device kernel == sharded, at 2 and 4 forced
+    host devices, across the full container-kind x op sweep."""
+    assert "DIFFERENTIAL_OK" in _run_subprocess(devices)
+
+
+def test_differential_one_device_mesh():
+    """Mesh size 1 must transparently take the single-dispatch path and
+    still match the host twin (same sweep, in-process)."""
+    import jax
+    from jax.experimental import mesh_utils
+    from jax.sharding import Mesh
+    mesh = Mesh(mesh_utils.create_device_mesh(
+        (1,), devices=jax.devices()[:1]), ("wide",))
+    ns = {"MESH": mesh, "RoaringBitmap": RoaringBitmap,
+          "aggregate": aggregate, "BitmapArena": BitmapArena,
+          "np": np}
+    exec(compile(_SWEEP, "<sweep>", "exec"), ns)   # noqa: S102
+    ns["sweep"](11, "mixed", k=5)
+    ns["sweep"](42, "mixed", k=3, arenas=("arena", "none"))

@@ -1,0 +1,95 @@
+"""The param-sharding RULES on a REAL multi-device mesh.
+
+``tests/dist/test_sharding.py`` pins the rules' *specs* against a
+FakeMesh at production axis sizes; until now nothing lowered a step
+function under an actual >1-device mesh outside the dry-run driver's own
+process.  This suite runs in the ``tests-multidevice`` CI job (4 forced
+host devices): it builds a real ``(2, 2) = ("data", "model")`` mesh and
+drives ``launch.dryrun.lower_cell`` -- the exact production entry point,
+with real ``NamedSharding``s from ``dist.sharding`` -- for one dense and
+one MoE config over the train / prefill / decode shape cells.  The train
+cell additionally COMPILES, so XLA's SPMD partitioner validates every
+param/batch/optimizer spec and the optimized HLO must contain the
+cross-device gradient sync the data axis implies.
+
+Under the tier-1 single-device run these tests skip (the process sees
+one CPU device; forcing more here would perturb every other suite).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs 4 devices (tests-multidevice job forces them)")
+
+
+@pytest.fixture(scope="module")
+def mesh22():
+    from jax.experimental import mesh_utils
+    from jax.sharding import Mesh
+    return Mesh(mesh_utils.create_device_mesh((2, 2)),
+                ("data", "model"))
+
+
+CELLS = ["train_4k", "prefill_32k", "decode_32k"]
+
+
+@pytest.mark.parametrize("arch", ["qwen3_14b", "mixtral_8x7b"])
+@pytest.mark.parametrize("shape", CELLS)
+def test_lower_cell_real_mesh(arch, shape, mesh22):
+    """Every (config, step) cell lowers under the real 4-device mesh:
+    the sharding rules resolve to committed NamedShardings and tracing
+    under ``in_shardings`` validates divisibility of every annotated
+    axis (a bad spec raises here, not on a TPU pod)."""
+    import repro.configs as C
+    from repro.launch import dryrun
+    cfg = C.get_config(arch, reduced=True)
+    ok, why = C.applicable(cfg, shape)
+    assert ok, why
+    res = dryrun.lower_cell(cfg, shape, mesh22, compile_=False)
+    assert res["chips"] == 4
+    assert res["mesh"] == "2x2"
+    assert res["step"] == C.SHAPES[shape].step
+
+
+@pytest.mark.parametrize("arch", ["qwen3_14b", "mixtral_8x7b"])
+def test_compile_train_real_mesh(arch, mesh22):
+    """The train cell compiles end-to-end under the real mesh and the
+    optimized HLO carries cross-device collectives: the data axis forces
+    a gradient all-reduce (or reduce-scatter), proof the rules actually
+    shard rather than replicate-and-hope."""
+    import repro.configs as C
+    from repro.launch import dryrun
+    cfg = C.get_config(arch, reduced=True)
+    res = dryrun.lower_cell(cfg, "train_4k", mesh22, compile_=True)
+    coll = res["collectives"]
+    assert coll["total"] > 0, coll
+    assert coll["all-reduce"] + coll["reduce-scatter"] > 0, coll
+    assert res["memory"]["argument_bytes"] is not None
+
+
+def test_param_shardings_committed_on_device(mesh22):
+    """Materializing params with the rules' shardings really places
+    shards on 4 distinct devices, and each sharded leaf's per-device
+    shard is smaller than the full value (the rules partition, not
+    replicate, the big matrices)."""
+    import repro.configs as C
+    from repro.dist import sharding as SH
+    from repro.models import transformer as T
+    cfg = C.get_config("qwen3_14b", reduced=True)
+    shapes = T.param_shapes(cfg)
+    shard = SH.param_shardings(shapes, mesh22)
+    leaves, treedef = jax.tree.flatten(shapes)
+    shardings = treedef.flatten_up_to(shard)
+    partitioned = 0
+    for leaf, s in zip(leaves, shardings):
+        arr = jax.device_put(np.zeros(leaf.shape, leaf.dtype), s)
+        assert arr.sharding.mesh.devices.shape == (2, 2)
+        shard_elems = arr.addressable_shards[0].data.size
+        if shard_elems < arr.size:
+            partitioned += 1
+            assert len({sh.device for sh in arr.addressable_shards}) == 4
+    assert partitioned > 0

@@ -1,0 +1,133 @@
+"""Fault-path coverage for coalesced SHARDED boolean batches.
+
+``tests/serve/test_faults.py`` walks the recovery ladder on the
+single-device engine; here the server runs with a multi-device mesh and
+an arena-backed index, so coalesced boolean plans dispatch against the
+shard-local arena slabs (``aggregate._shard_reduce_arena``).  A scripted
+``slab_mismatch`` fires mid-batch -- the planned slab has gone stale on
+one shard -- and the ladder must resolve it via per-shard revalidation:
+``arena.revalidate()`` repatches only the shards owning dirty rows, the
+batch replans once, and EVERY ticket still resolves bit-identical to a
+fault-free reference server (or a structured error; never lost).
+
+The terminal jax-free host fallback is exercised too: ``dispatch_raise
+always`` on the sharded server must degrade every boolean ticket to
+``execute_plan_host`` with the same values.
+
+Multi-device meshes need forced host devices before jax imports, so the
+body runs in subprocesses (the tests-multidevice CI job runs them too).
+"""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+SRC = str(Path(__file__).resolve().parents[2] / "src")
+
+_SUBPROCESS_BODY = '''
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count={d} "
+    + os.environ.get("XLA_FLAGS", ""))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import jax
+from jax.experimental import mesh_utils
+from jax.sharding import Mesh
+
+from repro.core.arena import BitmapArena
+from repro.data.index import InvertedIndex
+from repro.serve import OK, FaultInjector, Query, QueryServer
+
+assert jax.device_count() == {d}, jax.device_count()
+mesh = Mesh(mesh_utils.create_device_mesh(({d},)), ("wide",))
+
+VOCAB = ["t%d" % i for i in range(24)]
+rng = np.random.default_rng(0xFA17)
+docs = [[VOCAB[j] for j in
+         rng.choice(len(VOCAB), size=int(rng.integers(3, 9)),
+                    replace=False)]
+        for _ in range(900)]
+warm_ix = InvertedIndex(arena=BitmapArena()).build(docs)
+cold_ix = InvertedIndex().build(docs)
+
+QS = [Query.or_("t1", "t2", "t3"),
+      Query.and_("t1", "t2"),
+      Query.xor_("t4", "t5", "t6"),
+      Query.andnot("t1", "t7", "t8"),
+      Query.threshold(["t1", "t2", "t3", "t4", "t5"], 3),
+      Query.threshold(["t1", "t2", "t3"], 4, weights=[3, 1, 2])]
+
+
+def submit_all(srv):
+    ts = [srv.submit(q) for q in QS]
+    srv.run_until_idle()
+    return ts
+
+
+ref_srv = QueryServer(cold_ix, backend="ref")
+expect = [t.result.value for t in submit_all(ref_srv)]
+assert all(v is not None for v in expect)
+
+# --- 1. slab_mismatch mid-batch -> one replan, bit-identical ------------
+faults = FaultInjector.script({"slab_mismatch": [True]})
+srv = QueryServer(warm_ix, backend="ref", faults=faults, mesh=mesh)
+tickets = submit_all(srv)
+for t, e in zip(tickets, expect):
+    assert t.result.status == OK
+    assert t.result.value == e, t.query.kind
+    assert t.telemetry.replans == 1
+assert srv.stats().replans == 1
+assert srv.stats().host_fallbacks == 0        # resolved on device
+print("MISMATCH_OK")
+
+# --- 2. warm repeat after recovery: still sharded, still identical ------
+shards = warm_ix.arena.shard_slabs(mesh)
+up0 = [s.rows_uploaded for s in shards.stats]
+again = submit_all(srv)
+for t, e in zip(again, expect):
+    assert t.result.status == OK and t.result.value == e
+assert [s.rows_uploaded for s in shards.stats] == up0, \\
+    "post-recovery batch re-uploaded shard rows"
+assert srv.stats().replans == 1               # no new replans
+print("WARM_AFTER_OK")
+
+# --- 3. terminal rung: jax-free host fallback on the sharded server -----
+dead = QueryServer(warm_ix, backend="ref", mesh=mesh,
+                   faults=FaultInjector.script({"dispatch_raise":
+                                                "always"}))
+ts = submit_all(dead)
+for t, e in zip(ts, expect):
+    assert t.result.status == OK and t.result.value == e
+    assert t.telemetry.degraded
+assert dead.stats().host_fallbacks >= 1
+print("HOST_FALLBACK_OK")
+'''
+
+
+def _run_subprocess(devices: int) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c",
+         _SUBPROCESS_BODY.replace("{d}", str(devices))],
+        capture_output=True, text=True, timeout=600, env=env)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    return proc.stdout
+
+
+@pytest.mark.parametrize("devices", [2, 4])
+def test_slab_mismatch_on_sharded_boolean_batch(devices):
+    """A scripted ``slab_mismatch`` during a coalesced sharded boolean
+    batch resolves via per-shard revalidation (one replan, zero host
+    fallbacks), every ticket bit-identical to a fault-free server; the
+    terminal host-fallback rung stays jax-free and identical too."""
+    out = _run_subprocess(devices)
+    assert "MISMATCH_OK" in out
+    assert "WARM_AFTER_OK" in out
+    assert "HOST_FALLBACK_OK" in out
